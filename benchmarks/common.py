@@ -1,0 +1,26 @@
+"""Shared benchmark utilities: timing, CSV emission."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-time (s) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.3f},{derived}")

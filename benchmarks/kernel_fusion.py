@@ -1,0 +1,67 @@
+"""Fusion evidence for the greedy_update hot loop (DESIGN.md §2).
+
+Compares HBM bytes (HLO cost analysis) and CPU wall-time of:
+  (a) fused one-pass update (c, acc, argmax in one sweep over S) — what the
+      Pallas kernel guarantees on TPU and XLA fuses here,
+  (b) an explicitly two-pass version (matvec pass; then norms+argmax pass
+      with S re-read via a second matvec-sized traversal).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+
+
+def _fused(q, S, acc, norms):
+    c = q.conj() @ S
+    acc2 = acc + jnp.abs(c) ** 2
+    res = norms - acc2
+    return c, acc2, jnp.argmax(res)
+
+
+def _two_pass(q, S, acc, norms):
+    c = q.conj() @ S
+    # second pass re-derives the residuals from S (what a non-fused
+    # implementation without Eq.-6.3 bookkeeping pays every iteration)
+    col_sq = jnp.sum(jnp.abs(S) ** 2, axis=0)
+    res = col_sq - (norms - (norms - acc)) - jnp.abs(c) ** 2
+    return c, acc + jnp.abs(c) ** 2, jnp.argmax(res)
+
+
+def _bytes_of(fn, *args):
+    ca = jax.jit(fn).lower(*args).compile().cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return float(ca.get("bytes accessed", 0))
+
+
+def run(csv: bool = True):
+    rng = np.random.default_rng(0)
+    N, M = 2000, 8000
+    S = jnp.asarray(rng.standard_normal((N, M)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal(N), jnp.float32)
+    q = q / jnp.linalg.norm(q)
+    acc = jnp.zeros((M,), jnp.float32)
+    norms = jnp.sum(jnp.abs(S) ** 2, axis=0)
+
+    b_fused = _bytes_of(_fused, q, S, acc, norms)
+    b_two = _bytes_of(_two_pass, q, S, acc, norms)
+    t_fused = time_fn(jax.jit(_fused), q, S, acc, norms)
+    t_two = time_fn(jax.jit(_two_pass), q, S, acc, norms)
+    if csv:
+        emit(
+            "perf_greedy_fusion",
+            t_fused * 1e6,
+            f"bytes_fused={b_fused:.3e};bytes_2pass={b_two:.3e};"
+            f"byte_ratio={b_two/b_fused:.2f};"
+            f"t_fused={t_fused*1e3:.2f}ms;t_2pass={t_two*1e3:.2f}ms",
+        )
+    return b_fused, b_two, t_fused, t_two
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Paper Fig. 6.1(b): orthogonalization time vs iteration index j.
+
+IMGS cost is O(nu_j * j * N): linear growth with the basis size j.  We
+measure T_j^IMGS/N and fit the slope.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core.greedy import imgs_orthogonalize
+
+
+def run(csv: bool = True):
+    results = []
+    for N in (1024, 4096):
+        rng = np.random.default_rng(0)
+        js, ts = [], []
+        fn = jax.jit(lambda v, Q: imgs_orthogonalize(v, Q)[0])
+        for j in (8, 16, 32, 64, 128):
+            Q, _ = np.linalg.qr(rng.standard_normal((N, j)))
+            v = jnp.asarray(rng.standard_normal(N), jnp.float32)
+            Qj = jnp.asarray(Q, jnp.float32)
+            t = time_fn(fn, v, Qj, warmup=2, iters=5)
+            js.append(j)
+            ts.append(t)
+        slope = np.polyfit(js, ts, 1)[0]
+        r = np.corrcoef(js, ts)[0, 1]
+        results.append((N, js, ts, slope, r))
+        if csv:
+            emit(
+                f"fig6.1b_imgs_N{N}",
+                np.mean(ts) * 1e6,
+                f"linear_fit_slope={slope*1e6:.3f}us/basis;corr={r:.4f}",
+            )
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Paper Fig. 6.1(a): pivot-search time vs iteration index j.
+
+The paper's claim: with the Eq. (6.3) running-sum update, the pivot search
+is O(2MN) per iteration, INDEPENDENT of j.  We measure T_j^pivot/N for a
+range of N and check flatness across j.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core.greedy import greedy_init, _jitted_step
+
+
+def run(csv: bool = True):
+    M = 2000
+    results = []
+    for N in (256, 1024, 4096):
+        rng = np.random.default_rng(0)
+        S = jnp.asarray(rng.standard_normal((N, M)), jnp.float32)
+        state = greedy_init(S, 64)
+        times = {}
+        for j in range(48):
+            t = time_fn(lambda: _jitted_step(S, state), warmup=1, iters=3)
+            if j in (4, 16, 32, 44):
+                times[j] = t
+            state = _jitted_step(S, state)
+        scaled = {j: t / N * 1e9 for j, t in times.items()}
+        flatness = max(scaled.values()) / max(min(scaled.values()), 1e-12)
+        results.append((N, scaled, flatness))
+        if csv:
+            emit(
+                f"fig6.1a_pivot_N{N}",
+                np.mean(list(times.values())) * 1e6,
+                f"T_j/N[ns]@j4/16/32/44="
+                + "/".join(f"{scaled[j]:.2f}" for j in (4, 16, 32, 44))
+                + f";flatness={flatness:.2f}",
+            )
+    return results
+
+
+if __name__ == "__main__":
+    run()

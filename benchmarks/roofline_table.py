@@ -1,0 +1,71 @@
+"""Assignment §Roofline: per-(arch x shape x mesh) roofline terms.
+
+Reads the dry-run JSON artifacts and prints the full baseline table as CSV
+(one row per cell): three terms in seconds, dominant bottleneck,
+MODEL_FLOPS / HLO_FLOPs usefulness ratio, bytes/device.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def run(csv: bool = True, art_dir: str = "artifacts/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        rec = json.load(open(path))
+        tag = os.path.basename(path)[:-5]
+        if "skipped" in rec:
+            if csv:
+                emit(f"roofline_{tag}", 0.0, f"SKIP:{rec['skipped'][:40]}")
+            continue
+        if "error" in rec:
+            if csv:
+                emit(f"roofline_{tag}", 0.0, f"ERROR:{rec['error'][:60]}")
+            continue
+        if "roofline" in rec and "roofline" in rec.get("roofline", {}):
+            ro = rec["roofline"]["roofline"]
+            useful = rec["roofline"]["useful_flop_ratio"]
+            mem = rec.get("full", {}).get("memory", {})
+            args_gb = mem.get("argument_size_in_bytes", 0) / 1e9
+            if csv:
+                emit(
+                    f"roofline_{tag}",
+                    ro["bound_s"] * 1e6,
+                    f"compute={ro['compute_s']:.3e};"
+                    f"memory={ro['memory_s']:.3e};"
+                    f"collective={ro['collective_s']:.3e};"
+                    f"dominant={ro['dominant']};useful={useful:.3f};"
+                    f"args_gb_per_dev={args_gb:.2f}",
+                )
+            rows.append((tag, ro, useful))
+        elif "roofline" in rec:  # gw flagship artifact layout
+            ro = rec["roofline"]
+            if csv:
+                emit(
+                    f"roofline_{tag}",
+                    ro["bound_s"] * 1e6,
+                    f"compute={ro['compute_s']:.3e};"
+                    f"memory={ro['memory_s']:.3e};"
+                    f"collective={ro['collective_s']:.3e};"
+                    f"dominant={ro['dominant']};"
+                    f"useful={rec.get('useful_flop_ratio', 0):.3f}",
+                )
+            rows.append((tag, ro, rec.get("useful_flop_ratio")))
+        elif "full" in rec and csv:
+            c = rec["full"]["raw_cost"]
+            emit(
+                f"dryrun_{tag}",
+                0.0,
+                f"compiled_ok=1;flops_raw={c['flops']:.3e};"
+                f"coll_raw={c['collective_bytes']:.3e}",
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

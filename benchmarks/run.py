@@ -1,0 +1,47 @@
+"""Benchmark harness: one entry per paper table/figure + assignment tables.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
+
+  fig6.1a  — pivot-search time vs iteration (constant in j)
+  fig6.1b  — IMGS orthogonalization time vs iteration (linear in j)
+  fig6.2   — strong-scaling efficiency (compiled per-device costs + Eq 6.6)
+  fig6.4   — weak scaling incl. the Blue Waters flagship dry-run cells
+  rem5.4   — FLOP-count model validation
+  perf_*   — greedy_update fusion evidence
+  roofline — the full arch x shape x mesh baseline table (from artifacts)
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from benchmarks import (
+        flops_model,
+        kernel_fusion,
+        ortho_timing,
+        pivot_timing,
+        roofline_table,
+        strong_scaling,
+        weak_scaling,
+    )
+
+    ok = True
+    for mod in (pivot_timing, ortho_timing, flops_model, kernel_fusion,
+                strong_scaling, weak_scaling, roofline_table):
+        try:
+            mod.run(csv=True)
+        except Exception as e:  # keep the harness going; report at the end
+            ok = False
+            print(f"{mod.__name__},0.0,ERROR:{type(e).__name__}:{e}",
+                  file=sys.stdout)
+            traceback.print_exc(file=sys.stderr)
+    if not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Paper Fig. 6.2 / 6.3(a): strong-scaling efficiency of the pivot search.
+
+This container has ONE physical core, so multi-device wall-clock is
+meaningless; scaling is derived the same way the roofline is: per-device
+compiled cost at P in {1, 2, 4, 8} host devices (subprocess with forced
+device count) + the paper's Amdahl model Eq. (6.6):
+
+    E ~ 1 - nu*k*(P-1) / (2M)        [master-orthogonalization serial term]
+
+Our SPMD design replicates orthogonalization (no master), so the measured
+per-device byte/FLOP share should scale ~1/P with only the collective
+overhead added — we report both the paper's model and the compiled-cost
+scaling.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+from benchmarks.common import emit
+
+_SCRIPT = r"""
+import jax, json
+import jax.numpy as jnp
+import numpy as np
+from repro.core.distributed import dist_greedy_init, make_dist_greedy_step
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+P_dev = len(jax.devices())
+N, M = 1000, 240 * P_dev * 0 + 2048  # fixed M (strong scaling)
+mesh = jax.make_mesh((P_dev,), ("cols",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+S = jax.ShapeDtypeStruct((N, M), jnp.complex64,
+                         sharding=NamedSharding(mesh, P(None, ("cols",))))
+st = jax.eval_shape(lambda: dist_greedy_init(
+    jnp.zeros((N, M), jnp.complex64), 32, mesh))
+from repro.core.distributed import state_shardings
+sh = state_shardings(mesh)
+st = jax.tree.map(lambda s, h: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                                    sharding=h), st, sh)
+step = make_dist_greedy_step(mesh)
+compiled = step.lower(S, st).compile()
+ca = compiled.cost_analysis()
+if isinstance(ca, list):
+    ca = ca[0]
+from repro.launch.roofline import collective_bytes
+coll = collective_bytes(compiled.as_text())["total"]
+print("RESULT " + json.dumps({
+    "P": P_dev, "flops": float(ca.get("flops", 0)),
+    "bytes": float(ca.get("bytes accessed", 0)), "coll": float(coll)}))
+"""
+
+
+def run(csv: bool = True):
+    results = []
+    for P in (1, 2, 4, 8):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={P}"
+        env["JAX_PLATFORMS"] = "cpu"
+        env.setdefault("PYTHONPATH", "src")
+        p = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                           capture_output=True, text=True, timeout=600)
+        if p.returncode != 0:
+            raise RuntimeError(p.stderr[-2000:])
+        line = [l for l in p.stdout.splitlines()
+                if l.startswith("RESULT ")][-1]
+        results.append(json.loads(line[len("RESULT "):]))
+
+    base = results[0]
+    rows = []
+    for r in results:
+        P = r["P"]
+        # per-device share of the dominant (memory) term vs perfect 1/P
+        eff_bytes = base["bytes"] / (P * r["bytes"])
+        # paper's Eq. 6.6 with nu=2, k=32, M=2048
+        eff_model = 1 - 2 * 32 * (P - 1) / (2 * 2048)
+        rows.append((P, eff_bytes, eff_model, r["coll"]))
+        if csv:
+            emit(
+                f"fig6.2_strong_P{P}",
+                0.0,
+                f"eff_compiled_bytes={eff_bytes:.3f};"
+                f"eff_eq6.6={eff_model:.3f};coll_bytes={r['coll']:.2e}",
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,93 @@
+"""Paper Fig. 6.3(b) / 6.4: weak scaling — M grows with the device count.
+
+greedycpp's headline: N=10,000, M = 100 * cores, up to 32,768 cores with a
+~flat time per basis.  Weak scaling holds when the per-device compiled cost
+is constant as (P, M) scale together and the collective term grows at most
+logarithmically.  We verify per-device costs at P in {1,2,4,8} (subprocess,
+forced host devices) and report the flagship 256/512-device dry-run numbers
+from artifacts/dryrun (the Blue Waters-shape cell).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import emit
+
+_SCRIPT = r"""
+import jax, json
+import jax.numpy as jnp
+from repro.core.distributed import dist_greedy_init, make_dist_greedy_step, state_shardings
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+P_dev = len(jax.devices())
+N, M = 1000, 512 * P_dev   # M grows with P (weak scaling)
+mesh = jax.make_mesh((P_dev,), ("cols",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+S = jax.ShapeDtypeStruct((N, M), jnp.complex64,
+                         sharding=NamedSharding(mesh, P(None, ("cols",))))
+st = jax.eval_shape(lambda: dist_greedy_init(
+    jnp.zeros((N, M), jnp.complex64), 32, mesh))
+sh = state_shardings(mesh)
+st = jax.tree.map(lambda s, h: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                                    sharding=h), st, sh)
+compiled = make_dist_greedy_step(mesh).lower(S, st).compile()
+ca = compiled.cost_analysis()
+if isinstance(ca, list):
+    ca = ca[0]
+from repro.launch.roofline import collective_bytes
+coll = collective_bytes(compiled.as_text())["total"]
+print("RESULT " + json.dumps({
+    "P": P_dev, "M": M, "flops": float(ca.get("flops", 0)),
+    "bytes": float(ca.get("bytes accessed", 0)), "coll": float(coll)}))
+"""
+
+
+def run(csv: bool = True):
+    results = []
+    for P in (1, 2, 4, 8):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={P}"
+        env["JAX_PLATFORMS"] = "cpu"
+        env.setdefault("PYTHONPATH", "src")
+        p = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                           capture_output=True, text=True, timeout=600)
+        if p.returncode != 0:
+            raise RuntimeError(p.stderr[-2000:])
+        line = [l for l in p.stdout.splitlines()
+                if l.startswith("RESULT ")][-1]
+        results.append(json.loads(line[len("RESULT "):]))
+
+    base = results[0]
+    for r in results:
+        eff = base["bytes"] / r["bytes"]  # perfect weak scaling -> 1.0
+        if csv:
+            emit(
+                f"fig6.4_weak_P{r['P']}_M{r['M']}",
+                0.0,
+                f"per_device_bytes={r['bytes']:.3e};eff={eff:.3f};"
+                f"coll={r['coll']:.2e}",
+            )
+
+    # flagship cells from the dry-run artifacts (256 / 512 devices)
+    for mesh in ("single", "multi"):
+        path = f"artifacts/dryrun/gw_greedy__{mesh}.json"
+        if os.path.exists(path):
+            rec = json.load(open(path))
+            c = rec["per_device_cost"]
+            if csv:
+                emit(
+                    f"fig6.4_weak_flagship_{mesh}_P{rec['devices']}",
+                    rec["roofline"]["bound_s"] * 1e6,
+                    f"bytes={c['bytes']:.3e};coll={c['collective_bytes']:.2e};"
+                    f"dominant={rec['roofline']['dominant']};"
+                    f"bound_s_per_iter={rec['roofline']['bound_s']:.2e}",
+                )
+    return results
+
+
+if __name__ == "__main__":
+    run()

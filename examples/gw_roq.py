@@ -1,0 +1,87 @@
+"""Reduced-order quadrature for GW likelihoods (the paper's application).
+
+Builds the full ROQ pipeline the greedycpp code serves in LIGO inference
+(Refs. [6, 12, 37] of the paper): greedy basis -> EIM nodes -> ROQ weights,
+then evaluates the inner products <d, h(nu)> two ways — full quadrature vs
+ROQ — over a batch of "requests" (parameter draws), reporting accuracy and
+the operation-count reduction.
+
+Run:  PYTHONPATH=src python examples/gw_roq.py
+"""
+
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import eim_nodes, rb_greedy, roq_weights
+from repro.gw import build_snapshot_matrix, chirp_grid, frequency_grid
+from repro.gw.grids import random_mass_samples
+from repro.gw.waveform import taylorf2
+
+
+def main():
+    # ---- offline stage (what greedycpp runs on the cluster) ----
+    N = 2000
+    f = frequency_grid(20.0, 512.0, N)
+    m1, m2 = chirp_grid(n_mc=50, n_eta=12)
+    S = build_snapshot_matrix(f, m1, m2, dtype=jnp.complex128)
+    res = rb_greedy(S, tau=1e-6)
+    k = int(res.k)
+    ei = eim_nodes(res.Q[:, :k])
+    print(f"offline: basis k = {k}, EIM nodes selected from N = {N} bins")
+
+    # synthetic "data" = signal + noise, quadrature = uniform df
+    rng = np.random.default_rng(0)
+    fj = jnp.asarray(f)
+    data = taylorf2(fj, 12.0, 9.0, dtype=jnp.complex128) + 0.05 * (
+        jnp.asarray(rng.standard_normal(N))
+        + 1j * jnp.asarray(rng.standard_normal(N))
+    )
+    w = jnp.full((N,), float(f[1] - f[0]))
+    omega = roq_weights(data, w, ei.B)  # (k,) precomputed ROQ weights
+
+    # ---- online stage: batched likelihood-style inner products ----
+    n_req = 256
+    q1, q2 = random_mass_samples(n_req, 7.0, 25.0, seed=3)
+
+    def full_ip(a, b):
+        h = taylorf2(fj, a, b, dtype=jnp.complex128)
+        return jnp.sum(w * jnp.conj(data) * h)
+
+    def roq_ip(a, b):
+        # note: evaluating on the full grid here only to apply the training
+        # normalization convention; a production ROQ normalizes via a
+        # separate quadratic-term basis for <h, h> (out of scope here) and
+        # evaluates the model at the k EIM nodes only.
+        h = taylorf2(fj, a, b, dtype=jnp.complex128)
+        return jnp.sum(omega * h[ei.nodes])
+
+    full_v = jax.jit(jax.vmap(full_ip))(jnp.asarray(q1), jnp.asarray(q2))
+    roq_v = jax.jit(jax.vmap(roq_ip))(jnp.asarray(q1), jnp.asarray(q2))
+    rel = np.abs(np.asarray(full_v - roq_v)) / np.abs(np.asarray(full_v))
+    print(f"online: {n_req} requests; ROQ inner-product relative error "
+          f"median {np.median(rel):.2e} / max {np.max(rel):.2e}")
+    print(f"operation count per request: full = O({2 * N}) mul-adds, "
+          f"ROQ = O({2 * k}) -> {N / k:.0f}x reduction")
+
+    # wall-time comparison of the summation stage alone
+    hs = jax.vmap(lambda a, b: taylorf2(fj, a, b, dtype=jnp.complex128))(
+        jnp.asarray(q1), jnp.asarray(q2))
+    sum_full = jax.jit(lambda H: jnp.sum(w * jnp.conj(data) * H, axis=-1))
+    sum_roq = jax.jit(lambda H: jnp.sum(omega * H[:, ei.nodes], axis=-1))
+    jax.block_until_ready(sum_full(hs)); jax.block_until_ready(sum_roq(hs))
+    t0 = time.perf_counter(); jax.block_until_ready(sum_full(hs))
+    t_full = time.perf_counter() - t0
+    t0 = time.perf_counter(); jax.block_until_ready(sum_roq(hs))
+    t_roq = time.perf_counter() - t0
+    print(f"summation wall-time: full {t_full*1e3:.2f} ms vs "
+          f"ROQ {t_roq*1e3:.2f} ms ({t_full/max(t_roq,1e-9):.1f}x)")
+
+
+if __name__ == "__main__":
+    main()

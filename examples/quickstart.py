@@ -1,0 +1,69 @@
+"""Quickstart: build a reduced basis for gravitational waveforms.
+
+The 60-second tour of the paper's pipeline:
+  1. generate a snapshot matrix from the TaylorF2 waveform family,
+  2. run RB-greedy (Algorithm 3) to a target tolerance,
+  3. compare against POD (Algorithm 1) and the reconstruction (Algorithm 4),
+  4. build an empirical interpolant (EIM) and validate out-of-sample.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    eim_nodes, empirical_interpolant, pod, rb_greedy, reconstruction,
+)
+from repro.core.errors import proj_error_max, orthogonality_defect
+from repro.gw import build_snapshot_matrix, chirp_grid, frequency_grid
+from repro.gw.grids import random_mass_samples
+
+
+def main():
+    # 1. snapshots: h(f; m1, m2) on a 60x15 chirp-mass grid
+    f = frequency_grid(20.0, 512.0, 1500)
+    m1, m2 = chirp_grid(n_mc=60, n_eta=15)
+    S = build_snapshot_matrix(f, m1, m2, dtype=jnp.complex128)
+    print(f"snapshot matrix S: {S.shape} {S.dtype} "
+          f"({S.size * 16 / 1e6:.1f} MB)")
+
+    # 2. RB-greedy to tau = 1e-6
+    tau = 1e-6
+    res = rb_greedy(S, tau=tau)
+    k = int(res.k)
+    print(f"greedy basis: k = {k} of {S.shape[1]} columns "
+          f"(compression {S.shape[1] / k:.1f}x)")
+    print(f"  max projection error: {float(proj_error_max(S, res.Q[:, :k])):.2e}"
+          f" (tau = {tau:.0e})")
+    print(f"  orthogonality defect: "
+          f"{float(orthogonality_defect(res.Q[:, :k])):.2e}")
+    print(f"  error decay: {[f'{float(e):.1e}' for e in res.errs[:k:k//8]]}")
+
+    # 3. POD comparison (Theorem 3.2 / Remark 4.2)
+    p = pod(S, tau=tau)
+    print(f"POD rank at same tau (2-norm): k = {int(p.k)} "
+          f"(greedy uses max-norm; Cor. 4.4 orders the criteria)")
+    rec = reconstruction(S, tau1=tau * 1e-2, tau2=tau)
+    print(f"reconstruction (Alg. 4): j = {rec.j} QR terms -> "
+          f"k = {int(rec.k)} SVD-rotated bases")
+
+    # 4. EIM + out-of-sample validation (greedycpp's validation step)
+    ei = eim_nodes(res.Q[:, :k])
+    mv1, mv2 = random_mass_samples(200, 7.0, 25.0, seed=7)
+    V = build_snapshot_matrix(f, mv1, mv2, dtype=jnp.complex128)
+    errs = [
+        float(jnp.linalg.norm(
+            empirical_interpolant(ei.B, ei.nodes, V[:, i]) - V[:, i]))
+        for i in range(V.shape[1])
+    ]
+    print(f"EIM: {k} nodes; out-of-sample interpolation error "
+          f"median {np.median(errs):.2e} / max {np.max(errs):.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps, then
+apply the paper's technique to its hidden states.
+
+Uses the production trainer (microbatching, AdamW, checkpointing, step-keyed
+data) on a scaled-down stablelm-family config sized to ~100M params, then
+demonstrates the framework integration: snapshot the final hidden states
+over a parameter sweep (prompts) and build a greedy reduced basis of the
+activation subspace — the LM as the snapshot generator `nu -> M(x; nu)`.
+
+Run:  PYTHONPATH=src python examples/train_lm_reduced.py [--steps 300]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import rb_greedy
+from repro.data import SyntheticLMData
+from repro.models import api
+from repro.training import make_train_step, train_state_init
+
+
+def hundred_m_config():
+    """~100M-parameter member of the stablelm family."""
+    return get_config("stablelm-3b").replace(
+        n_layers=8, d_model=512, n_heads=8, n_kv_heads=8, d_ff=1408,
+        vocab_size=32768, dtype="float32",
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = hundred_m_config()
+    print(f"config: {cfg.n_layers}L d{cfg.d_model} "
+          f"~{cfg.param_count()/1e6:.0f}M params")
+
+    state = train_state_init(cfg, jax.random.key(0))
+    data = SyntheticLMData(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                           global_batch=args.batch)
+    step = make_train_step(cfg, n_microbatches=2, base_lr=3e-4,
+                           warmup=args.steps // 10, total_steps=args.steps)
+
+    t0 = time.time()
+    first = None
+    for i in range(args.steps):
+        state, m = step(state, data.batch(i))
+        if i == 0:
+            first = float(m["loss"])
+        if (i + 1) % 25 == 0:
+            print(f"step {i+1:4d}  loss {float(m['loss']):.4f}  "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)")
+    print(f"loss: {first:.3f} -> {float(m['loss']):.3f} "
+          f"in {args.steps} steps / {time.time()-t0:.0f}s")
+
+    # ---- the paper's technique on the trained model ----
+    # The paper's premise (Sec. 1): reduction pays off when the snapshots
+    # vary SMOOTHLY with a parameter.  Token IDs are categorical, so a
+    # prompt sweep is NOT smooth — contrast three sweeps of the model's
+    # output distribution p(nu) to see where the premise bites:
+    #   (a) independent random prompts          -> near full rank,
+    #   (b) temperature sweep of one prompt:
+    #       M(x; nu) = softmax(logits / nu)     -> smooth in nu, low rank,
+    #   (c) consecutive positions of one long sequence (feature-cache
+    #       correlation along time)             -> partially compressible.
+    n_snap = 160
+
+    def last_logits(toks):
+        out = api.forward_logits(cfg, state.params, {"tokens": toks})
+        return out[0, -1, :].astype(jnp.float32)
+
+    cols_rand = []
+    for s in range(n_snap):
+        toks = jax.random.randint(jax.random.key(s), (1, args.seq), 0,
+                                  cfg.vocab_size)
+        cols_rand.append(np.asarray(jax.nn.softmax(last_logits(toks)),
+                                    np.float64))
+
+    base_toks = data.batch(0)["tokens"][:1]
+    z = last_logits(base_toks)
+    cols_temp = [
+        np.asarray(jax.nn.softmax(z / t), np.float64)
+        for t in np.linspace(0.5, 2.0, n_snap)
+    ]
+
+    long_logits = api.forward_logits(
+        cfg, state.params, {"tokens": data.batch(1)["tokens"][:1]}
+    )[0].astype(jnp.float32)
+    pos = np.linspace(args.seq // 4, args.seq - 1, n_snap).astype(int)
+    cols_pos = [np.asarray(jax.nn.softmax(long_logits[i]), np.float64)
+                for i in pos]
+
+    for name, cols in (("(a) random prompts", cols_rand),
+                       ("(b) temperature sweep", cols_temp),
+                       ("(c) position sweep", cols_pos)):
+        S = jnp.asarray(np.stack(cols, axis=1))
+        S = S / jnp.linalg.norm(S, axis=0, keepdims=True)
+        res = rb_greedy(S, tau=1e-3)
+        k = int(res.k)
+        print(f"{name}: greedy basis k = {k}/{S.shape[1]} "
+              f"({S.shape[1]/max(k,1):.1f}x compression at tau=1e-3)")
+    print("=> unstructured sweeps are near full rank; smooth parametric "
+          "families compress — exactly the paper's n-width premise.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""GreedyJAX: QR-based model reduction at pod scale.
+
+Reproduction + extension of Antil, Chen & Field (2018), "A Note on QR-Based
+Model Reduction: Algorithm, Software, and Gravitational Wave Applications".
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,24 @@
+"""Core model-reduction algorithms from the paper.
+
+- :mod:`repro.core.pod`            -- Algorithm 1 (POD via SVD).
+- :mod:`repro.core.mgs`            -- Algorithm 2 (MGS with column pivoting).
+- :mod:`repro.core.greedy`         -- Algorithm 3 (RB-greedy w/ Hoffmann IMGS).
+- :mod:`repro.core.rrqr`           -- optimal RRQR (Theorem 5.1).
+- :mod:`repro.core.reconstruction` -- Algorithm 4 (QR + SVD-of-R).
+- :mod:`repro.core.eim`            -- empirical interpolation + ROQ.
+- :mod:`repro.core.errors`         -- the paper's error identities.
+- :mod:`repro.core.distributed`    -- shard_map column-parallel greedy (Sec 6).
+"""
+
+from repro.core.pod import pod, pod_basis
+from repro.core.mgs import mgs_pivoted_qr
+from repro.core.greedy import GreedyResult, rb_greedy, imgs_orthogonalize
+from repro.core.rrqr import optimal_rrqr
+from repro.core.reconstruction import reconstruction
+from repro.core.eim import eim_nodes, empirical_interpolant, roq_weights
+
+__all__ = [
+    "pod", "pod_basis", "mgs_pivoted_qr", "GreedyResult", "rb_greedy",
+    "imgs_orthogonalize", "optimal_rrqr", "reconstruction", "eim_nodes",
+    "empirical_interpolant", "roq_weights",
+]

@@ -1,0 +1,55 @@
+"""The paper's error identities (Thms 3.2, 4.1, 4.3; Cors 4.4, 5.6, 5.7).
+
+These are used by the tests to validate the implementation against the
+paper's exact statements and by the benchmarks to report basis quality.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def proj_error_2norm(S: jax.Array, Q: jax.Array) -> jax.Array:
+    """|S - Q Q^H S|_2  (Thm 4.1 LHS)."""
+    return jnp.linalg.norm(S - Q @ (Q.conj().T @ S), ord=2)
+
+
+def proj_error_fro(S: jax.Array, Q: jax.Array) -> jax.Array:
+    """|S - Q Q^H S|_F."""
+    return jnp.linalg.norm(S - Q @ (Q.conj().T @ S))
+
+
+def proj_error_max(S: jax.Array, Q: jax.Array) -> jax.Array:
+    """max_i |s_i - Q Q^H s_i|_2  (Eq. 4.6; RB-greedy's error functional)."""
+    E = S - Q @ (Q.conj().T @ S)
+    return jnp.max(jnp.linalg.norm(E, axis=0))
+
+
+def per_column_errors(S: jax.Array, Q: jax.Array) -> jax.Array:
+    """|s_i - Q Q^H s_i|_2 for every column (Thm 4.3: equals |r~_i|_2)."""
+    E = S - Q @ (Q.conj().T @ S)
+    return jnp.linalg.norm(E, axis=0)
+
+
+def r22_norm(R: jax.Array, k: int, ord=2) -> jax.Array:
+    """|R22|_* for a full triangular factor R and split index k (Thm 4.1)."""
+    return jnp.linalg.norm(R[k:, k:], ord=ord)
+
+
+def greedy_error_determinant_identity(
+    sigmas: jax.Array, r_diag: jax.Array, k: int
+) -> jax.Array:
+    """Corollary 5.7 RHS: (prod_{i<=k+1} sigma_i) / (prod_{i<=k} R(i,i)).
+
+    Computed in log space for stability.
+    """
+    log_num = jnp.sum(jnp.log(sigmas[: k + 1]))
+    log_den = jnp.sum(jnp.log(r_diag[:k]))
+    return jnp.exp(log_num - log_den)
+
+
+def orthogonality_defect(Q: jax.Array) -> jax.Array:
+    """|I - Q^H Q|_2 — Hoffmann's conjecture: ~ kappa * eps * sqrt(M)."""
+    k = Q.shape[1]
+    return jnp.linalg.norm(jnp.eye(k, dtype=Q.dtype) - Q.conj().T @ Q, ord=2)

@@ -1,0 +1,57 @@
+"""Algorithm 4: the reconstruction approach to QR (Sec. 5.2.2).
+
+Run a partial pivoted greedy/MGS to j terms (cheap: O(jNM)), then take the
+SVD of the *small* (j x M) triangular factor R and rotate the QR basis by its
+left singular vectors:
+
+    X_k = Q_j @ Vbar[:, :k].
+
+Theorem 5.11: |S - X_j X_j^H S|_2 <= sigma(S_1)_{j+1} + |R22|_2, i.e. the
+reconstructed basis behaves like POD whenever |R22| is small (Remark 5.13) —
+at QR cost (Remark 5.9: O(M j^2 + N j^2) on top of the partial QR instead of
+a full N x M SVD).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.greedy import rb_greedy
+
+
+class ReconstructionResult(NamedTuple):
+    X: jax.Array        # (N, k) reconstructed (SVD-rotated) basis
+    Qj: jax.Array       # (N, j) greedy/QR basis actually computed
+    sigmas_R: jax.Array  # (j,) singular values of R(1:j, 1:M)
+    j: int              # partial QR depth (tau_1 criterion)
+    k: jax.Array        # selected rank (tau_2 criterion)
+
+
+def reconstruction(
+    S: jax.Array,
+    tau1: float,
+    tau2: float,
+    max_j: int | None = None,
+) -> ReconstructionResult:
+    """Algorithm 4.
+
+    Step 3: partial pivoted QR (RB-greedy == MGS, Prop 5.3) until
+            R(j,j) < tau1.
+    Step 5: SVD of R(1:j, 1:M)  (j x M — small).
+    Step 6: pick k with sigma_{k+1} < tau2.
+    Step 7: X_k = Q_j Vbar(:, 1:k).
+    """
+    res = rb_greedy(S, tau=tau1, max_k=max_j)
+    j = int(res.k)
+    Qj = res.Q[:, :j]
+    Rj = res.R[:j, :]
+
+    Vbar, sig, _ = jnp.linalg.svd(Rj, full_matrices=False)
+    below = sig < tau2
+    k = jnp.where(jnp.any(below), jnp.argmax(below), sig.shape[0])
+
+    X = Qj @ Vbar  # full rotation; caller slices [:, :k]
+    return ReconstructionResult(X=X, Qj=Qj, sigmas_R=sig, j=j, k=k)

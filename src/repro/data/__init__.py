@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticLMData, FileLMData
+
+__all__ = ["SyntheticLMData", "FileLMData"]

@@ -1,0 +1,24 @@
+"""Gravitational-wave snapshot substrate.
+
+The paper fills its snapshot matrix by calls to the IMRPhenomPv2 waveform
+model from LALSuite (Sec. 6.1.1).  LALSuite is C code with external data;
+here the same role is played by a closed-form, frequency-domain post-
+Newtonian inspiral model (TaylorF2, 3.5PN phasing) implemented in pure JAX —
+the standard model family of the GW ROQ literature (e.g. Canizares et al.,
+PRL 114, 071104, which the paper cites as its application).  The snapshot
+generator contract is identical: ``nu -> M(x; nu)`` producing one complex
+column per parameter value, no file I/O.
+"""
+
+from repro.gw.waveform import taylorf2, taylorf2_batch
+from repro.gw.grids import chirp_grid, mass_grid, frequency_grid
+from repro.gw.snapshots import build_snapshot_matrix
+
+__all__ = [
+    "taylorf2",
+    "taylorf2_batch",
+    "chirp_grid",
+    "mass_grid",
+    "frequency_grid",
+    "build_snapshot_matrix",
+]

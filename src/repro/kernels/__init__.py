@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Three kernels, each a package with ``kernel.py`` (pl.pallas_call + BlockSpec
+VMEM tiling), ``ops.py`` (jit'd public wrapper with padding/dtype handling
+and CPU interpret fallback), and ``ref.py`` (pure-jnp oracle used by the
+allclose tests):
+
+- ``greedy_update``   — the paper's pivot-search hot loop (Fig. 6.1a):
+                        fused c = q^H S, acc += |c|^2, residual, block argmax.
+- ``imgs_project``    — one iterated-GS pass: c = Q^H v, v' = v - Q c.
+- ``flash_attention`` — causal/sliding-window GQA attention (online softmax)
+                        for the LM architecture stack.
+"""
+
+from repro.kernels.greedy_update.ops import greedy_update
+from repro.kernels.imgs_project.ops import imgs_project
+from repro.kernels.flash_attention.ops import flash_attention
+
+__all__ = ["greedy_update", "imgs_project", "flash_attention"]

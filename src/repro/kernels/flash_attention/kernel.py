@@ -1,0 +1,152 @@
+"""Pallas TPU flash attention (causal / sliding-window, GQA).
+
+Online-softmax attention with the canonical running (m, l, o) state held in
+VMEM scratch.  Used by the LM architecture stack for train/prefill paths;
+the sliding-window variant serves Mixtral's SWA and RecurrentGemma's local
+attention.  TPU adaptation notes:
+
+- grid (B, Hq, Sq/Bq, Skv/Bk); the kv axis is the innermost (sequential on
+  TPU) so the scratch accumulators carry across kv steps of one q block.
+- GQA is handled in the BlockSpec index maps (kv head = q head // group) —
+  no repeated K/V materialization in HBM.
+- Causal + window skipping is done with pl.when guards per block; the
+  diagonal blocks apply an iota mask.  MXU matmuls are (Bq, D) x (D, Bk)
+  and (Bq, Bk) x (Bk, D) with f32 accumulation.
+- Default tiles Bq = Bk = 128 keep (q, k, v, o, p) blocks ≈ 0.5 MB VMEM at
+  D = 128 in bf16 — far under budget, leaving headroom for double-buffered
+  pipelining by the Mosaic compiler.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+               *, causal: bool, window: int | None, sm_scale: float,
+               block_q: int, block_k: int, seq_off: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    n_kv = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Absolute token positions of this block pair (seq_off aligns shorter
+    # query windows to the end of the kv sequence, e.g. decode).
+    q_lo = qi * block_q + seq_off
+    k_lo = ki * block_k
+
+    # Block-level skip tests (static per (qi, ki) pair at trace time only if
+    # grid indices were static; they are dynamic, so use pl.when).
+    relevant = jnp.asarray(True)
+    if causal:
+        relevant &= k_lo <= q_lo + block_q - 1
+    if window is not None:
+        relevant &= k_lo + block_k - 1 > q_lo - window
+
+    @pl.when(relevant)
+    def _():
+        q = q_ref[0, 0].astype(jnp.float32) * sm_scale
+        k = k_ref[0, 0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+
+        rows = q_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        cols = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= cols <= rows
+        if window is not None:
+            mask &= cols > rows - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        vv = v_ref[0, 0].astype(jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+            p, vv, preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_cur
+
+    @pl.when(ki == n_kv - 1)
+    def _():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "sm_scale", "block_q", "block_k", "interpret"
+    ),
+)
+def flash_attention_kernel(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: int | None = None,
+    sm_scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Padded-shape flash attention.  Sq % block_q == Skv % block_k == 0.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D).  Causal alignment matches
+    :func:`repro.kernels.flash_attention.ref.attention_ref` (query block
+    aligned to the end of the kv sequence).
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / (D ** 0.5)
+    seq_off = Skv - Sq
+
+    grid = (B, Hq, Sq // block_q, Skv // block_k)
+    kernel = functools.partial(
+        _fa_kernel,
+        causal=causal,
+        window=window,
+        sm_scale=sm_scale,
+        block_q=block_q,
+        block_k=block_k,
+        seq_off=seq_off,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec(
+                (1, 1, block_k, D), lambda b, h, qi, ki: (b, h // g, ki, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, D), lambda b, h, qi, ki: (b, h // g, ki, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,89 @@
+"""Public jit'd wrapper for the fused greedy pivot-search update.
+
+Handles dtype dispatch (real vs complex planes), tile padding, and CPU
+interpret fallback.  The padded columns get ``norms_sq = -1e30`` so they can
+never win the argmax; padded rows are zeros so they are no-ops in the dot
+products.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.greedy_update import kernel as _k
+
+
+def _pad_to(x, size, axis, value=0.0):
+    pad = size - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def greedy_update(
+    q: jax.Array,
+    S: jax.Array,
+    acc: jax.Array,
+    norms_sq: jax.Array,
+    nt: int = 512,
+    mt: int = 1024,
+    interpret: bool | None = None,
+):
+    """Fused pivot-search update: c = q^H S, acc += |c|^2, residual argmax.
+
+    Args:
+      q:        (N,) basis vector (f32/f64/c64/c128).
+      S:        (N, M) snapshot shard.
+      acc:      (M,) accumulated |c|^2 (real).
+      norms_sq: (M,) reference norms (real).
+      nt, mt:   VMEM tile sizes (rows, cols).
+      interpret: force Pallas interpret mode; default: interpret unless the
+        backend is TPU.
+
+    Returns (c, acc_out, max_res, argmax) matching
+    :func:`repro.kernels.greedy_update.ref.greedy_update_ref`.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    N, M = S.shape
+    nt = min(nt, _round_up(N, 128))
+    mt = min(mt, _round_up(M, 128))
+    Np, Mp = _round_up(N, nt), _round_up(M, mt)
+
+    acc_p = _pad_to(acc[None, :].astype(jnp.float32), Mp, 1)
+    norms_p = _pad_to(
+        norms_sq[None, :].astype(jnp.float32), Mp, 1, value=_k.NEG_LARGE
+    )
+
+    if jnp.iscomplexobj(S):
+        plane = jnp.float32 if S.dtype == jnp.complex64 else jnp.float64
+        qr = _pad_to(q.real[None, :].astype(plane), Np, 1)
+        qi = _pad_to(q.imag[None, :].astype(plane), Np, 1)
+        Sr = _pad_to(_pad_to(S.real.astype(plane), Np, 0), Mp, 1)
+        Si = _pad_to(_pad_to(S.imag.astype(plane), Np, 0), Mp, 1)
+        cr, ci, acc_out, bmax, bidx = _k.greedy_update_complex(
+            qr, qi, Sr, Si, acc_p, norms_p, nt=nt, mt=mt, interpret=interpret
+        )
+        c = (cr[0, :M] + 1j * ci[0, :M]).astype(S.dtype)
+    else:
+        qp = _pad_to(q[None, :].astype(S.dtype), Np, 1)
+        Sp = _pad_to(_pad_to(S, Np, 0), Mp, 1)
+        c, acc_out, bmax, bidx = _k.greedy_update_real(
+            qp, Sp, acc_p, norms_p, nt=nt, mt=mt, interpret=interpret
+        )
+        c = c[0, :M]
+
+    # Final reduction over the per-block maxima (tiny: M/mt entries).
+    blk = jnp.argmax(bmax[0])
+    max_res = bmax[0, blk]
+    argmax = bidx[0, blk]
+    acc_out = acc_out[0, :M].astype(acc.dtype)
+    return c, acc_out, max_res.astype(norms_sq.dtype), argmax

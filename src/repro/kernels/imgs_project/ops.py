@@ -1,0 +1,67 @@
+"""Public jit'd wrapper for the iterated-GS projection pass.
+
+Complex vectors are handled via the real embedding  z = x + iy  ↦  [x; y],
+A ↦ [[Ar, -Ai], [Ai, Ar]]  (a ring isomorphism), under which
+``c = Q^H v`` and ``v' = v - Q c`` become exactly the real kernel applied to
+the embedded operands:  embed(Q)^T embed(v) = embed(Q^H v).  This keeps one
+kernel for both dtypes; the production TPU path for the GW (complex) case
+feeds the planes directly.  For c64/f32 the kernel accumulates in f32 (TPU
+MXU native); use the ref path when f64-level precision is required on CPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.imgs_project import kernel as _k
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pad_to(x, size, axis):
+    pad = size - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def imgs_project(
+    v: jax.Array,
+    Q: jax.Array,
+    nt: int = 1024,
+    kt: int = 512,
+    interpret: bool | None = None,
+):
+    """One classical-GS pass: returns (v - Q Q^H v, Q^H v).
+
+    Matches :func:`repro.kernels.imgs_project.ref.imgs_project_ref`.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    N, K = Q.shape
+    if jnp.iscomplexobj(Q):
+        plane = jnp.float32 if Q.dtype == jnp.complex64 else jnp.float64
+        ve = jnp.concatenate(
+            [v.real.astype(plane), v.imag.astype(plane)]
+        )
+        Qr = Q.real.astype(plane)
+        Qi = Q.imag.astype(plane)
+        Qe = jnp.block([[Qr, -Qi], [Qi, Qr]])
+        ve_out, ce = imgs_project(ve, Qe, nt=nt, kt=kt, interpret=interpret)
+        v_out = (ve_out[:N] + 1j * ve_out[N:]).astype(Q.dtype)
+        c = (ce[:K] + 1j * ce[K:]).astype(Q.dtype)
+        return v_out, c
+
+    nt = min(nt, _round_up(N, 128))
+    kt = min(kt, _round_up(K, 128))
+    Np, Kp = _round_up(N, nt), _round_up(K, kt)
+    vp = _pad_to(v[None, :].astype(Q.dtype), Np, 1)
+    Qp = _pad_to(_pad_to(Q, Np, 0), Kp, 1)
+    v_out, c = _k.imgs_project_real(vp, Qp, nt, kt, interpret)
+    return v_out[0, :N], c[0, :K]

@@ -1,0 +1,46 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run entry point sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import, and everything else must see the default single device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e pod mesh: 16x16 = 256 chips per pod; 2 pods for multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(n: int | None = None, axes=("data", "model")):
+    """Small host-device mesh for tests (requires forced device count)."""
+    devs = jax.devices()
+    n = n or len(devs)
+    if len(axes) == 1:
+        shape = (n,)
+    else:
+        a = 2 if n % 2 == 0 and n > 1 else 1
+        shape = (a, n // a)
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def dp_size(mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n
+
+
+def tp_size(mesh) -> int:
+    return mesh.shape.get("model", 1)

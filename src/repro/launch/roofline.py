@@ -1,0 +1,152 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (TPU v5e constants):
+
+  compute    = FLOPs_per_device / peak_FLOPs          (197e12 bf16 FLOP/s)
+  memory     = bytes_per_device / HBM_bw              (819e9 B/s)
+  collective = collective_bytes_per_device / link_bw  (50e9 B/s ICI)
+
+cost_analysis() returns per-device numbers for the SPMD-partitioned module
+but counts while-loop bodies ONCE — so layer scans would undercount by L.
+The methodology here (see EXPERIMENTS.md §Roofline) re-lowers each cell
+with layers UNROLLED (repro.models.transformer.unroll_layers) at 1 and 2
+layer-groups, fits cost = overhead + L * per_group, and extrapolates to the
+full depth.  Collective bytes come from the partitioned HLO text: each
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute
+contributes its result bytes x an op weight (all-reduce counts 2x for its
+reduce-scatter + all-gather ring decomposition).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+# --------------------------------------------------------- TPU v5e constants
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+LINK_BW = 50e9            # bytes/s per chip (ICI)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_WEIGHT = {
+    "all-reduce": 2.0,        # ring RS + AG decomposition
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device collective bytes by op kind from partitioned HLO text.
+
+    Counts each async collective once (the ``-start`` op); sync forms are
+    counted directly.  Returns {"total": weighted_bytes, per-op raw bytes}.
+    """
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVE_WEIGHT}
+    total = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done" in line.split("=")[1][:60]:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_str)
+        out[kind] += b
+        total += b * _COLLECTIVE_WEIGHT[kind]
+    out["total"] = total
+    return out
+
+
+def cost_terms(compiled, hlo_text: str | None = None) -> Dict[str, float]:
+    """Raw per-device cost terms from one compiled executable."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # older jax returns [dict]
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    bytes_acc = float(ca.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+    return {
+        "flops": flops,
+        "bytes": bytes_acc,
+        "collective_bytes": coll["total"],
+        "collective_detail": {
+            k: v for k, v in coll.items() if k != "total"
+        },
+    }
+
+
+def roofline_seconds(terms: Dict[str, float]) -> Dict[str, float]:
+    compute = terms["flops"] / PEAK_FLOPS
+    memory = terms["bytes"] / HBM_BW
+    coll = terms["collective_bytes"] / LINK_BW
+    dominant = max(
+        ("compute", compute), ("memory", memory), ("collective", coll),
+        key=lambda kv: kv[1],
+    )[0]
+    total = max(compute, memory, coll)
+    return {
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": coll,
+        "dominant": dominant,
+        "bound_s": total,
+    }
+
+
+def fit_linear(costs_1, costs_2, n1: int, n2: int, n_full: int):
+    """Fit cost = a + b*n from two measurements; extrapolate to n_full."""
+    out = {}
+    for k in ("flops", "bytes", "collective_bytes"):
+        b = (costs_2[k] - costs_1[k]) / (n2 - n1)
+        a = costs_1[k] - b * n1
+        out[k] = max(a + b * n_full, 0.0)
+    return out
+
+
+def model_flops(cfg, shape, backward: bool) -> float:
+    """Analytic MODEL_FLOPS: 6*N_active*D (train) or 2*N_active*D (fwd).
+
+    D = total tokens processed; decode shapes process global_batch tokens
+    per step.  Used for the usefulness ratio MODEL_FLOPS / HLO_FLOPs.
+    """
+    n_active = cfg.active_param_count() if hasattr(cfg, "active_param_count") \
+        else cfg.param_count()
+    if shape.kind == "train":
+        tokens = shape.tokens
+        mult = 6.0
+    elif shape.kind == "prefill":
+        tokens = shape.tokens
+        mult = 2.0
+    else:  # decode: one token per sequence per step
+        tokens = shape.global_batch
+        mult = 2.0
+    return mult * n_active * tokens

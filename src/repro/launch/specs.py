@@ -1,0 +1,201 @@
+"""ShapeDtypeStruct input specs + shardings for every (arch x shape) cell.
+
+``input_specs(cfg, shape, mesh)`` returns everything the dry-run needs to
+lower a cell without allocating a byte: abstract params/optimizer state,
+abstract batch or cache, and the matching NamedShardings (weak-type-correct
+stand-ins; the same pattern the real launchers use for real arrays).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import dp_size
+from repro.models import api
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+from repro.optim.adamw import AdamWState
+from repro.sharding import resolve, tree_shardings
+from repro.training.trainer import TrainState
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _is_spec_leaf(s):
+    return isinstance(s, tuple) and all(
+        x is None or isinstance(x, str) for x in s
+    )
+
+
+def sanitize_sharding(sh: NamedSharding, shape, mesh) -> NamedSharding:
+    """Drop sharding on any dim the axis sizes don't evenly divide.
+
+    Explicit input shardings (unlike internal GSPMD constraints) require
+    even divisibility — e.g. granite's vocab 49155 or seamless's 256206
+    cannot shard 16 ways, so those dims fall back to replicated.
+    """
+    spec = sh.spec
+    new = []
+    for d, ax in enumerate(spec):
+        if ax is None:
+            new.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        prod = 1
+        for a in axes:
+            prod *= mesh.shape[a]
+        new.append(ax if shape[d] % prod == 0 else None)
+    new += [None] * (len(shape) - len(new))
+    return NamedSharding(mesh, P(*new))
+
+
+def param_shardings(cfg: ModelConfig, mesh):
+    return tree_shardings(mesh, api.param_specs(cfg))
+
+
+def abstract_sharded_params(cfg: ModelConfig, mesh):
+    """Params as ShapeDtypeStructs carrying (sanitized) NamedShardings."""
+    shapes = api.abstract_params(cfg)
+    shards = param_shardings(cfg, mesh)
+    return jax.tree.map(
+        lambda s, sh: _sds(
+            s.shape, s.dtype, sanitize_sharding(sh, s.shape, mesh)
+        ),
+        shapes, shards,
+    )
+
+
+def abstract_train_state(cfg: ModelConfig, mesh) -> TrainState:
+    params = abstract_sharded_params(cfg, mesh)
+    rep = NamedSharding(mesh, P())
+    moments = jax.tree.map(
+        lambda p: _sds(p.shape, jnp.float32, p.sharding), params
+    )
+    return TrainState(
+        params=params,
+        opt=AdamWState(
+            m=moments,
+            v=jax.tree.map(lambda m: m, moments),
+            step=_sds((), jnp.int32, rep),
+        ),
+        ef=None,
+        step=_sds((), jnp.int32, rep),
+    )
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                seq_override: Optional[int] = None) -> dict:
+    """Training/prefill batch ShapeDtypeStructs with dp sharding."""
+    B = shape.global_batch
+    S = seq_override or shape.seq_len
+    dp = dp_size(mesh)
+    bspec = "dp" if B % dp == 0 and B >= dp else None
+    tok_sh = NamedSharding(mesh, resolve(mesh, bspec, None))
+    out = {
+        "tokens": _sds((B, S), jnp.int32, tok_sh),
+        "labels": _sds((B, S), jnp.int32, tok_sh),
+    }
+    from repro.models.layers import dtype_of
+
+    dt = dtype_of(cfg.dtype)
+    if cfg.family == "vlm":
+        out["vision"] = _sds(
+            (B, cfg.vision_tokens, cfg.vision_dim), dt,
+            NamedSharding(mesh, resolve(mesh, bspec, None, None)),
+        )
+    if cfg.family == "encdec":
+        out["frames"] = _sds(
+            (B, cfg.audio_frames, cfg.audio_dim), dt,
+            NamedSharding(mesh, resolve(mesh, bspec, None, None)),
+        )
+    return out
+
+
+# ------------------------------------------------------------ cache sharding
+def cache_shardings(cfg: ModelConfig, mesh, cache_tree, batch: int):
+    """Per-leaf NamedShardings for a decode cache pytree.
+
+    Rules (by leaf role, matched on the key path):
+      kv k/v        (..., B, S, K, hd): B -> dp (if divisible), S -> tp
+      cross k/v     (..., B, S_mem, K, hd): B -> dp only
+      ssm conv      (..., B, W, C): C -> tp
+      ssm state     (..., B, H, P, N): H -> tp
+      lru conv      (..., B, W, w): w -> tp
+      lru h         (..., B, w): w -> tp
+      pos / scalars: replicated
+    """
+    dp = dp_size(mesh)
+    b_ok = batch % dp == 0 and batch >= dp
+
+    def spec_for(path, leaf):
+        keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        name = str(keys[-1]) if keys else ""
+        nd = leaf.ndim
+        lead = nd  # count leading stack dims by matching trailing roles
+
+        def dims(*trailing):
+            return [None] * (nd - len(trailing)) + list(trailing)
+
+        if name in ("k_scale", "v_scale"):
+            d = dims("dp" if b_ok else None, "tp", None, None)
+        elif name in ("k", "v"):
+            is_cross = any("cross" in str(k) for k in keys)
+            if is_cross:
+                d = dims("dp" if b_ok else None, None, None, None)
+            else:
+                d = dims("dp" if b_ok else None, "tp", None, None)
+        elif name in ("cross_k", "cross_v"):
+            d = dims("dp" if b_ok else None, None, None, None)
+        elif name == "conv":
+            d = dims("dp" if b_ok else None, None, "tp")
+        elif name == "state":
+            d = dims("dp" if b_ok else None, "tp", None, None)
+        elif name == "h":
+            d = dims("dp" if b_ok else None, "tp")
+        elif name == "cross_kv" or (name.isdigit() and nd == 5):
+            # vlm cross memory tuple entries (n_groups, B, vis, K, hd)
+            d = dims("dp" if b_ok else None, None, None, None)
+        else:  # pos etc.
+            d = [None] * nd
+        return NamedSharding(mesh, resolve(mesh, *d))
+
+    leaves = jax.tree_util.tree_flatten_with_path(cache_tree)[0]
+    treedef = jax.tree_util.tree_structure(cache_tree)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_for(p, l) for p, l in leaves]
+    )
+
+
+def abstract_cache(cfg: ModelConfig, mesh, batch: int, max_len: int):
+    shapes = jax.eval_shape(lambda: api.init_cache(cfg, batch, max_len))
+    shards = cache_shardings(cfg, mesh, shapes, batch)
+    return jax.tree.map(
+        lambda s, sh: _sds(
+            s.shape, s.dtype, sanitize_sharding(sh, s.shape, mesh)
+        ),
+        shapes, shards,
+    )
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """(token, cache) specs for a decode cell (cache holds seq_len context)."""
+    B = shape.global_batch
+    dp = dp_size(mesh)
+    bspec = "dp" if B % dp == 0 and B >= dp else None
+    tok = _sds((B,), jnp.int32, NamedSharding(mesh, resolve(mesh, bspec)))
+    cache = abstract_cache(cfg, mesh, B, shape.seq_len)
+    return tok, cache
+
+
+def n_microbatches(cfg: ModelConfig, shape: ShapeConfig, mesh) -> int:
+    """Grad-accumulation depth: ~1 sample/device/microbatch for big models."""
+    dp = dp_size(mesh)
+    per_dp = max(1, shape.global_batch // dp)
+    per_micro = 1 if cfg.d_model >= 4096 else 4
+    return max(1, per_dp // per_micro)

@@ -1,0 +1,83 @@
+"""Fault-tolerance supervisor: run, watch, restart-from-checkpoint.
+
+Wraps any launcher subprocess (train / reduce).  On non-zero exit or on a
+heartbeat stall (straggler / hang mitigation) the job is killed and
+relaunched; because checkpoints are atomic and the data pipeline is
+step-keyed, the relaunch resumes bit-identically from the last checkpoint
+(tested in tests/test_fault_tolerance.py).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import signal
+import subprocess
+import sys
+import time
+
+
+def run_supervised(
+    cmd: list[str],
+    max_restarts: int = 3,
+    stall_timeout_s: float | None = None,
+    log_path: str | None = None,
+) -> int:
+    """Run ``cmd``; restart on crash or output stall.  Returns final rc."""
+    restarts = 0
+    while True:
+        log = open(log_path, "ab") if log_path else None
+        proc = subprocess.Popen(
+            cmd,
+            stdout=log or None,
+            stderr=subprocess.STDOUT if log else None,
+        )
+        last_size = -1
+        last_progress = time.time()
+        while True:
+            rc = proc.poll()
+            if rc is not None:
+                break
+            if stall_timeout_s and log_path:
+                size = os.path.getsize(log_path)
+                if size != last_size:
+                    last_size = size
+                    last_progress = time.time()
+                elif time.time() - last_progress > stall_timeout_s:
+                    print(f"supervisor: stall > {stall_timeout_s}s, killing",
+                          file=sys.stderr)
+                    proc.send_signal(signal.SIGKILL)
+                    proc.wait()
+                    rc = -9
+                    break
+            time.sleep(0.2)
+        if log:
+            log.close()
+        if rc == 0:
+            return 0
+        restarts += 1
+        if restarts > max_restarts:
+            print(f"supervisor: giving up after {restarts - 1} restarts",
+                  file=sys.stderr)
+            return rc
+        print(f"supervisor: rc={rc}; restart {restarts}/{max_restarts}",
+              file=sys.stderr)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--max-restarts", type=int, default=3)
+    ap.add_argument("--stall-timeout", type=float, default=None)
+    ap.add_argument("--log", default=None)
+    ap.add_argument("cmd", nargs=argparse.REMAINDER)
+    args = ap.parse_args()
+    cmd = args.cmd
+    if cmd and cmd[0] == "--":
+        cmd = cmd[1:]
+    raise SystemExit(
+        run_supervised(cmd, args.max_restarts, args.stall_timeout, args.log)
+    )
+
+
+if __name__ == "__main__":
+    main()

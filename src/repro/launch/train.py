@@ -1,0 +1,95 @@
+"""Training launcher: config-driven, checkpointed, supervisor-compatible.
+
+Runs a reduced or full architecture with the production trainer: sharded
+state (on whatever mesh the host offers), async checkpointing, step-keyed
+data, deterministic restart.  On a real TPU pod this same entry point runs
+under ``jax.distributed.initialize()`` with the production mesh; on CPU it
+drives the end-to-end example (examples/train_lm_reduced.py wraps it).
+
+Usage:
+  python -m repro.launch.train --arch stablelm-3b --reduced --steps 200 \
+      --ckpt-dir ckpts/ --seq 256 --batch 8
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import (
+    AsyncCheckpointer, latest_step, restore_checkpoint,
+)
+from repro.configs import get_config, get_reduced
+from repro.data import SyntheticLMData
+from repro.training import TrainState, make_train_step, train_state_init
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--compression", type=float, default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--crash-at", type=int, default=None,
+                    help="fault-injection: hard-exit at this step")
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    key = jax.random.key(0)
+    state = train_state_init(cfg, key,
+                             compression=args.compression is not None)
+    start = 0
+    ckpt = None
+    if args.ckpt_dir:
+        ckpt = AsyncCheckpointer(args.ckpt_dir)
+        last = latest_step(args.ckpt_dir)
+        if last is not None:
+            state = restore_checkpoint(state, args.ckpt_dir, last)
+            start = int(state.step)
+            print(f"restored checkpoint at step {start}")
+
+    data = SyntheticLMData(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        global_batch=args.batch,
+    )
+    step_fn = make_train_step(
+        cfg, n_microbatches=args.microbatches, base_lr=args.lr,
+        warmup=max(args.steps // 20, 10), total_steps=args.steps,
+        compression_ratio=args.compression,
+    )
+
+    t0 = time.time()
+    history = []
+    for i in range(start, args.steps):
+        state, metrics = step_fn(state, data.batch(i))
+        if args.crash_at is not None and i + 1 == args.crash_at:
+            print(f"fault injection: exiting hard at step {i + 1}")
+            os._exit(42)
+        if (i + 1) % args.log_every == 0 or i + 1 == args.steps:
+            loss = float(metrics["loss"])
+            history.append({"step": i + 1, "loss": loss})
+            print(f"step {i+1:5d} loss {loss:.4f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"({(time.time()-t0)/(i-start+1):.2f}s/step)")
+        if ckpt and (i + 1) % args.ckpt_every == 0:
+            ckpt.save(state, i + 1)
+    if ckpt:
+        ckpt.save(state, args.steps)
+        ckpt.wait()
+    return history
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Model zoo: the 10 assigned architectures as composable JAX modules."""
+
+from repro.models.config import ModelConfig, ShapeConfig, SHAPES
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES"]

@@ -1,0 +1,113 @@
+"""Family-dispatched public model API: init / loss / prefill / decode.
+
+Everything downstream (trainer, serving engine, dry-run) goes through these
+five functions, so adding an architecture family means extending exactly
+this registry.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.sharding import constrain
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    if cfg.family == "encdec":
+        return tfm.init_encdec(key, cfg)
+    return tfm.init_decoder(key, cfg)
+
+
+def abstract_params(cfg: ModelConfig):
+    """Parameter ShapeDtypeStructs without allocating (dry-run path)."""
+    return jax.eval_shape(
+        lambda k: init_params(cfg, k), jax.random.key(0)
+    )
+
+
+def param_specs(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return tfm.encdec_specs(cfg)
+    return tfm.decoder_specs(cfg)
+
+
+def forward_logits(cfg: ModelConfig, params, batch: dict) -> jax.Array:
+    """Teacher-forced logits (B, S, V) for any family."""
+    if cfg.family == "encdec":
+        return tfm.encdec_forward(
+            params, cfg, batch["frames"], batch["tokens"]
+        )
+    return tfm.decoder_forward(
+        params, cfg, batch["tokens"],
+        vision_embeds=batch.get("vision"),
+    )
+
+
+def loss_fn(cfg: ModelConfig, params, batch: dict) -> jax.Array:
+    """Next-token cross entropy in f32 (with standard 1e-4 z-loss)."""
+    logits = forward_logits(cfg, params, batch)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, labels[..., None], axis=-1
+    )[..., 0]
+    nll = logz - gold
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    nll = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    zloss = jnp.sum((logz * mask) ** 2) / jnp.maximum(jnp.sum(mask), 1.0)
+    return nll + 1e-4 * zloss
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    if cfg.family == "encdec":
+        return tfm.init_encdec_cache(cfg, batch, max_len, cfg.audio_frames)
+    return tfm.init_decode_cache(cfg, batch, max_len)
+
+
+def prefill(cfg: ModelConfig, params, batch: dict,
+            max_len: Optional[int] = None):
+    """Prompt prefill -> (last-token logits (B, V), cache)."""
+    if cfg.family == "encdec":
+        return tfm.encdec_prefill(
+            params, cfg, batch["frames"], batch["tokens"], max_len=max_len
+        )
+    return tfm.decoder_prefill(
+        params, cfg, batch["tokens"],
+        vision_embeds=batch.get("vision"), max_len=max_len,
+    )
+
+
+def decode_step(cfg: ModelConfig, params, token: jax.Array, cache):
+    """One-token decode -> (logits (B, V), cache')."""
+    if cfg.family == "encdec":
+        return tfm.encdec_decode_step(params, cfg, token, cache)
+    return tfm.decoder_decode_step(params, cfg, token, cache)
+
+
+def make_batch(cfg: ModelConfig, key, batch: int, seq: int,
+               dtype=jnp.float32) -> dict:
+    """Random smoke-test batch with every family extra included."""
+    ks = jax.random.split(key, 3)
+    out = {
+        "tokens": jax.random.randint(ks[0], (batch, seq), 0, cfg.vocab_size),
+        "labels": jax.random.randint(ks[1], (batch, seq), 0, cfg.vocab_size),
+    }
+    from repro.models.layers import dtype_of
+    dt = dtype_of(cfg.dtype)
+    if cfg.family == "vlm":
+        out["vision"] = jax.random.normal(
+            ks[2], (batch, cfg.vision_tokens, cfg.vision_dim), dt
+        )
+    if cfg.family == "encdec":
+        out["frames"] = jax.random.normal(
+            ks[2], (batch, cfg.audio_frames, cfg.audio_dim), dt
+        )
+    return out

@@ -1,0 +1,379 @@
+"""Attention blocks: GQA/MQA/MHA, RoPE, sliding window, cross-attn, KV cache.
+
+Three interchangeable implementations (``cfg.attn_impl``):
+
+  einsum  — materialized logits; right for short sequences (train_4k).
+  chunked — pure-JAX online softmax over kv chunks (lax.scan): peak memory
+            O(Sq * chunk) instead of O(Sq * Skv); the dry-run/default path
+            for 32k prefill, and the CPU-runnable stand-in with identical
+            math to the Pallas kernel.
+  flash   — the Pallas TPU kernel (repro.kernels.flash_attention).
+
+Decode attends a single query over a (possibly sequence-sharded) cache with
+explicit length masking; sliding-window caches are ring buffers of size
+``window`` so long_500k memory is O(window), not O(context).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.models.layers import dtype_of, rope, trunc_normal
+from repro.sharding import constrain
+
+NEG_INF = -1e30
+
+
+def init_attn(key, cfg, cross: bool = False):
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = dtype_of(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": trunc_normal(ks[0], (d, H * hd), 1.0, dt),
+        "wk": trunc_normal(ks[1], (d, K * hd), 1.0, dt),
+        "wv": trunc_normal(ks[2], (d, K * hd), 1.0, dt),
+        "wo": trunc_normal(ks[3], (H * hd, d), 1.0, dt),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((H * hd,), dt)
+        p["bk"] = jnp.zeros((K * hd,), dt)
+        p["bv"] = jnp.zeros((K * hd,), dt)
+    return p
+
+
+def attn_specs(cfg, cross: bool = False):
+    p = {
+        "wq": ("fsdp", "tp"),
+        "wk": ("fsdp", "tp"),
+        "wv": ("fsdp", "tp"),
+        "wo": ("tp", "fsdp"),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = ("tp",)
+        p["bk"] = ("tp",)
+        p["bv"] = ("tp",)
+    return p
+
+
+def _qkv(p, x, kv_x, cfg):
+    B = x.shape[0]
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = kv_x @ p["wk"]
+    v = kv_x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, x.shape[1], H, hd)
+    k = k.reshape(B, kv_x.shape[1], K, hd)
+    v = v.reshape(B, kv_x.shape[1], K, hd)
+    return q, k, v
+
+
+def _einsum_attn(q, k, v, causal, window, lengths=None):
+    """q: (B,Sq,H,hd); k/v: (B,Skv,K,hd). Materialized-logit attention."""
+    B, Sq, H, hd = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    g = H // K
+    qh = q.reshape(B, Sq, K, g, hd)
+    logits = jnp.einsum(
+        "bqkgd,bskd->bkgqs", qh.astype(jnp.float32), k.astype(jnp.float32)
+    ) * (hd ** -0.5)
+    i = jnp.arange(Sq)[:, None] + (Skv - Sq)
+    j = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= j <= i
+    if window is not None:
+        mask &= j > i - window
+    if lengths is not None:
+        mask = mask[None] & (j[None] < lengths[:, None, None])
+        mask = mask[:, None, None]
+    else:
+        mask = mask[None, None, None]
+    logits = jnp.where(mask, logits, NEG_INF)
+    pattn = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", pattn, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def _chunked_attn(q, k, v, causal, window, chunk):
+    """Online-softmax over kv chunks; math identical to the flash kernel."""
+    B, Sq, H, hd = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    g = H // K
+    nchunk = -(-Skv // chunk)
+    pad = nchunk * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, nchunk, chunk, K, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nchunk, chunk, K, hd).transpose(1, 0, 2, 3, 4)
+
+    qh = (q.reshape(B, Sq, K, g, hd).astype(jnp.float32)) * (hd ** -0.5)
+    i_pos = jnp.arange(Sq) + (Skv - Sq)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        kb, vb, c_idx = inputs
+        j_pos = c_idx * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qh, kb.astype(jnp.float32))
+        mask = j_pos[None, :] < Skv
+        if causal:
+            mask = mask & (j_pos[None, :] <= i_pos[:, None])
+        if window is not None:
+            mask = mask & (j_pos[None, :] > i_pos[:, None] - window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p, vb.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, K, g, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, g, Sq), jnp.float32)
+    a0 = jnp.zeros((B, K, g, Sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kc, vc, jnp.arange(nchunk))
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)
+    return out.astype(q.dtype)
+
+
+def multihead_attention(
+    p,
+    x: jax.Array,
+    cfg,
+    positions: Optional[jax.Array] = None,
+    kv_x: Optional[jax.Array] = None,
+    causal: bool = True,
+    window: Optional[int] = None,
+    use_rope: bool = True,
+    impl: Optional[str] = None,
+    return_kv: bool = False,
+):
+    """Full-sequence attention (train / prefill / cross)."""
+    cross = kv_x is not None
+    manual_rs = getattr(cfg, "tp_mode", "megatron") == "megatron_rs" \
+        and not cross
+    if manual_rs:
+        # fused manual (bf16 seq-AG + qkv projections): the backward
+        # input-cotangent merge becomes the AG's transpose (bf16 RS)
+        from repro.sharding import tp_ag_matmuls
+        B = x.shape[0]
+        H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+        q, k, v = tp_ag_matmuls(x, p["wq"], p["wk"], p["wv"])
+        if "bq" in p:
+            q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+        S_full = q.shape[1]  # logical shapes are global: S_full == x.shape[1]
+        q = q.reshape(B, S_full, H, hd)
+        k = k.reshape(B, S_full, K, hd)
+        v = v.reshape(B, S_full, K, hd)
+        kv_src = x
+    else:
+        kv_src = kv_x if cross else x
+        q, k, v = _qkv(p, x, kv_src, cfg)
+    if use_rope and not cross:
+        if positions is None:
+            positions = jnp.arange(x.shape[1])[None, :]
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    if getattr(cfg, "tp_mode", "megatron") == "ulysses" and not cross:
+        # Ulysses-style: projections ran on the sequence-sharded stream;
+        # these constraints reshard seq->heads, which GSPMD lowers as an
+        # all-to-all of activation/tp bytes (vs. a full-activation
+        # all-reduce in the Megatron layout).
+        q = constrain(q, "dp", "sp", None, None)
+        k = constrain(k, "dp", "sp", None, None)
+        v = constrain(v, "dp", "sp", None, None)
+    q = constrain(q, "dp", None, "tp", None)
+    k = constrain(k, "dp", None, "tp", None)
+    v = constrain(v, "dp", None, "tp", None)
+
+    impl = impl or cfg.attn_impl
+    if impl == "auto":
+        impl = "einsum" if k.shape[1] <= 8192 else "chunked"
+    if impl == "flash":
+        o = flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=causal, window=window,
+            use_kernel=True,
+        ).transpose(0, 2, 1, 3)
+    elif impl == "chunked":
+        o = _chunked_attn(q, k, v, causal, window, cfg.attn_chunk)
+    else:
+        o = _einsum_attn(q, k, v, causal, window)
+    o = constrain(o, "dp", None, "tp", None)
+    if getattr(cfg, "tp_mode", "megatron") == "ulysses" and not cross:
+        o = constrain(o, "dp", "sp", None, None)  # a2a back to seq-sharded
+    B, S = o.shape[0], o.shape[1]
+    o2 = o.reshape(B, S, cfg.n_heads * cfg.hd)
+    if manual_rs:
+        from repro.sharding import tp_rs_matmul
+        out = tp_rs_matmul(o2, p["wo"])  # bf16 psum_scatter merge
+    else:
+        out = o2 @ p["wo"]
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+# ------------------------------------------------------------------ KV cache
+class KVCache(NamedTuple):
+    """KV cache; with cfg.kv_cache_dtype == "int8" the k/v planes are
+    symmetric per-(token, head) absmax-quantized int8 with bf16 scales —
+    halving the decode cells' dominant (cache-read) HBM term.
+    """
+
+    k: jax.Array      # (B, S_cache, K, hd) — ring buffer if windowed
+    v: jax.Array
+    k_scale: Any      # (B, S_cache, K, 1) or None
+    v_scale: Any
+    pos: jax.Array    # () int32 — absolute position of next token
+
+
+def _cache_is_q(cfg) -> bool:
+    return getattr(cfg, "kv_cache_dtype", "model") == "int8"
+
+
+def quantize_kv(x: jax.Array):
+    """(…, hd) -> int8 values + per-row absmax scale."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(scale, 1e-6)
+    q = jnp.clip(
+        jnp.round(x.astype(jnp.float32) / scale * 127.0), -127, 127
+    ).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype):
+    return (q.astype(jnp.float32) * (scale.astype(jnp.float32) / 127.0)
+            ).astype(dtype)
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, window: Optional[int] = None):
+    size = min(max_len, window) if window else max_len
+    dt = dtype_of(cfg.dtype)
+    shape = (batch, size, cfg.n_kv_heads, cfg.hd)
+    if _cache_is_q(cfg):
+        return KVCache(
+            k=jnp.zeros(shape, jnp.int8),
+            v=jnp.zeros(shape, jnp.int8),
+            k_scale=jnp.zeros(shape[:-1] + (1,), jnp.bfloat16),
+            v_scale=jnp.zeros(shape[:-1] + (1,), jnp.bfloat16),
+            pos=jnp.zeros((), jnp.int32),
+        )
+    return KVCache(
+        k=jnp.zeros(shape, dt),
+        v=jnp.zeros(shape, dt),
+        k_scale=None,
+        v_scale=None,
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def fill_kv_cache(cfg, k, v, max_len: int, window: Optional[int] = None):
+    """Build a cache from prefill keys/values (end-aligned for ring buffers)."""
+    if _cache_is_q(cfg):
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        base = fill_kv_cache(
+            cfg.replace(kv_cache_dtype="model"),
+            jnp.concatenate([kq.astype(jnp.bfloat16),
+                             jnp.broadcast_to(ks, kq.shape[:-1] + (1,)).astype(jnp.bfloat16)], -1),
+            jnp.concatenate([vq.astype(jnp.bfloat16),
+                             jnp.broadcast_to(vs, vq.shape[:-1] + (1,)).astype(jnp.bfloat16)], -1),
+            max_len, window,
+        )
+        return KVCache(
+            k=jnp.round(base.k[..., :-1] ).astype(jnp.int8),
+            v=jnp.round(base.v[..., :-1]).astype(jnp.int8),
+            k_scale=base.k[..., -1:],
+            v_scale=base.v[..., -1:],
+            pos=base.pos,
+        )
+    B, S = k.shape[:2]
+    size = min(max_len, window) if window else max_len
+    if S >= size:
+        kk, vv = k[:, S - size:], v[:, S - size:]
+        if window:
+            # ring-buffer layout: slot = pos % window
+            idx = (jnp.arange(S - size, S)) % size
+            kk = jnp.zeros((B, size) + k.shape[2:], k.dtype).at[:, idx].set(kk)
+            vv = jnp.zeros((B, size) + v.shape[2:], v.dtype).at[:, idx].set(vv)
+    else:
+        pad = size - S
+        if window:
+            idx = jnp.arange(S) % size
+            kk = jnp.zeros((B, size) + k.shape[2:], k.dtype).at[:, idx].set(k)
+            vv = jnp.zeros((B, size) + v.shape[2:], v.dtype).at[:, idx].set(v)
+        else:
+            kk = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return KVCache(k=kk, v=vv, k_scale=None, v_scale=None,
+                   pos=jnp.asarray(S, jnp.int32))
+
+
+def decode_attention(
+    p,
+    x_t: jax.Array,            # (B, 1, d)
+    cache: KVCache,
+    cfg,
+    window: Optional[int] = None,
+    use_rope: bool = True,
+) -> tuple[jax.Array, KVCache]:
+    """One decode step: append token kv, attend over the cache."""
+    B = x_t.shape[0]
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q, k_t, v_t = _qkv(p, x_t, x_t, cfg)
+    pos = cache.pos
+    if use_rope:
+        pp = jnp.full((B, 1), pos, jnp.int32)
+        q = rope(q, pp, cfg.rope_theta)
+        k_t = rope(k_t, pp, cfg.rope_theta)
+
+    size = cache.k.shape[1]
+    slot = (pos % size).astype(jnp.int32)
+    quantized = cache.k_scale is not None
+    if quantized:
+        kq, ks = quantize_kv(k_t)
+        vq, vs = quantize_kv(v_t)
+        ck = jax.lax.dynamic_update_slice_in_dim(cache.k, kq, slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache.v, vq, slot, axis=1)
+        cks = jax.lax.dynamic_update_slice_in_dim(
+            cache.k_scale, ks, slot, axis=1)
+        cvs = jax.lax.dynamic_update_slice_in_dim(
+            cache.v_scale, vs, slot, axis=1)
+        k_read = dequantize_kv(ck, cks, x_t.dtype)
+        v_read = dequantize_kv(cv, cvs, x_t.dtype)
+    else:
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k_t.astype(cache.k.dtype), slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v_t.astype(cache.v.dtype), slot, axis=1)
+        cks = cvs = None
+        k_read, v_read = ck, cv
+
+    g = H // K
+    qh = q.reshape(B, 1, K, g, hd).astype(jnp.float32) * (hd ** -0.5)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qh, k_read.astype(jnp.float32))
+    slots = jnp.arange(size)
+    if window:
+        valid = slots[None, :] <= jnp.minimum(pos, size - 1)
+        # ring buffer: every slot written so far is within the window
+        valid = jnp.broadcast_to(valid, (B, size))
+    else:
+        valid = jnp.broadcast_to(slots[None, :] <= pos, (B, size))
+    logits = jnp.where(valid[:, None, None, None, :], logits, NEG_INF)
+    pattn = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", pattn, v_read.astype(jnp.float32))
+    o = o.reshape(B, 1, H * hd).astype(x_t.dtype)
+    out = o @ p["wo"]
+    return out, KVCache(k=ck, v=cv, k_scale=cks, v_scale=cvs, pos=pos + 1)

@@ -1,0 +1,154 @@
+"""Shared building blocks: norms, RoPE, MLPs, initializers."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constrain
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------- init utils
+def trunc_normal(key, shape, scale, dtype):
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    std = (scale / max(fan_in, 1)) ** 0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * std).astype(
+        dtype
+    )
+
+
+def init_linear(key, d_in, d_out, dtype, bias: bool = False, scale=1.0):
+    p = {"w": trunc_normal(key, (d_in, d_out), scale, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# --------------------------------------------------------------------- norms
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------- RoPE
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- MLPs
+def init_mlp(key, cfg, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = dtype_of(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_type == "swiglu":
+        return {
+            "w_gate": trunc_normal(ks[0], (d, f), 1.0, dt),
+            "w_up": trunc_normal(ks[1], (d, f), 1.0, dt),
+            "w_down": trunc_normal(ks[2], (f, d), 1.0, dt),
+        }
+    p = {
+        "w_up": trunc_normal(ks[0], (d, f), 1.0, dt),
+        "w_down": trunc_normal(ks[1], (f, d), 1.0, dt),
+    }
+    if cfg.mlp_bias:
+        p["b_up"] = jnp.zeros((f,), dt)
+        p["b_down"] = jnp.zeros((d,), dt)
+    return p
+
+
+def mlp(p, x, cfg):
+    """Feed-forward block.
+
+    megatron: hidden activation sharded over tp (partial-sum all-reduce on
+    the down projection).  ulysses: the token stream stays sequence-sharded
+    and the (small) weights are gathered instead — no activation collective.
+    """
+    mode = getattr(cfg, "tp_mode", "megatron")
+    ulysses = mode == "ulysses"
+    manual_rs = mode == "megatron_rs"
+    hidden_spec = ("dp", "sp", None) if ulysses else ("dp", None, "tp")
+    if manual_rs:
+        from repro.sharding import tp_ag_matmuls, tp_rs_matmul
+        if cfg.mlp_type == "swiglu":
+            g, u = tp_ag_matmuls(x, p["w_gate"], p["w_up"])
+            h = jax.nn.silu(g) * u
+            h = constrain(h, *hidden_spec)
+            return tp_rs_matmul(h, p["w_down"])
+        (h,) = tp_ag_matmuls(x, p["w_up"])
+        if "b_up" in p:
+            h = h + p["b_up"]
+        h = jax.nn.gelu(h)
+        h = constrain(h, *hidden_spec)
+        y = tp_rs_matmul(h, p["w_down"])
+        if "b_down" in p:
+            y = y + p["b_down"]
+        return y
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+        h = constrain(h, *hidden_spec)
+        return h @ p["w_down"]
+    h = x @ p["w_up"]
+    if "b_up" in p:
+        h = h + p["b_up"]
+    h = jax.nn.gelu(h)
+    h = constrain(h, *hidden_spec)
+    if manual_rs:
+        y = tp_rs_matmul(h, p["w_down"])
+    else:
+        y = h @ p["w_down"]
+    if "b_down" in p:
+        y = y + p["b_down"]
+    return y
+
+
+def mlp_specs(cfg):
+    """Logical-axis tuples matching init_mlp's structure."""
+    if cfg.mlp_type == "swiglu":
+        return {
+            "w_gate": ("fsdp", "tp"),
+            "w_up": ("fsdp", "tp"),
+            "w_down": ("tp", "fsdp"),
+        }
+    p = {"w_up": ("fsdp", "tp"), "w_down": ("tp", "fsdp")}
+    if cfg.mlp_bias:
+        p["b_up"] = ("tp",)
+        p["b_down"] = (None,)
+    return p

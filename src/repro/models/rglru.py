@@ -1,0 +1,134 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The real-gated linear recurrent unit:
+
+  r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+  i_t = sigmoid(W_x x_t + b_x)          (input gate)
+  a_t = a^(c * r_t),  a = sigmoid(Lambda)  (per-channel, c = 8)
+  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` over the linear
+recurrence (log-depth on TPU, the standard lowering for linear RNNs) —
+the TPU-native analogue of the paper's custom "linear scan" kernel.
+Decode is the O(1) sequential update.
+
+The full recurrent block (Griffin):  x -> [gate branch: GeLU(W_g x)]
+                                      x -> [W_r x -> conv1d(4) -> RG-LRU]
+                                      out = W_o (gate * lru_out)
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dtype_of, trunc_normal
+
+C_CONST = 8.0
+
+
+class LRUCache(NamedTuple):
+    conv: jax.Array    # (B, W-1, lru_width)
+    h: jax.Array       # (B, lru_width) f32
+    pos: jax.Array
+
+
+def init_rglru_block(key, cfg):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    dt = dtype_of(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_gate": trunc_normal(ks[0], (d, w), 1.0, dt),
+        "w_rec": trunc_normal(ks[1], (d, w), 1.0, dt),
+        "conv_w": trunc_normal(ks[2], (4, w), 4.0, dt),
+        "conv_b": jnp.zeros((w,), dt),
+        "wa": trunc_normal(ks[3], (w, w), 1.0, dt),
+        "ba": jnp.zeros((w,), jnp.float32),
+        "wx": trunc_normal(ks[4], (w, w), 1.0, dt),
+        "bx": jnp.zeros((w,), jnp.float32),
+        # Lambda init so that a in (0.9, 0.999) (paper's init range)
+        "lam": jnp.log(
+            jnp.linspace(0.9, 0.999, w, dtype=jnp.float32)
+            / (1.0 - jnp.linspace(0.9, 0.999, w, dtype=jnp.float32))
+        ),
+        "w_out": trunc_normal(ks[5], (w, d), 1.0, dt),
+    }
+
+
+def rglru_specs(cfg):
+    return {
+        "w_gate": ("fsdp", "tp"),
+        "w_rec": ("fsdp", "tp"),
+        "conv_w": (None, "tp"),
+        "conv_b": ("tp",),
+        "wa": ("fsdp", "tp"),
+        "ba": ("tp",),
+        "wx": ("fsdp", "tp"),
+        "bx": ("tp",),
+        "lam": ("tp",),
+        "w_out": ("tp", "fsdp"),
+    }
+
+
+def _causal_conv(x, w, b, init_state=None):
+    W = w.shape[0]
+    if init_state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = init_state
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(W))
+    return out + b[None, None], xp[:, -(W - 1):]
+
+
+def _rglru_scan(x, a_t, h0=None):
+    """h_t = a_t h_{t-1} + x_t via associative scan.  x, a_t: (B, T, W)."""
+    if h0 is not None:
+        # absorb the initial state as a virtual first timestep
+        x = jnp.concatenate([h0[:, None], x], axis=1)
+        a_t = jnp.concatenate([jnp.ones_like(a_t[:, :1]), a_t], axis=1)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    a_cum, h = jax.lax.associative_scan(combine, (a_t, x), axis=1)
+    if h0 is not None:
+        h = h[:, 1:]
+    return h
+
+
+def rglru_block(p, u, cfg, cache: LRUCache | None = None):
+    """u: (B, T, d) -> (B, T, d) (+ cache')."""
+    gate = jax.nn.gelu(u @ p["w_gate"])
+    x = u @ p["w_rec"]
+    conv_init = cache.conv if cache is not None else None
+    x, conv_state = _causal_conv(x, p["conv_w"], p["conv_b"], conv_init)
+
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["wa"].astype(jnp.float32) + p["ba"])
+    i = jax.nn.sigmoid(xf @ p["wx"].astype(jnp.float32) + p["bx"])
+    log_a = -C_CONST * r * jax.nn.softplus(-p["lam"])  # log sigmoid(lam)^(c r)
+    a_t = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - a_t * a_t, 1e-12)) * (i * xf)
+
+    h0 = cache.h if cache is not None else None
+    h = _rglru_scan(gated_x, a_t, h0)
+    y = (h.astype(u.dtype) * gate) @ p["w_out"]
+    if cache is not None:
+        return y, LRUCache(conv=conv_state, h=h[:, -1].astype(jnp.float32),
+                           pos=cache.pos + u.shape[1])
+    return y, None
+
+
+def init_lru_cache(cfg, batch: int):
+    w = cfg.lru_width or cfg.d_model
+    return LRUCache(
+        conv=jnp.zeros((batch, 3, w), dtype_of(cfg.dtype)),
+        h=jnp.zeros((batch, w), jnp.float32),
+        pos=jnp.zeros((), jnp.int32),
+    )

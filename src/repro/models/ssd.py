@@ -1,0 +1,219 @@
+"""Mamba-2 SSD (state-space duality) layer — arXiv:2405.21060.
+
+The chunked SSD algorithm: split the sequence into chunks of Q tokens;
+within a chunk the quadratic ("attention-like") form is used, across chunks
+a recurrent state (H = heads, P = head_dim, N = d_state) is carried:
+
+  intra:  Y_diag = (C B^T ∘ L) X           (L = lower-tri decay products)
+  state:  h' = h * decay_chunk + B^T (X * decay_tail)
+  inter:  Y_off = C h_prev * decay_head
+
+Scalar-per-head A (Mamba-2 simplification); dt via softplus with learned
+bias; short causal conv on x/B/C; gated RMSNorm on the output (z branch).
+The chunk scan is ``lax.scan`` (sequential over T/Q chunks — the TPU-native
+replacement for the paper's fused CUDA kernel; Q=ssm_chunk keeps the
+quadratic block MXU-shaped).
+
+Decode carries (conv_state, ssm_state) — O(1) per token, which is what
+makes long_500k runnable for this family.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dtype_of, rms_norm, trunc_normal
+from repro.sharding import constrain
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array   # (B, W-1, conv_dim)
+    state: jax.Array  # (B, H, P, N) f32
+    pos: jax.Array
+
+
+def _conv_dim(cfg):
+    return cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+
+
+def init_ssd(key, cfg):
+    d = cfg.d_model
+    di = cfg.d_inner
+    H = cfg.ssm_heads
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    W = cfg.ssm_conv_width
+    dt = dtype_of(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    conv_dim = _conv_dim(cfg)
+    return {
+        # fused input projection: [z, x, B, C, dt]
+        "in_proj": trunc_normal(
+            ks[0], (d, 2 * di + 2 * G * N + H), 1.0, dt
+        ),
+        "conv_w": trunc_normal(ks[1], (W, conv_dim), 4.0, dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)
+        ),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_w": jnp.zeros((di,), dt),
+        "out_proj": trunc_normal(ks[2], (di, d), 1.0, dt),
+    }
+
+
+def ssd_specs(cfg):
+    return {
+        "in_proj": ("fsdp", "tp"),
+        "conv_w": (None, "tp"),
+        "conv_b": ("tp",),
+        "A_log": ("tp",),
+        "dt_bias": ("tp",),
+        "D": ("tp",),
+        "norm_w": ("tp",),
+        "out_proj": ("tp", "fsdp"),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    di = cfg.d_inner
+    G, N, H = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    x = zxbcdt[..., di:2 * di]
+    Bm = zxbcdt[..., 2 * di:2 * di + G * N]
+    Cm = zxbcdt[..., 2 * di + G * N:2 * di + 2 * G * N]
+    dt_raw = zxbcdt[..., 2 * di + 2 * G * N:]
+    return z, x, Bm, Cm, dt_raw
+
+
+def _causal_conv(xbc, w, b, init_state=None):
+    """Depthwise causal conv along time.  xbc: (B, T, C); w: (W, C)."""
+    W = w.shape[0]
+    if init_state is None:
+        pad = jnp.zeros((xbc.shape[0], W - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = init_state
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(
+        xp[:, i:i + xbc.shape[1]] * w[i][None, None, :] for i in range(W)
+    )
+    return jax.nn.silu(out + b[None, None, :]), xp[:, -(W - 1):]
+
+
+def ssd_chunked(cfg, x, Bm, Cm, dt, A, init_state=None):
+    """Chunked SSD scan.
+
+    x:  (B, T, H, P) — inputs per head.
+    Bm: (B, T, G, N); Cm: (B, T, G, N); dt: (B, T, H) (post-softplus).
+    A:  (H,) negative reals.
+    Returns y (B, T, H, P) and final state (B, H, P, N).
+    """
+    Bsz, T, H, Pd = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Q = min(cfg.ssm_chunk, T)
+    nc = -(-T // Q)
+    pad = nc * Q - T
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+
+    # reshape to chunks, scan axis first
+    xc = x.reshape(Bsz, nc, Q, H, Pd).transpose(1, 0, 2, 3, 4)
+    Bc = Bm.reshape(Bsz, nc, Q, G, N).transpose(1, 0, 2, 3, 4)
+    Cc = Cm.reshape(Bsz, nc, Q, G, N).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(Bsz, nc, Q, H).transpose(1, 0, 2, 3)
+
+    heads_per_group = H // G
+
+    def chunk_step(h_prev, inp):
+        xq, bq, cq, dtq = inp              # (B,Q,H,P), (B,Q,G,N), ., (B,Q,H)
+        dA = dtq * A[None, None, :]        # (B,Q,H) negative
+        cum = jnp.cumsum(dA, axis=1)       # segsum prefix
+        # L[i,j] = exp(cum_i - cum_j) for i >= j  (decay from j+1..i).
+        # Mask BEFORE the exp: the upper triangle holds large positive
+        # values whose exp overflows and poisons gradients through where.
+        Li = cum[:, :, None, :] - cum[:, None, :, :]     # (B,Q,Q,H)
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        L = jnp.exp(jnp.where(tri[None, :, :, None], Li, -1e30))
+
+        bqh = jnp.repeat(bq, heads_per_group, axis=2)     # (B,Q,H,N)
+        cqh = jnp.repeat(cq, heads_per_group, axis=2)
+        # intra-chunk (quadratic) term
+        scores = jnp.einsum("bihn,bjhn->bijh", cqh, bqh) * L
+        xdt = xq * dtq[..., None]                        # (B,Q,H,P)
+        y = jnp.einsum("bijh,bjhp->bihp", scores, xdt)
+        # inter-chunk: contribution of carried state
+        decay_head = jnp.exp(cum)                        # (B,Q,H)
+        y += jnp.einsum("bihn,bhpn->bihp", cqh, h_prev) * decay_head[..., None]
+        # state update
+        total = cum[:, -1, :]                            # (B,H)
+        decay_tail = jnp.exp(total[:, None, :] - cum)    # (B,Q,H)
+        h_new = h_prev * jnp.exp(total)[:, :, None, None] + jnp.einsum(
+            "bjhn,bjhp->bhpn", bqh * decay_tail[..., None], xdt
+        )
+        return h_new, y
+
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, Pd, N), jnp.float32)
+    h_fin, ys = jax.lax.scan(
+        chunk_step, init_state,
+        (xc.astype(jnp.float32), Bc.astype(jnp.float32),
+         Cc.astype(jnp.float32), dtc.astype(jnp.float32)),
+    )
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bsz, nc * Q, H, Pd)[:, :T]
+    return y, h_fin
+
+
+def ssd_layer(p, u, cfg, cache: SSMCache | None = None):
+    """Full Mamba-2 block. u: (B, T, d) -> (B, T, d) (+ cache')."""
+    Bsz, T, d = u.shape
+    H, Pd = cfg.ssm_heads, cfg.ssm_head_dim
+    di = cfg.d_inner
+
+    zxbcdt = u @ p["in_proj"]
+    z, x, Bm, Cm, dt_raw = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([x, Bm, Cm], axis=-1)
+    conv_init = cache.conv if cache is not None else None
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_init)
+    x = xbc[..., :di]
+    Bm = xbc[..., di:di + cfg.ssm_groups * cfg.ssm_state]
+    Cm = xbc[..., di + cfg.ssm_groups * cfg.ssm_state:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = x.reshape(Bsz, T, H, Pd)
+    Bh = Bm.reshape(Bsz, T, cfg.ssm_groups, cfg.ssm_state)
+    Ch = Cm.reshape(Bsz, T, cfg.ssm_groups, cfg.ssm_state)
+
+    init_state = cache.state if cache is not None else None
+    y, h_fin = ssd_chunked(cfg, xh, Bh, Ch, dt, A, init_state)
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(Bsz, T, di).astype(u.dtype)
+    y = constrain(y, "dp", None, "tp")
+    # gated RMSNorm (Mamba-2's "norm before gate" variant)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if cache is not None:
+        new_cache = SSMCache(conv=conv_state, state=h_fin,
+                             pos=cache.pos + T)
+        return out, new_cache
+    return out, None
+
+
+def init_ssm_cache(cfg, batch: int):
+    return SSMCache(
+        conv=jnp.zeros(
+            (batch, cfg.ssm_conv_width - 1, _conv_dim(cfg)),
+            dtype_of(cfg.dtype),
+        ),
+        state=jnp.zeros(
+            (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+            jnp.float32,
+        ),
+        pos=jnp.zeros((), jnp.int32),
+    )

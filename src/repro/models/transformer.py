@@ -1,0 +1,1019 @@
+"""Architecture assembly for all assigned families.
+
+Families and their layer layouts (all layer stacks are ``lax.scan`` over
+stacked parameter pytrees so the HLO stays compact at 32–80 layers, with
+per-block ``jax.checkpoint`` when cfg.remat):
+
+  dense / moe : scan over L identical decoder blocks (MoE replaces the MLP).
+  vlm         : scan over (L / cross_every) super-groups = [cross_every self
+                blocks (inner scan)] + 1 gated cross-attn block.
+  hybrid      : scan over (L // attn_every) super-groups = [(attn_every - 1)
+                RG-LRU blocks + 1 local-attention block]; leftover recurrent
+                blocks unrolled at the tail.
+  ssm         : scan over L Mamba-2 (SSD) blocks.
+  encdec      : encoder scan (bidirectional self) + decoder scan (causal
+                self + cross over encoder memory).
+
+Decode caches mirror the scan layout: leading dims match the stacked params
+so one ``lax.scan`` threads (params_layer, cache_layer) pairs per step.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as att
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssd as ssd_mod
+from repro.models.layers import (
+    dtype_of,
+    init_mlp,
+    mlp,
+    mlp_specs,
+    rms_norm,
+    trunc_normal,
+)
+from repro.sharding import constrain
+
+
+
+# ---------------------------------------------------------------- layer scan
+# Layer stacks normally lower as lax.scan (compact HLO).  XLA's HLO cost
+# analysis counts a while-loop body ONCE regardless of trip count, so the
+# roofline methodology (launch/roofline.py) re-lowers models under
+# ``unroll_layers()`` where every layer scan becomes a Python loop over
+# sliced stacked params — exact per-op accounting at small n_layers, then a
+# linear fit in L extrapolates to the full depth.
+import contextlib
+import threading
+
+_UNROLL_STATE = threading.local()
+
+
+@contextlib.contextmanager
+def unroll_layers():
+    prev = getattr(_UNROLL_STATE, "on", False)
+    _UNROLL_STATE.on = True
+    try:
+        yield
+    finally:
+        _UNROLL_STATE.on = prev
+
+
+def layer_scan(body, carry, xs, length=None):
+    """lax.scan over stacked layer params, or unrolled under unroll_layers."""
+    if not getattr(_UNROLL_STATE, "on", False):
+        return jax.lax.scan(body, carry, xs, length=length)
+    n = length if xs is None else jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        xi = None if xs is None else jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if all(y is None for y in ys):
+        return carry, None
+    stacked = jax.tree.map(lambda *z: jnp.stack(z), *ys)
+    return carry, stacked
+
+
+# =============================================================== init helpers
+def _stack_init(fn, key, n):
+    """vmap an init function over n layer keys -> stacked params."""
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def _zeros_like_spec(spec_tree):
+    return spec_tree
+
+
+# ============================================================= decoder blocks
+def init_decoder_block(key, cfg):
+    ks = jax.random.split(key, 4)
+    p = {
+        "attn_norm": jnp.zeros((cfg.d_model,), dtype_of(cfg.dtype)),
+        "attn": att.init_attn(ks[0], cfg),
+        "mlp_norm": jnp.zeros((cfg.d_model,), dtype_of(cfg.dtype)),
+    }
+    if cfg.n_experts:
+        p["moe"] = moe_mod.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = init_mlp(ks[2], cfg)
+    return p
+
+
+def decoder_block_specs(cfg):
+    p = {
+        "attn_norm": (None,),
+        "attn": att.attn_specs(cfg),
+        "mlp_norm": (None,),
+    }
+    if cfg.n_experts:
+        p["moe"] = moe_mod.moe_specs(cfg)
+    else:
+        p["mlp"] = mlp_specs(cfg)
+    return p
+
+
+def decoder_block(bp, x, cfg, positions, window=None):
+    """One pre-norm decoder block (full-sequence path).
+
+    With ``cfg.opt_collectives`` the sub-block outputs are constrained to
+    the sequence-sharded layout BEFORE the residual add, turning the TP
+    partial-sum all-reduce (full activation, f32 on the convert-hoisted
+    path) into a reduce-scatter whose per-device result is 1/tp of the
+    bytes; the post-norm activation is constrained in bf16 so the sequence
+    all-gather moves 2-byte words (see EXPERIMENTS.md §Perf).
+    """
+    ulysses = cfg.tp_mode in ("ulysses", "megatron_rs")
+    h = rms_norm(x, bp["attn_norm"], cfg.norm_eps)
+    if ulysses:
+        h = constrain(h, "dp", "sp", None)      # stay sequence-sharded
+    elif cfg.opt_collectives:
+        h = constrain(h, "dp", None, None)      # bf16 AG boundary
+    h = att.multihead_attention(
+        bp["attn"], h, cfg, positions=positions, window=window
+    )
+    if ulysses or cfg.opt_collectives:
+        h = constrain(h, "dp", "sp", None)      # RS boundary (1/tp bytes)
+    x = x + h
+    x = constrain(x, "dp", "sp", None)
+    h = rms_norm(x, bp["mlp_norm"], cfg.norm_eps)
+    if ulysses:
+        h = constrain(h, "dp", "sp", None)
+    elif cfg.opt_collectives:
+        h = constrain(h, "dp", None, None)
+    if cfg.n_experts:
+        h = moe_mod.moe_block(bp["moe"], h, cfg)
+    else:
+        h = mlp(bp["mlp"], h, cfg)
+    if ulysses or cfg.opt_collectives:
+        h = constrain(h, "dp", "sp", None)
+    x = x + h
+    return constrain(x, "dp", "sp", None)
+
+
+def decoder_block_decode(bp, x_t, cache, cfg, window=None):
+    h = rms_norm(x_t, bp["attn_norm"], cfg.norm_eps)
+    h, cache = att.decode_attention(bp["attn"], h, cache, cfg, window=window)
+    x_t = x_t + h
+    h = rms_norm(x_t, bp["mlp_norm"], cfg.norm_eps)
+    if cfg.n_experts:
+        h = moe_mod.moe_decode(bp["moe"], h, cfg)
+    else:
+        h = mlp(bp["mlp"], h, cfg)
+    return x_t + h, cache
+
+
+# ------------------------------------------------------------- cross blocks
+def init_cross_block(key, cfg):
+    return {
+        "norm": jnp.zeros((cfg.d_model,), dtype_of(cfg.dtype)),
+        "attn": att.init_attn(key, cfg, cross=True),
+        "gate": jnp.zeros((), jnp.float32),
+    }
+
+
+def cross_block_specs(cfg):
+    return {
+        "norm": (None,),
+        "attn": att.attn_specs(cfg, cross=True),
+        "gate": (),
+    }
+
+
+def cross_block(bp, x, memory, cfg):
+    h = rms_norm(x, bp["norm"], cfg.norm_eps)
+    h = att.multihead_attention(
+        bp["attn"], h, cfg, kv_x=memory, causal=False, use_rope=False,
+        impl="einsum",
+    )
+    return x + jnp.tanh(bp["gate"]).astype(x.dtype) * h
+
+
+def cross_block_cached(bp, x_t, mem_kv, cfg):
+    """Decode-path cross attention over precomputed memory K/V."""
+    mk, mv = mem_kv
+    B = x_t.shape[0]
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    h = rms_norm(x_t, bp["norm"], cfg.norm_eps)
+    q = (h @ bp["attn"]["wq"]).reshape(B, 1, K, H // K, hd)
+    logits = jnp.einsum(
+        "bqkgd,bskd->bkgqs", q.astype(jnp.float32) * (hd ** -0.5),
+        mk.astype(jnp.float32),
+    )
+    pa = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", pa, mv.astype(jnp.float32))
+    o = o.reshape(B, 1, H * hd).astype(x_t.dtype) @ bp["attn"]["wo"]
+    return x_t + jnp.tanh(bp["gate"]).astype(x_t.dtype) * o
+
+
+def cross_memory_kv(bp, memory, cfg):
+    B, S = memory.shape[:2]
+    K, hd = cfg.n_kv_heads, cfg.hd
+    mk = (memory @ bp["attn"]["wk"]).reshape(B, S, K, hd)
+    mv = (memory @ bp["attn"]["wv"]).reshape(B, S, K, hd)
+    return mk, mv
+
+
+# ------------------------------------------------------------ hybrid blocks
+def init_rec_block(key, cfg):
+    ks = jax.random.split(key, 2)
+    return {
+        "rec_norm": jnp.zeros((cfg.d_model,), dtype_of(cfg.dtype)),
+        "rec": rglru_mod.init_rglru_block(ks[0], cfg),
+        "mlp_norm": jnp.zeros((cfg.d_model,), dtype_of(cfg.dtype)),
+        "mlp": init_mlp(ks[1], cfg),
+    }
+
+
+def rec_block_specs(cfg):
+    return {
+        "rec_norm": (None,),
+        "rec": rglru_mod.rglru_specs(cfg),
+        "mlp_norm": (None,),
+        "mlp": mlp_specs(cfg),
+    }
+
+
+def rec_block(bp, x, cfg, cache=None):
+    h = rms_norm(x, bp["rec_norm"], cfg.norm_eps)
+    h, cache = rglru_mod.rglru_block(bp["rec"], h, cfg, cache)
+    x = x + h
+    h = rms_norm(x, bp["mlp_norm"], cfg.norm_eps)
+    x = x + mlp(bp["mlp"], h, cfg)
+    return constrain(x, "dp", "sp", None), cache
+
+
+# ---------------------------------------------------------------- ssm blocks
+def init_ssm_block(key, cfg):
+    return {
+        "norm": jnp.zeros((cfg.d_model,), dtype_of(cfg.dtype)),
+        "ssd": ssd_mod.init_ssd(key, cfg),
+    }
+
+
+def ssm_block_specs(cfg):
+    return {"norm": (None,), "ssd": ssd_mod.ssd_specs(cfg)}
+
+
+def ssm_block(bp, x, cfg, cache=None):
+    h = rms_norm(x, bp["norm"], cfg.norm_eps)
+    h, cache = ssd_mod.ssd_layer(bp["ssd"], h, cfg, cache)
+    return constrain(x + h, "dp", "sp", None), cache
+
+
+# ================================================================== assembly
+class Decoder(NamedTuple):
+    """Decoder-only model parameters (dense / moe / vlm / hybrid / ssm)."""
+
+    embed: jax.Array
+    blocks: Any
+    cross: Any          # vlm only (stacked cross blocks) else None
+    vision_proj: Any    # vlm only
+    tail: Any           # hybrid leftover blocks else None
+    final_norm: jax.Array
+    lm_head: Any        # None if tied
+
+
+def init_decoder(key, cfg) -> Decoder:
+    dt = dtype_of(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    embed = trunc_normal(ks[0], (cfg.vocab_size, cfg.d_model), 1.0, dt)
+    cross = None
+    vision_proj = None
+    tail = None
+
+    if cfg.family == "ssm":
+        blocks = _stack_init(
+            lambda k: init_ssm_block(k, cfg), ks[1], cfg.n_layers
+        )
+    elif cfg.family == "hybrid":
+        per = cfg.attn_every
+        n_super = cfg.n_layers // per
+        n_tail = cfg.n_layers - n_super * per
+
+        def init_super(k):
+            k1, k2 = jax.random.split(k)
+            return {
+                "recs": _stack_init(
+                    lambda kk: init_rec_block(kk, cfg), k1, per - 1
+                ),
+                "attn": init_decoder_block(k2, cfg),
+            }
+
+        blocks = _stack_init(init_super, ks[1], n_super)
+        tail = _stack_init(
+            lambda k: init_rec_block(k, cfg), ks[2], max(n_tail, 1)
+        )
+        if n_tail == 0:
+            tail = None
+    elif cfg.family == "vlm":
+        per = cfg.cross_every
+        n_groups = cfg.n_layers // per
+
+        def init_group(k):
+            return _stack_init(lambda kk: init_decoder_block(kk, cfg), k, per)
+
+        blocks = _stack_init(init_group, ks[1], n_groups)
+        cross = _stack_init(
+            lambda k: init_cross_block(k, cfg), ks[2], n_groups
+        )
+        vision_proj = trunc_normal(
+            ks[3], (cfg.vision_dim, cfg.d_model), 1.0, dt
+        )
+    else:  # dense / moe
+        blocks = _stack_init(
+            lambda k: init_decoder_block(k, cfg), ks[1], cfg.n_layers
+        )
+
+    final_norm = jnp.zeros((cfg.d_model,), dt)
+    lm_head = (
+        None
+        if cfg.tie_embeddings
+        else trunc_normal(ks[4], (cfg.d_model, cfg.vocab_size), 1.0, dt)
+    )
+    return Decoder(embed, blocks, cross, vision_proj, tail, final_norm, lm_head)
+
+
+def decoder_specs(cfg) -> Decoder:
+    """Logical-axis spec tree matching init_decoder (stacked dims get None)."""
+
+    def stack(spec_tree):
+        return jax.tree.map(
+            lambda s: (None,) + s,
+            spec_tree,
+            is_leaf=lambda s: isinstance(s, tuple)
+            and all(x is None or isinstance(x, str) for x in s),
+        )
+
+    cross = None
+    vision_proj = None
+    tail = None
+    if cfg.family == "ssm":
+        blocks = stack(ssm_block_specs(cfg))
+    elif cfg.family == "hybrid":
+        blocks = stack(
+            {"recs": stack(rec_block_specs(cfg)),
+             "attn": decoder_block_specs(cfg)}
+        )
+        n_tail = cfg.n_layers - (cfg.n_layers // cfg.attn_every) * cfg.attn_every
+        tail = stack(rec_block_specs(cfg)) if n_tail else None
+    elif cfg.family == "vlm":
+        blocks = stack(stack(decoder_block_specs(cfg)))
+        cross = stack(cross_block_specs(cfg))
+        vision_proj = ("fsdp", "tp")
+    else:
+        blocks = stack(decoder_block_specs(cfg))
+    return Decoder(
+        embed=("tp", "fsdp"),
+        blocks=blocks,
+        cross=cross,
+        vision_proj=vision_proj,
+        tail=tail,
+        final_norm=(None,),
+        lm_head=None if cfg.tie_embeddings else ("fsdp", "tp"),
+    )
+
+
+def _maybe_remat(fn, cfg):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _lm_logits(params: Decoder, x, cfg):
+    x = rms_norm(x, params.final_norm, cfg.norm_eps)
+    head = params.lm_head if params.lm_head is not None else params.embed.T
+    logits = x @ head
+    return constrain(logits, "dp", None, "tp")
+
+
+def decoder_forward(
+    params: Decoder,
+    cfg,
+    tokens: jax.Array,
+    vision_embeds: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Full-sequence forward -> logits (B, S, V)."""
+    B, S = tokens.shape
+    x = params.embed[tokens]
+    x = constrain(x, "dp", "sp", None)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    window = cfg.sliding_window
+
+    if cfg.family == "ssm":
+        def body(x, bp):
+            fn = _maybe_remat(
+                lambda bp_, x_: ssm_block(bp_, x_, cfg)[0], cfg
+            )
+            return fn(bp, x), None
+
+        x, _ = layer_scan(body, x, params.blocks)
+
+    elif cfg.family == "hybrid":
+        def body(x, bp):
+            def inner(bp_, x_):
+                def rec_body(xx, rp):
+                    y, _ = rec_block(rp, xx, cfg)
+                    return y, None
+
+                x_, _ = layer_scan(rec_body, x_, bp_["recs"])
+                return decoder_block(
+                    bp_["attn"], x_, cfg, positions, window=cfg.local_window
+                )
+
+            return _maybe_remat(inner, cfg)(bp, x), None
+
+        x, _ = layer_scan(body, x, params.blocks)
+        if params.tail is not None:
+            def tail_body(xx, rp):
+                fn = _maybe_remat(lambda rp_, x_: rec_block(rp_, x_, cfg)[0], cfg)
+                return fn(rp, xx), None
+
+            x, _ = layer_scan(tail_body, x, params.tail)
+
+    elif cfg.family == "vlm":
+        memory = vision_embeds @ params.vision_proj
+        memory = constrain(memory, "dp", None, None)
+
+        def body(x, bps):
+            bp, cp = bps
+
+            def inner(bp_, cp_, x_):
+                def self_body(xx, sp):
+                    return decoder_block(sp, xx, cfg, positions, window), None
+
+                x_, _ = layer_scan(self_body, x_, bp_)
+                return cross_block(cp_, x_, memory, cfg)
+
+            return _maybe_remat(inner, cfg)(bp, cp, x), None
+
+        x, _ = layer_scan(body, x, (params.blocks, params.cross))
+
+    else:  # dense / moe
+        def body(x, bp):
+            fn = _maybe_remat(
+                lambda bp_, x_: decoder_block(bp_, x_, cfg, positions, window),
+                cfg,
+            )
+            return fn(bp, x), None
+
+        x, _ = layer_scan(body, x, params.blocks)
+
+    return _lm_logits(params, x, cfg)
+
+
+# =========================================================== caches & decode
+class DecodeCache(NamedTuple):
+    self_kv: Any     # family-dependent stacked cache
+    cross_kv: Any    # vlm: (n_groups, B, vis, K, hd) pair; encdec similar
+    pos: jax.Array
+
+
+def init_decode_cache(cfg, batch: int, max_len: int) -> DecodeCache:
+    window = cfg.sliding_window
+
+    def kv(n, win):
+        base = jax.vmap(
+            lambda _: att.init_kv_cache(cfg, batch, max_len, win)
+        )(jnp.arange(n))
+        return base._replace(pos=jnp.zeros((n,), jnp.int32))
+
+    if cfg.family == "ssm":
+        self_kv = jax.vmap(lambda _: ssd_mod.init_ssm_cache(cfg, batch))(
+            jnp.arange(cfg.n_layers)
+        )
+        cross = None
+    elif cfg.family == "hybrid":
+        per = cfg.attn_every
+        n_super = cfg.n_layers // per
+        n_tail = cfg.n_layers - n_super * per
+        recs = jax.vmap(
+            lambda _: jax.vmap(
+                lambda __: rglru_mod.init_lru_cache(cfg, batch)
+            )(jnp.arange(per - 1))
+        )(jnp.arange(n_super))
+        self_kv = {
+            "recs": recs,
+            "attn": kv(n_super, cfg.local_window),
+            "tail": (
+                jax.vmap(lambda _: rglru_mod.init_lru_cache(cfg, batch))(
+                    jnp.arange(n_tail)
+                )
+                if n_tail
+                else None
+            ),
+        }
+        cross = None
+    elif cfg.family == "vlm":
+        n_groups = cfg.n_layers // cfg.cross_every
+        base = jax.vmap(jax.vmap(
+            lambda _: att.init_kv_cache(cfg, batch, max_len, None)
+        ))(jnp.zeros((n_groups, cfg.cross_every)))
+        self_kv = {
+            "self": base._replace(
+                pos=jnp.zeros((n_groups, cfg.cross_every), jnp.int32)
+            )
+        }
+        cross = (
+            jnp.zeros(
+                (n_groups, batch, cfg.vision_tokens, cfg.n_kv_heads, cfg.hd),
+                dtype_of(cfg.dtype),
+            ),
+            jnp.zeros(
+                (n_groups, batch, cfg.vision_tokens, cfg.n_kv_heads, cfg.hd),
+                dtype_of(cfg.dtype),
+            ),
+        )
+    else:
+        self_kv = kv(cfg.n_layers, window)
+        cross = None
+    return DecodeCache(
+        self_kv=self_kv, cross_kv=cross, pos=jnp.zeros((), jnp.int32)
+    )
+
+
+def decoder_decode_step(
+    params: Decoder, cfg, token: jax.Array, cache: DecodeCache
+):
+    """One decode step.  token: (B,) int32 -> logits (B, V)."""
+    B = token.shape[0]
+    x = params.embed[token][:, None, :]  # (B, 1, d)
+    window = cfg.sliding_window
+    pos = cache.pos
+
+    if cfg.family == "ssm":
+        def body(x_t, inp):
+            bp, c = inp
+            h = rms_norm(x_t, bp["norm"], cfg.norm_eps)
+            h, c2 = ssd_mod.ssd_layer(bp["ssd"], h, cfg, c)
+            return x_t + h, c2
+
+        x, new_kv = layer_scan(body, x, (params.blocks, cache.self_kv))
+        new_cache = DecodeCache(new_kv, None, pos + 1)
+
+    elif cfg.family == "hybrid":
+        def body(x_t, inp):
+            bp, recs_c, kv_c = inp
+
+            def rec_body(xx, rp_c):
+                rp, c = rp_c
+                h = rms_norm(xx, rp["rec_norm"], cfg.norm_eps)
+                h, c2 = rglru_mod.rglru_block(rp["rec"], h, cfg, c)
+                xx = xx + h
+                h = rms_norm(xx, rp["mlp_norm"], cfg.norm_eps)
+                return xx + mlp(rp["mlp"], h, cfg), c2
+
+            x_t, recs_c2 = layer_scan(
+                rec_body, x_t, (bp["recs"], recs_c)
+            )
+            x_t, kv_c2 = decoder_block_decode(
+                bp["attn"], x_t, kv_c, cfg, window=cfg.local_window
+            )
+            return x_t, (recs_c2, kv_c2)
+
+        x, (recs2, kv2) = layer_scan(
+            body, x,
+            (params.blocks, cache.self_kv["recs"], cache.self_kv["attn"]),
+        )
+        tail2 = cache.self_kv.get("tail")
+        if params.tail is not None:
+            def tail_body(xx, inp):
+                rp, c = inp
+                h = rms_norm(xx, rp["rec_norm"], cfg.norm_eps)
+                h, c2 = rglru_mod.rglru_block(rp["rec"], h, cfg, c)
+                xx = xx + h
+                h = rms_norm(xx, rp["mlp_norm"], cfg.norm_eps)
+                return xx + mlp(rp["mlp"], h, cfg), c2
+
+            x, tail2 = layer_scan(
+                tail_body, x, (params.tail, cache.self_kv["tail"])
+            )
+        new_cache = DecodeCache(
+            {"recs": recs2, "attn": kv2, "tail": tail2}, None, pos + 1
+        )
+
+    elif cfg.family == "vlm":
+        mem_k, mem_v = cache.cross_kv
+
+        def body(x_t, inp):
+            bp, cp, kv_c, mk, mv = inp
+
+            def self_body(xx, sp_c):
+                sp, c = sp_c
+                return decoder_block_decode(sp, xx, c, cfg, window)
+
+            x_t, kv2 = layer_scan(self_body, x_t, (bp, kv_c))
+            x_t = cross_block_cached(cp, x_t, (mk, mv), cfg)
+            return x_t, kv2
+
+        kvs = cache.self_kv["self"]
+        x, kv2 = layer_scan(
+            body, x, (params.blocks, params.cross, kvs, mem_k, mem_v)
+        )
+        new_cache = DecodeCache({"self": kv2}, cache.cross_kv, pos + 1)
+
+    else:
+        def body(x_t, inp):
+            bp, c = inp
+            return decoder_block_decode(bp, x_t, c, cfg, window=window)
+
+        x, kv2 = layer_scan(body, x, (params.blocks, cache.self_kv))
+        new_cache = DecodeCache(kv2, None, pos + 1)
+
+    logits = _lm_logits(params, x, cfg)[:, 0]
+    return logits, new_cache
+
+
+# ==================================================================== prefill
+def decoder_block_prefill(bp, x, cfg, positions, window=None):
+    """Decoder block that also returns (k, v) for cache construction."""
+    h = rms_norm(x, bp["attn_norm"], cfg.norm_eps)
+    h, (k, v) = att.multihead_attention(
+        bp["attn"], h, cfg, positions=positions, window=window,
+        return_kv=True,
+    )
+    x = x + h
+    x = constrain(x, "dp", "sp", None)
+    h = rms_norm(x, bp["mlp_norm"], cfg.norm_eps)
+    if cfg.n_experts:
+        h = moe_mod.moe_block(bp["moe"], h, cfg)
+    else:
+        h = mlp(bp["mlp"], h, cfg)
+    return constrain(x + h, "dp", "sp", None), (k, v)
+
+
+def decoder_prefill(
+    params: Decoder,
+    cfg,
+    tokens: jax.Array,
+    vision_embeds: Optional[jax.Array] = None,
+    max_len: Optional[int] = None,
+):
+    """Prefill: forward the prompt, return (last-token logits, DecodeCache)."""
+    B, S = tokens.shape
+    max_len = max_len or S
+    x = params.embed[tokens]
+    x = constrain(x, "dp", "sp", None)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    window = cfg.sliding_window
+
+    def to_cache(k, v, win):
+        return att.fill_kv_cache(cfg, k, v, max_len, win)
+
+    if cfg.family == "ssm":
+        cache0 = init_decode_cache(cfg, B, max_len)
+
+        def body(x, inp):
+            bp, c = inp
+
+            def inner(bp_, c_, x_):
+                h = rms_norm(x_, bp_["norm"], cfg.norm_eps)
+                h, c2 = ssd_mod.ssd_layer(bp_["ssd"], h, cfg, c_)
+                return constrain(x_ + h, "dp", "sp", None), c2
+
+            x, c2 = _maybe_remat(inner, cfg)(bp, c, x)
+            return x, c2
+
+        x, new_kv = layer_scan(body, x, (params.blocks, cache0.self_kv))
+        cache = DecodeCache(new_kv, None, jnp.asarray(S, jnp.int32))
+
+    elif cfg.family == "hybrid":
+        cache0 = init_decode_cache(cfg, B, max_len)
+
+        def body(x, inp):
+            bp, recs_c = inp
+
+            def inner(bp_, rc_, x_):
+                def rec_body(xx, rp_c):
+                    rp, c = rp_c
+                    y, c2 = rec_block(rp, xx, cfg, c)
+                    return y, c2
+
+                x_, rc2 = layer_scan(rec_body, x_, (bp_["recs"], rc_))
+                y, (k, v) = decoder_block_prefill(
+                    bp_["attn"], x_, cfg, positions, window=cfg.local_window
+                )
+                return y, (rc2, k, v)
+
+            x, out = _maybe_remat(inner, cfg)(bp, recs_c, x)
+            return x, out
+
+        x, (recs2, ks, vs) = layer_scan(
+            body, x, (params.blocks, cache0.self_kv["recs"])
+        )
+        kv2 = jax.vmap(lambda k, v: to_cache(k, v, cfg.local_window))(ks, vs)
+        tail2 = cache0.self_kv["tail"]
+        if params.tail is not None:
+            def tail_body(xx, inp):
+                rp, c = inp
+                y, c2 = rec_block(rp, xx, cfg, c)
+                return y, c2
+
+            x, tail2 = layer_scan(
+                tail_body, x, (params.tail, cache0.self_kv["tail"])
+            )
+        cache = DecodeCache(
+            {"recs": recs2, "attn": kv2, "tail": tail2},
+            None, jnp.asarray(S, jnp.int32),
+        )
+
+    elif cfg.family == "vlm":
+        memory = vision_embeds @ params.vision_proj
+        memory = constrain(memory, "dp", None, None)
+
+        def body(x, inp):
+            bp, cp = inp
+
+            def inner(bp_, cp_, x_):
+                def self_body(xx, sp):
+                    y, kv = decoder_block_prefill(sp, xx, cfg, positions, window)
+                    return y, kv
+
+                x_, (ks, vs) = layer_scan(self_body, x_, bp_)
+                x_ = cross_block(cp_, x_, memory, cfg)
+                mk, mv = cross_memory_kv(cp_, memory, cfg)
+                return x_, (ks, vs, mk, mv)
+
+            x, out = _maybe_remat(inner, cfg)(bp, cp, x)
+            return x, out
+
+        x, (ks, vs, mks, mvs) = layer_scan(
+            body, x, (params.blocks, params.cross)
+        )
+        kv2 = jax.vmap(jax.vmap(lambda k, v: to_cache(k, v, window)))(ks, vs)
+        cache = DecodeCache(
+            {"self": kv2}, (mks, mvs), jnp.asarray(S, jnp.int32)
+        )
+
+    else:  # dense / moe
+        def body(x, bp):
+            fn = _maybe_remat(
+                lambda bp_, x_: decoder_block_prefill(
+                    bp_, x_, cfg, positions, window
+                ),
+                cfg,
+            )
+            x, kv = fn(bp, x)
+            return x, kv
+
+        x, (ks, vs) = layer_scan(body, x, params.blocks)
+        kv2 = jax.vmap(lambda k, v: to_cache(k, v, window))(ks, vs)
+        cache = DecodeCache(kv2, None, jnp.asarray(S, jnp.int32))
+
+    logits = _lm_logits(params, x[:, -1:, :], cfg)[:, 0]
+    return logits, cache
+
+
+# ==================================================================== enc-dec
+class EncDec(NamedTuple):
+    """Encoder-decoder model (seamless-m4t family; audio frontend stubbed)."""
+
+    audio_proj: jax.Array          # (audio_dim, d)
+    enc_blocks: Any
+    enc_norm: jax.Array
+    embed: jax.Array               # decoder token embeddings
+    dec_blocks: Any                # self + cross + mlp
+    final_norm: jax.Array
+    lm_head: Any
+
+
+def init_enc_block(key, cfg):
+    ks = jax.random.split(key, 2)
+    return {
+        "attn_norm": jnp.zeros((cfg.d_model,), dtype_of(cfg.dtype)),
+        "attn": att.init_attn(ks[0], cfg),
+        "mlp_norm": jnp.zeros((cfg.d_model,), dtype_of(cfg.dtype)),
+        "mlp": init_mlp(ks[1], cfg),
+    }
+
+
+def init_dec_block(key, cfg):
+    ks = jax.random.split(key, 3)
+    return {
+        "attn_norm": jnp.zeros((cfg.d_model,), dtype_of(cfg.dtype)),
+        "attn": att.init_attn(ks[0], cfg),
+        "cross_norm": jnp.zeros((cfg.d_model,), dtype_of(cfg.dtype)),
+        "cross": att.init_attn(ks[1], cfg, cross=True),
+        "mlp_norm": jnp.zeros((cfg.d_model,), dtype_of(cfg.dtype)),
+        "mlp": init_mlp(ks[2], cfg),
+    }
+
+
+def init_encdec(key, cfg) -> EncDec:
+    dt = dtype_of(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    return EncDec(
+        audio_proj=trunc_normal(ks[0], (cfg.audio_dim, cfg.d_model), 1.0, dt),
+        enc_blocks=_stack_init(
+            lambda k: init_enc_block(k, cfg), ks[1], cfg.encoder_layers
+        ),
+        enc_norm=jnp.zeros((cfg.d_model,), dt),
+        embed=trunc_normal(ks[2], (cfg.vocab_size, cfg.d_model), 1.0, dt),
+        dec_blocks=_stack_init(
+            lambda k: init_dec_block(k, cfg), ks[3], cfg.n_layers
+        ),
+        final_norm=jnp.zeros((cfg.d_model,), dt),
+        lm_head=trunc_normal(ks[4], (cfg.d_model, cfg.vocab_size), 1.0, dt),
+    )
+
+
+def encdec_specs(cfg) -> EncDec:
+    def stack(spec_tree):
+        return jax.tree.map(
+            lambda s: (None,) + s,
+            spec_tree,
+            is_leaf=lambda s: isinstance(s, tuple)
+            and all(x is None or isinstance(x, str) for x in s),
+        )
+
+    enc_spec = {
+        "attn_norm": (None,),
+        "attn": att.attn_specs(cfg),
+        "mlp_norm": (None,),
+        "mlp": mlp_specs(cfg),
+    }
+    dec_spec = {
+        "attn_norm": (None,),
+        "attn": att.attn_specs(cfg),
+        "cross_norm": (None,),
+        "cross": att.attn_specs(cfg, cross=True),
+        "mlp_norm": (None,),
+        "mlp": mlp_specs(cfg),
+    }
+    return EncDec(
+        audio_proj=("fsdp", "tp"),
+        enc_blocks=stack(enc_spec),
+        enc_norm=(None,),
+        embed=("tp", "fsdp"),
+        dec_blocks=stack(dec_spec),
+        final_norm=(None,),
+        lm_head=("fsdp", "tp"),
+    )
+
+
+def encode_audio(params: EncDec, cfg, frames: jax.Array) -> jax.Array:
+    """frames: (B, T_frames, audio_dim) stub embeddings -> memory (B,T,d)."""
+    x = frames @ params.audio_proj
+    x = constrain(x, "dp", "sp", None)
+    positions = jnp.broadcast_to(
+        jnp.arange(x.shape[1])[None], x.shape[:2]
+    )
+
+    def body(x, bp):
+        def inner(bp_, x_):
+            h = rms_norm(x_, bp_["attn_norm"], cfg.norm_eps)
+            h = att.multihead_attention(
+                bp_["attn"], h, cfg, positions=positions, causal=False
+            )
+            x_ = x_ + h
+            h = rms_norm(x_, bp_["mlp_norm"], cfg.norm_eps)
+            return constrain(x_ + mlp(bp_["mlp"], h, cfg), "dp", "sp", None)
+
+        return _maybe_remat(inner, cfg)(bp, x), None
+
+    x, _ = layer_scan(body, x, params.enc_blocks)
+    return rms_norm(x, params.enc_norm, cfg.norm_eps)
+
+
+def encdec_forward(
+    params: EncDec, cfg, frames: jax.Array, tokens: jax.Array
+) -> jax.Array:
+    """Teacher-forced decoder logits (B, S, V)."""
+    memory = encode_audio(params, cfg, frames)
+    B, S = tokens.shape
+    x = params.embed[tokens]
+    x = constrain(x, "dp", "sp", None)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(x, bp):
+        def inner(bp_, x_):
+            h = rms_norm(x_, bp_["attn_norm"], cfg.norm_eps)
+            h = att.multihead_attention(
+                bp_["attn"], h, cfg, positions=positions, causal=True
+            )
+            x_ = x_ + h
+            h = rms_norm(x_, bp_["cross_norm"], cfg.norm_eps)
+            h = att.multihead_attention(
+                bp_["cross"], h, cfg, kv_x=memory, causal=False,
+                use_rope=False, impl="einsum",
+            )
+            x_ = x_ + h
+            h = rms_norm(x_, bp_["mlp_norm"], cfg.norm_eps)
+            return constrain(x_ + mlp(bp_["mlp"], h, cfg), "dp", "sp", None)
+
+        return _maybe_remat(inner, cfg)(bp, x), None
+
+    x, _ = layer_scan(body, x, params.dec_blocks)
+    x = rms_norm(x, params.final_norm, cfg.norm_eps)
+    logits = x @ params.lm_head
+    return constrain(logits, "dp", None, "tp")
+
+
+class EncDecCache(NamedTuple):
+    self_kv: att.KVCache   # stacked (L, ...)
+    cross_k: jax.Array     # (L, B, T_frames, K, hd)
+    cross_v: jax.Array
+    pos: jax.Array
+
+
+def encdec_prefill(
+    params: EncDec, cfg, frames: jax.Array, tokens: jax.Array,
+    max_len: Optional[int] = None,
+):
+    """Encode audio + prefill decoder prompt -> (logits, cache)."""
+    memory = encode_audio(params, cfg, frames)
+    B, S = tokens.shape
+    max_len = max_len or S
+    x = params.embed[tokens]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(x, bp):
+        def inner(bp_, x_):
+            h = rms_norm(x_, bp_["attn_norm"], cfg.norm_eps)
+            h, (k, v) = att.multihead_attention(
+                bp_["attn"], h, cfg, positions=positions, causal=True,
+                return_kv=True,
+            )
+            x_ = x_ + h
+            h = rms_norm(x_, bp_["cross_norm"], cfg.norm_eps)
+            h = att.multihead_attention(
+                bp_["cross"], h, cfg, kv_x=memory, causal=False,
+                use_rope=False, impl="einsum",
+            )
+            x_ = x_ + h
+            K, hd = cfg.n_kv_heads, cfg.hd
+            mk = (memory @ bp_["cross"]["wk"]).reshape(
+                B, memory.shape[1], K, hd
+            )
+            mv = (memory @ bp_["cross"]["wv"]).reshape(
+                B, memory.shape[1], K, hd
+            )
+            h = rms_norm(x_, bp_["mlp_norm"], cfg.norm_eps)
+            return x_ + mlp(bp_["mlp"], h, cfg), (k, v, mk, mv)
+
+        x, out = _maybe_remat(inner, cfg)(bp, x)
+        return x, out
+
+    x, (ks, vs, mks, mvs) = layer_scan(body, x, params.dec_blocks)
+    self_kv = jax.vmap(
+        lambda k, v: att.fill_kv_cache(cfg, k, v, max_len, None)
+    )(ks, vs)
+    x = rms_norm(x[:, -1:, :], params.final_norm, cfg.norm_eps)
+    logits = (x @ params.lm_head)[:, 0]
+    cache = EncDecCache(self_kv, mks, mvs, jnp.asarray(S, jnp.int32))
+    return logits, cache
+
+
+def init_encdec_cache(cfg, batch: int, max_len: int, n_frames: int):
+    dt = dtype_of(cfg.dtype)
+    L = cfg.n_layers
+    K, hd = cfg.n_kv_heads, cfg.hd
+    return EncDecCache(
+        self_kv=att.KVCache(
+            k=jnp.zeros((L, batch, max_len, K, hd), dt),
+            v=jnp.zeros((L, batch, max_len, K, hd), dt),
+            pos=jnp.zeros((L,), jnp.int32),
+        ),
+        cross_k=jnp.zeros((L, batch, n_frames, K, hd), dt),
+        cross_v=jnp.zeros((L, batch, n_frames, K, hd), dt),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def encdec_decode_step(
+    params: EncDec, cfg, token: jax.Array, cache: EncDecCache
+):
+    B = token.shape[0]
+    x = params.embed[token][:, None, :]
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+
+    def body(x_t, inp):
+        bp, c, mk, mv = inp
+        h = rms_norm(x_t, bp["attn_norm"], cfg.norm_eps)
+        h, c2 = att.decode_attention(bp["attn"], h, c, cfg)
+        x_t = x_t + h
+        h = rms_norm(x_t, bp["cross_norm"], cfg.norm_eps)
+        q = (h @ bp["cross"]["wq"]).reshape(B, 1, K, H // K, hd)
+        logit = jnp.einsum(
+            "bqkgd,bskd->bkgqs", q.astype(jnp.float32) * (hd ** -0.5),
+            mk.astype(jnp.float32),
+        )
+        pa = jax.nn.softmax(logit, axis=-1)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", pa, mv.astype(jnp.float32))
+        o = o.reshape(B, 1, H * hd).astype(x_t.dtype) @ bp["cross"]["wo"]
+        x_t = x_t + o
+        h = rms_norm(x_t, bp["mlp_norm"], cfg.norm_eps)
+        return x_t + mlp(bp["mlp"], h, cfg), c2
+
+    x, kv2 = layer_scan(
+        body, x, (params.dec_blocks, cache.self_kv, cache.cross_k,
+                  cache.cross_v)
+    )
+    x = rms_norm(x, params.final_norm, cfg.norm_eps)
+    logits = (x @ params.lm_head)[:, 0]
+    return logits, EncDecCache(kv2, cache.cross_k, cache.cross_v,
+                               cache.pos + 1)

@@ -1,0 +1,8 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedule import warmup_cosine
+from repro.optim.compression import ef_topk_compress, ef_state_init
+
+__all__ = [
+    "AdamWState", "adamw_init", "adamw_update", "warmup_cosine",
+    "ef_topk_compress", "ef_state_init",
+]

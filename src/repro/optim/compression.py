@@ -1,0 +1,45 @@
+"""Error-feedback top-k gradient compression (distributed-optimization trick).
+
+Before the data-parallel all-reduce, each gradient tensor is sparsified to
+its top-k fraction by magnitude; the residual (what was dropped) is carried
+in an error-feedback accumulator and added back next step (Stich et al.;
+1-bit Adam lineage).  On TPU pjit meshes the all-reduce is implicit, so the
+bandwidth win applies when the trainer runs its gradient sync through the
+shard_map DP path; the correctness contract (convergence on a small task)
+is tested either way in tests/test_optim.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_state_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _topk_sparsify(g: jax.Array, ratio: float) -> jax.Array:
+    flat = g.reshape(-1)
+    k = max(1, int(flat.shape[0] * ratio))
+    if k >= flat.shape[0]:
+        return g
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    return jnp.where(jnp.abs(g) >= thresh, g, 0.0)
+
+
+def ef_topk_compress(grads, ef_state, ratio: float = 0.1):
+    """Returns (compressed_grads, new_ef_state)."""
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        sparse = _topk_sparsify(g32, ratio)
+        return sparse.astype(g.dtype), g32 - sparse
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(ef_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (
+        tdef.unflatten([o[0] for o in out]),
+        tdef.unflatten([o[1] for o in out]),
+    )

@@ -1,0 +1,60 @@
+"""Batched serving engine: prefill + jitted decode loop.
+
+The engine batches requests (left-padding-free: equal-length prompt slabs;
+production continuous batching composes request slabs per step), prefills
+once, and steps the jitted decode function.  ``serve_step`` is exactly what
+the decode_* dry-run cells lower: one token through the model with a full
+KV cache.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, max_len: int):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self._prefill = jax.jit(
+            functools.partial(api.prefill, cfg, max_len=max_len)
+        )
+        self._decode = jax.jit(functools.partial(api.decode_step, cfg))
+
+    def generate(
+        self,
+        batch: dict,
+        n_tokens: int,
+        temperature: float = 0.0,
+        key: Optional[jax.Array] = None,
+    ) -> jax.Array:
+        """Greedy (or sampled) continuation of the prompt batch.
+
+        Returns (B, n_tokens) int32 generated token ids.
+        """
+        logits, cache = self._prefill(self.params, batch)
+        B = logits.shape[0]
+        toks = []
+        tok = self._select(logits, temperature, key, 0)
+        for i in range(n_tokens):
+            toks.append(tok)
+            logits, cache = self._decode(self.params, tok, cache)
+            if key is not None:
+                key = jax.random.fold_in(key, i)
+            tok = self._select(logits, temperature, key, i + 1)
+        return jnp.stack(toks, axis=1)
+
+    @staticmethod
+    def _select(logits, temperature, key, i):
+        if temperature <= 0.0 or key is None:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            jax.random.fold_in(key, i), logits / temperature
+        ).astype(jnp.int32)

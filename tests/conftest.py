@@ -1,0 +1,28 @@
+import os
+
+# Tests must see exactly ONE device (the dry-run forces 512 in its own
+# subprocess); also keep kernels in interpret mode on CPU.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_smooth_matrix(n=200, m=120, dtype=np.float64):
+    """Snapshots of a smooth parameterized family (fast-decaying n-width)."""
+    x = np.linspace(0, 1, n)
+    nu = np.linspace(0.5, 2.0, m)
+    S = np.stack([np.sin(2 * np.pi * v * x) * np.exp(-v * x) for v in nu],
+                 axis=1)
+    if np.issubdtype(dtype, np.complexfloating):
+        S = S * np.exp(1j * np.outer(x, nu))
+    return S.astype(dtype)

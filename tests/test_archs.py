@@ -1,0 +1,147 @@
+"""Per-architecture reduced-config smoke tests (assignment requirement):
+one forward/train step on CPU asserting output shapes + no NaNs, plus
+prefill/decode consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import arch_ids, get_config, get_reduced
+from repro.models import api
+from repro.models.config import SHAPES
+
+
+@pytest.mark.parametrize("arch", arch_ids())
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    spec = {
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+        "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+        "starcoder2-15b": (40, 6144, 48, 4, 24576, 49152),
+        "stablelm-3b": (32, 2560, 32, 32, 6912, 50304),
+        "granite-3-8b": (40, 4096, 32, 8, 12800, 49155),
+        "qwen1.5-110b": (80, 8192, 64, 8, 49152, 152064),
+        "mamba2-780m": (48, 1536, None, None, 0, 50280),
+        "llama-3.2-vision-11b": (40, 4096, 32, 8, 14336, 128256),
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+        "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206),
+    }[arch]
+    L, d, H, K, ff, V = spec
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    if H is not None:
+        assert cfg.n_heads == H
+        assert cfg.n_kv_heads == K
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == V
+
+
+def test_moe_configs():
+    c = get_config("llama4-maverick-400b-a17b")
+    assert (c.n_experts, c.experts_per_token) == (128, 1)
+    c = get_config("mixtral-8x7b")
+    assert (c.n_experts, c.experts_per_token) == (8, 2)
+    assert c.sliding_window == 4096
+
+
+@pytest.mark.parametrize("arch", arch_ids())
+def test_smoke_train_step(arch):
+    """Reduced config: one forward/backward; shapes + finiteness."""
+    cfg = get_reduced(arch)
+    key = jax.random.key(0)
+    params = api.init_params(cfg, key)
+    batch = api.make_batch(cfg, key, batch=2, seq=24)
+
+    logits = jax.jit(lambda p: api.forward_logits(cfg, p, batch))(params)
+    assert logits.shape == (2, 24, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    loss, grads = jax.jit(
+        jax.value_and_grad(lambda p: api.loss_fn(cfg, p, batch))
+    )(params)
+    assert np.isfinite(float(loss))
+    gn = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(lambda g: float(jnp.sum(jnp.abs(g))), grads),
+    )
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", arch_ids())
+def test_smoke_prefill_decode_consistency(arch):
+    """Greedy decode after prefill == teacher-forced argmax continuation."""
+    cfg = get_reduced(arch)
+    key = jax.random.key(1)
+    params = api.init_params(cfg, key)
+    batch = api.make_batch(cfg, key, batch=2, seq=16)
+
+    lg, cache = jax.jit(
+        lambda p, b: api.prefill(cfg, p, b, max_len=24)
+    )(params, batch)
+    assert lg.shape == (2, cfg.vocab_size)
+
+    # teacher forcing: the prefill last-token logits must match the full
+    # forward's last position
+    full = api.forward_logits(cfg, params, batch)
+    np.testing.assert_allclose(
+        np.asarray(lg, np.float32),
+        np.asarray(full[:, -1], np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+    tok = jnp.argmax(lg, -1).astype(jnp.int32)
+    lg2, cache2 = jax.jit(
+        lambda p, t, c: api.decode_step(cfg, p, t, c)
+    )(params, tok, cache)
+    assert lg2.shape == (2, cfg.vocab_size)
+    assert np.isfinite(np.asarray(lg2, np.float32)).all()
+
+    # decode must match a fresh forward on the extended sequence
+    toks_ext = jnp.concatenate([batch["tokens"], tok[:, None]], axis=1)
+    batch_ext = dict(batch, tokens=toks_ext)
+    full2 = api.forward_logits(cfg, params, batch_ext)
+    np.testing.assert_allclose(
+        np.asarray(lg2, np.float32),
+        np.asarray(full2[:, -1], np.float32),
+        rtol=5e-2, atol=5e-2,
+    )
+
+
+def test_param_count_formulas():
+    """Config param_count is within 2% of actually-initialized params."""
+    for arch in ("stablelm-3b", "mixtral-8x7b", "mamba2-780m"):
+        cfg = get_reduced(arch)
+        params = api.init_params(cfg, jax.random.key(0))
+        n_real = sum(
+            int(np.prod(p.shape)) for p in jax.tree.leaves(params)
+        )
+        n_est = cfg.param_count()
+        assert abs(n_real - n_est) / n_real < 0.1
+
+
+def test_shape_table():
+    assert SHAPES["train_4k"].tokens == 4096 * 256
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["decode_32k"].kind == "decode"
+
+
+@pytest.mark.parametrize("arch", ["stablelm-3b", "mixtral-8x7b"])
+def test_int8_kv_cache_decode(arch):
+    """int8-quantized KV cache decodes close to the bf16 cache path."""
+    cfg = get_reduced(arch)
+    key = jax.random.key(1)
+    params = api.init_params(cfg, key)
+    batch = api.make_batch(cfg, key, batch=2, seq=16)
+    lg, cache = api.prefill(cfg, params, batch, max_len=24)
+    tok = jnp.argmax(lg, -1).astype(jnp.int32)
+    lg_f, _ = api.decode_step(cfg, params, tok, cache)
+
+    cfg_q = cfg.replace(kv_cache_dtype="int8")
+    _, cache_q = api.prefill(cfg_q, params, batch, max_len=24)
+    lg_q, cache_q2 = api.decode_step(cfg_q, params, tok, cache_q)
+    assert cache_q2.self_kv.k.dtype == jnp.int8
+    d = float(jnp.max(jnp.abs(lg_f - lg_q)))
+    assert d < 0.25
+    assert np.array_equal(np.asarray(jnp.argmax(lg_f, -1)),
+                          np.asarray(jnp.argmax(lg_q, -1)))

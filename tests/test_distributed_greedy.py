@@ -1,0 +1,118 @@
+"""Distributed (shard_map) greedy == serial greedy, on 8 host devices.
+
+Runs in a subprocess because the device count must be forced before jax
+initializes (the main test process keeps 1 device).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import jax
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp, numpy as np, json
+from repro.core import rb_greedy
+from repro.core.distributed import distributed_greedy, dist_greedy_init, state_shardings
+from repro.core.errors import proj_error_max, orthogonality_defect
+from repro.gw import build_snapshot_matrix, chirp_grid, frequency_grid
+
+f = frequency_grid(20., 512., 600)
+m1, m2 = chirp_grid(n_mc=32, n_eta=8)
+S = build_snapshot_matrix(f, m1, m2, dtype=jnp.complex128)
+
+g_ser = rb_greedy(S, tau=1e-5)
+k = int(g_ser.k)
+
+out = {"n_devices": len(jax.devices())}
+for shape, axes in [((8,), ("cols",)), ((2, 4), ("data", "model"))]:
+    mesh = jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    g = distributed_greedy(S, tau=1e-5, max_k=min(*S.shape), mesh=mesh)
+    kd = int(g.k)
+    out[str(shape)] = {
+        "k_serial": k, "k_dist": kd,
+        "pivots_equal": bool(np.array_equal(np.array(g_ser.pivots[:k]),
+                                            np.array(g.pivots[:kd]))),
+        "max_err_diff": float(np.max(np.abs(
+            np.array(g_ser.errs[:k]) - np.array(g.errs[:kd])))),
+        "defect": float(orthogonality_defect(
+            jnp.asarray(np.array(g.Q[:, :kd])))),
+        "proj_err": float(proj_error_max(S, jnp.asarray(np.array(g.Q[:, :kd])))),
+    }
+
+# elastic restart: checkpoint on 8 devices, restore/finish on 4
+import tempfile
+import repro.core.distributed as D
+from repro.checkpoint import save_checkpoint, restore_checkpoint
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+mesh8 = jax.make_mesh((8,), ("cols",), axis_types=(jax.sharding.AxisType.Auto,))
+S8 = jax.device_put(S, NamedSharding(mesh8, P(None, ("cols",))))
+state = D.dist_greedy_init(S8, 30, mesh8)
+step8 = D.make_dist_greedy_step(mesh8)
+for _ in range(10):
+    state = step8(S8, state)
+
+with tempfile.TemporaryDirectory() as d:
+    save_checkpoint(state, d, 10)
+    mesh4 = jax.make_mesh((4,), ("cols",),
+                          axis_types=(jax.sharding.AxisType.Auto,),
+                          devices=jax.devices()[:4])
+    specs4 = D.state_specs(mesh4)
+    # placement targets with the NEW mesh's shardings (reshard-on-restore)
+    tgt = jax.tree.map(
+        lambda arr, spec: jax.device_put(
+            np.zeros(arr.shape, arr.dtype), NamedSharding(mesh4, spec)),
+        jax.tree.map(np.asarray, state), specs4,
+        is_leaf=lambda z: isinstance(z, np.ndarray))
+    st4 = D.DistGreedyState(*restore_checkpoint(tgt, d, 10))
+    step4 = D.make_dist_greedy_step(mesh4)
+    S4 = jax.device_put(S, NamedSharding(mesh4, P(None, ("cols",))))
+    for _ in range(5):
+        st4 = step4(S4, st4)
+    st8 = state
+    for _ in range(5):
+        st8 = step8(S8, st8)
+    out["elastic"] = {
+        "pivots_equal": bool(np.array_equal(np.array(st8.pivots[:15]),
+                                            np.array(st4.pivots[:15]))),
+    }
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def dist_result():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT], env=env, capture_output=True,
+        text=True, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    return json.loads(line[len("RESULT "):])
+
+
+def test_devices_forced(dist_result):
+    assert dist_result["n_devices"] == 8
+
+
+@pytest.mark.parametrize("mesh", ["(8,)", "(2, 4)"])
+def test_matches_serial(dist_result, mesh):
+    r = dist_result[mesh]
+    assert r["k_dist"] == r["k_serial"]
+    assert r["pivots_equal"]
+    assert r["max_err_diff"] < 1e-10
+    assert r["defect"] < 1e-12
+    assert r["proj_err"] < 1e-4
+
+
+def test_elastic_restart(dist_result):
+    assert dist_result["elastic"]["pivots_equal"]

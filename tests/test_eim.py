@@ -1,0 +1,70 @@
+"""Empirical interpolation + reduced-order quadrature (the GW application)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    eim_nodes, empirical_interpolant, rb_greedy, roq_weights,
+)
+from repro.gw import build_snapshot_matrix, chirp_grid, frequency_grid
+
+
+@pytest.fixture(scope="module")
+def gw_basis():
+    f = frequency_grid(20.0, 256.0, 400)
+    m1, m2 = chirp_grid(n_mc=20, n_eta=6)
+    S = build_snapshot_matrix(f, m1, m2, dtype=jnp.complex128)
+    res = rb_greedy(S, tau=1e-6)
+    k = int(res.k)
+    return f, S, res.Q[:, :k]
+
+
+def test_nodes_unique(gw_basis):
+    _, _, Q = gw_basis
+    ei = eim_nodes(Q)
+    nodes = np.asarray(ei.nodes)
+    assert len(set(nodes.tolist())) == Q.shape[1]
+
+
+def test_interpolation_exact_on_basis(gw_basis):
+    """The interpolant reproduces every basis vector exactly."""
+    _, _, Q = gw_basis
+    ei = eim_nodes(Q)
+    for i in (0, Q.shape[1] // 2, Q.shape[1] - 1):
+        q = Q[:, i]
+        interp = empirical_interpolant(ei.B, ei.nodes, q)
+        assert float(jnp.max(jnp.abs(interp - q))) < 1e-10
+
+
+def test_interpolation_exact_at_nodes(gw_basis):
+    _, S, Q = gw_basis
+    ei = eim_nodes(Q)
+    fvec = S[:, 3]
+    interp = empirical_interpolant(ei.B, ei.nodes, fvec)
+    assert float(jnp.max(jnp.abs(interp[ei.nodes] - fvec[ei.nodes]))) < 1e-9
+
+
+def test_interpolation_error_tracks_basis_error(gw_basis):
+    """EIM error on snapshots is within a (Lebesgue) factor of tau."""
+    _, S, Q = gw_basis
+    ei = eim_nodes(Q)
+    errs = []
+    for i in range(0, S.shape[1], 17):
+        fvec = S[:, i]
+        interp = empirical_interpolant(ei.B, ei.nodes, fvec)
+        errs.append(float(jnp.linalg.norm(interp - fvec)))
+    assert max(errs) < 1e-3  # tau=1e-6 basis; generous Lebesgue allowance
+
+
+def test_roq_inner_product(gw_basis):
+    """ROQ weights reproduce <d, h> for in-span h at the EI nodes."""
+    f, S, Q = gw_basis
+    ei = eim_nodes(Q)
+    w = jnp.ones((S.shape[0],)) * (f[1] - f[0])
+    d = S[:, 7]
+    omega = roq_weights(d, w, ei.B)
+    h = S[:, 21]
+    full = jnp.sum(w * jnp.conj(d) * h)
+    fast = jnp.sum(omega * h[ei.nodes])
+    assert abs(complex(full - fast)) < 1e-6 * abs(complex(full)) + 1e-10

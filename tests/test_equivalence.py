@@ -1,0 +1,107 @@
+"""Proposition 5.3: RB-greedy == MGS with column pivoting.
+
+Identical pivot sequences, identical pivoted-diagonal values, identical
+basis spans — on deterministic smooth families, random matrices (hypothesis
+sweep), and GW waveform snapshots.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import make_smooth_matrix
+from repro.core import mgs_pivoted_qr, rb_greedy
+
+
+def _span_distance(Q1, Q2):
+    """sin of largest principal angle between the column spans."""
+    s = np.linalg.svd(np.asarray(Q1).conj().T @ np.asarray(Q2),
+                      compute_uv=False)
+    return float(np.sqrt(max(0.0, 1.0 - np.min(s) ** 2)))
+
+
+@pytest.mark.parametrize("dtype", [np.float64, np.complex128])
+def test_equivalence_smooth(dtype):
+    """Exact pivot equality above the tie zone (smooth families produce
+    near-degenerate residuals once the error is tiny, where tie-breaks may
+    legitimately differ between the two formulations)."""
+    S = jnp.asarray(make_smooth_matrix(dtype=dtype))
+    tau = 1e-4
+    g = rb_greedy(S, tau=tau)
+    m = mgs_pivoted_qr(S, tau=tau)
+    k = int(g.k)
+    assert m.k == k
+    assert np.array_equal(np.asarray(g.pivots[:k]), np.asarray(m.pivots))
+    assert np.allclose(np.asarray(g.errs[:k]), np.asarray(m.r_diag),
+                       rtol=1e-6)
+    assert _span_distance(g.Q[:, :k], m.Q) < 1e-5
+
+
+@pytest.mark.parametrize("dtype", [np.float64, np.complex128])
+def test_functional_equivalence_deep(dtype):
+    """At deep tolerance both algorithms deliver a basis meeting tau, with
+    identical error sequences (Cor 5.6) even if tie-breaks differ."""
+    from repro.core.errors import proj_error_max
+    S = jnp.asarray(make_smooth_matrix(dtype=dtype))
+    tau = 1e-8
+    g = rb_greedy(S, tau=tau)
+    m = mgs_pivoted_qr(S, tau=tau)
+    k = int(g.k)
+    assert abs(m.k - k) <= 1
+    kk = min(k, m.k)
+    # compare error sequences up to the first tie-break divergence (after
+    # a divergence the two runs legitimately track different columns)
+    gp, mp = np.asarray(g.pivots[:kk]), np.asarray(m.pivots[:kk])
+    j_div = next((i for i in range(kk) if gp[i] != mp[i]), kk)
+    assert j_div >= min(kk, 8)
+    assert np.allclose(np.asarray(g.errs[:j_div]),
+                       np.asarray(m.r_diag[:j_div]), rtol=1e-3)
+    # greedy + Hoffmann iterated GS meets tau;
+    assert float(proj_error_max(S, g.Q[:, :k])) < tau * 1.01
+    # plain MGS deflation loses ~kappa(S)*eps of true accuracy — exactly
+    # the ill-conditioning the paper cites (Remark 5.5) as motivation for
+    # the iterated GS.  Its claimed R(k,k) hits tau but the realized error
+    # is a few orders worse:
+    assert float(proj_error_max(S, m.Q)) < 1e-5
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    n=st.integers(12, 60),
+    m=st.integers(8, 40),
+    rank=st.integers(3, 8),
+)
+def test_equivalence_random(seed, n, m, rank):
+    """Property: pivot sequences agree on random low-rank + noise matrices."""
+    rng = np.random.default_rng(seed)
+    rank = min(rank, n, m)
+    S = rng.standard_normal((n, rank)) @ rng.standard_normal((rank, m))
+    S = S + 1e-9 * rng.standard_normal((n, m))
+    S = jnp.asarray(S)
+    tau = 1e-6 * float(jnp.linalg.norm(S, ord=2))
+    g = rb_greedy(S, tau=tau)
+    ms = mgs_pivoted_qr(S, tau=tau)
+    k = min(int(g.k), ms.k)
+    assert k >= 1
+    assert np.array_equal(np.asarray(g.pivots[:k]),
+                          np.asarray(ms.pivots[:k]))
+
+
+def test_equivalence_gw_waveforms():
+    """Unnormalized snapshots (normalized ones tie at iteration 0: every
+    column norm is exactly 1, so the first pivot is a pure tie-break)."""
+    from repro.gw import taylorf2, chirp_grid, frequency_grid
+
+    f = jnp.asarray(frequency_grid(20.0, 256.0, 300))
+    m1, m2 = chirp_grid(n_mc=16, n_eta=5)
+    cols = [taylorf2(f, a, b, normalize=False, dtype=jnp.complex128)
+            for a, b in zip(m1[:60], m2[:60])]
+    S = jnp.stack(cols, axis=1)
+    tau = 1e-5 * float(jnp.max(jnp.linalg.norm(S, axis=0)))
+    g = rb_greedy(S, tau=tau)
+    m = mgs_pivoted_qr(S, tau=tau)
+    k = int(g.k)
+    assert m.k == k
+    assert np.array_equal(np.asarray(g.pivots[:k]), np.asarray(m.pivots))

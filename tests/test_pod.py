@@ -1,0 +1,51 @@
+"""Theorem 3.2 (POD error identities) + Algorithm 1 semantics."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_smooth_matrix
+from repro.core import pod, pod_basis
+from repro.core.pod import pod_error_2norm, pod_error_fro
+
+
+@pytest.mark.parametrize("dtype", [np.float64, np.complex128])
+def test_pod_2norm_identity(dtype):
+    """Thm 3.2(ii): |S - V_k V_k^H S|_2 == sigma_{k+1} exactly."""
+    S = jnp.asarray(make_smooth_matrix(dtype=dtype))
+    _, sig, _ = np.linalg.svd(np.asarray(S))
+    for k in (1, 5, 10):
+        err = float(pod_error_2norm(S, k))
+        assert err == pytest.approx(float(sig[k]), rel=1e-8, abs=1e-12)
+
+
+@pytest.mark.parametrize("dtype", [np.float64, np.complex128])
+def test_pod_fro_identity(dtype):
+    """Thm 3.2(i): |S - V_k V_k^H S|_F^2 == sum_{j>k} sigma_j^2."""
+    S = jnp.asarray(make_smooth_matrix(dtype=dtype))
+    _, sig, _ = np.linalg.svd(np.asarray(S))
+    for k in (1, 5, 10):
+        err = float(pod_error_fro(S, k)) ** 2
+        assert err == pytest.approx(float(np.sum(sig[k:] ** 2)),
+                                    rel=1e-8, abs=1e-12)
+
+
+def test_pod_tolerance_selection():
+    """Algorithm 1 picks the smallest k with sigma_{k+1} < tau."""
+    S = jnp.asarray(make_smooth_matrix())
+    res = pod(S, tau=1e-6)
+    k = int(res.k)
+    sig = np.asarray(res.sigmas)
+    assert sig[k] < 1e-6
+    assert k == 0 or sig[k - 1] >= 1e-6
+
+
+def test_pod_optimality_vs_random_basis(rng):
+    """POD beats an arbitrary orthonormal basis in both norms (Eq. 3.1)."""
+    S = jnp.asarray(make_smooth_matrix())
+    k = 8
+    Vk = pod_basis(S, k)
+    Q, _ = np.linalg.qr(rng.standard_normal((S.shape[0], k)))
+    pod_err = float(jnp.linalg.norm(S - Vk @ (Vk.conj().T @ S)))
+    rand_err = float(jnp.linalg.norm(S - Q @ (Q.T @ np.asarray(S))))
+    assert pod_err <= rand_err

@@ -1,0 +1,49 @@
+"""Algorithm 4 (reconstruction) — Theorems 5.8/5.11, Remarks 5.12/5.13."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_smooth_matrix
+from repro.core import reconstruction, rb_greedy
+from repro.core.errors import proj_error_2norm
+
+
+@pytest.mark.parametrize("dtype", [np.float64, np.complex128])
+def test_reconstruction_matches_pod_when_r22_small(dtype):
+    """Rem 5.13: with |R22| ~ eps the reconstructed basis behaves like POD."""
+    S = jnp.asarray(make_smooth_matrix(dtype=dtype))
+    sig = np.linalg.svd(np.asarray(S), compute_uv=False)
+    res = reconstruction(S, tau1=1e-13, tau2=1e-10)
+    k = int(res.k)
+    err = float(proj_error_2norm(S, res.X[:, :k]))
+    # POD error at rank k is sig[k]; reconstruction should be within a
+    # small factor (and far better than the plain greedy at the same k).
+    assert err <= 20 * max(float(sig[k]), 1e-14)
+
+
+def test_reconstruction_beats_plain_greedy_at_same_rank():
+    """The SVD rotation enriches the basis (Rem 5.9: R-diag decays slower
+    than the singular values)."""
+    S = jnp.asarray(make_smooth_matrix())
+    res = reconstruction(S, tau1=1e-12, tau2=1e-9)
+    g = rb_greedy(S, tau=1e-12)
+    for k in (4, 6, 8):
+        rec_err = float(proj_error_2norm(S, res.X[:, :k]))
+        greedy_err = float(proj_error_2norm(S, g.Q[:, :k]))
+        assert rec_err <= greedy_err * 1.5 + 1e-14
+
+
+def test_theorem_5_11_bound():
+    """|S - X_j X_j^H S|_2 <= sigma(S1)_{j+1} + |R22|_2."""
+    S = jnp.asarray(make_smooth_matrix())
+    res = reconstruction(S, tau1=1e-10, tau2=1e-8)
+    j_qr = res.j
+    # Build S1 from the greedy QR factors: S1 = Q_j R(1:j,:)
+    S1 = res.Qj @ rb_greedy(S, tau=1e-10).R[:j_qr, :]
+    sig1 = np.linalg.svd(np.asarray(S1), compute_uv=False)
+    r22 = float(jnp.linalg.norm(S - S1, ord=2))
+    for jj in (3, 5):
+        lhs = float(proj_error_2norm(S, res.X[:, :jj]))
+        rhs = float(sig1[jj]) + r22
+        assert lhs <= rhs * (1 + 1e-8) + 1e-12

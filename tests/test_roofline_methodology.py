@@ -1,0 +1,80 @@
+"""Validates the §Roofline methodology itself.
+
+The central claim: with layers unrolled, per-device compiled cost is EXACTLY
+affine in the layer count, so a 2-point fit extrapolates correctly.  We
+verify by predicting L=3 from the L={1,2} fit on an 8-device mesh and
+checking the actual L=3 lowering (sub-1% tolerance), and we re-verify the
+scan undercount that motivates the methodology.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os, json
+import jax
+from repro.configs import get_reduced
+from repro.launch import specs as S
+from repro.launch import roofline as R
+from repro.models.config import ShapeConfig
+from repro.models.transformer import unroll_layers
+from repro.sharding import use_mesh
+from repro.training.trainer import make_train_step
+
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+shape = ShapeConfig("t", 128, 8, "train")
+
+def cost(L, unroll):
+    cfg = get_reduced("stablelm-3b").replace(
+        n_layers=L, attn_impl="einsum", remat=False, dtype="float32")
+    step = make_train_step(cfg, n_microbatches=1, donate=False)
+    ctx = unroll_layers() if unroll else None
+    import contextlib
+    with use_mesh(mesh), (ctx or contextlib.nullcontext()):
+        compiled = step.lower(S.abstract_train_state(cfg, mesh),
+                              S.batch_specs(cfg, shape, mesh)).compile()
+    return R.cost_terms(compiled)
+
+c1, c2, c3 = cost(1, True), cost(2, True), cost(3, True)
+fit3 = R.fit_linear(c1, c2, 1, 2, 3)
+scan2 = cost(2, False)
+out = {
+    "flops_pred": fit3["flops"], "flops_act": c3["flops"],
+    "bytes_pred": fit3["bytes"], "bytes_act": c3["bytes"],
+    "coll_pred": fit3["collective_bytes"],
+    "coll_act": c3["collective_bytes"],
+    "scan_flops_L2": scan2["flops"], "unroll_flops_L2": c2["flops"],
+    "unroll_flops_L1": c1["flops"],
+}
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def fit():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    p = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert p.returncode == 0, p.stderr[-2500:]
+    line = [l for l in p.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    return json.loads(line[len("RESULT "):])
+
+
+def test_linear_fit_predicts_L3(fit):
+    assert fit["flops_pred"] == pytest.approx(fit["flops_act"], rel=0.01)
+    assert fit["bytes_pred"] == pytest.approx(fit["bytes_act"], rel=0.02)
+    assert fit["coll_pred"] == pytest.approx(fit["coll_act"], rel=0.05)
+
+
+def test_scan_undercounts_layers(fit):
+    """The motivation: scan-lowered L=2 reports ~the L=1 unrolled body."""
+    # scan counts the body once -> its flops are far below unrolled L=2
+    assert fit["scan_flops_L2"] < 0.75 * fit["unroll_flops_L2"]

@@ -1,0 +1,54 @@
+"""Theorem 5.1 (optimal RRQR) and Corollary 5.2 (exact-rank case)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_smooth_matrix
+from repro.core import optimal_rrqr
+from repro.core.rrqr import rrqr_error_2norm
+
+
+@pytest.mark.parametrize("dtype", [np.float64, np.complex128])
+@pytest.mark.parametrize("k", [3, 8, 15])
+def test_optimal_rrqr_matches_pod_error(dtype, k):
+    """|S - Q_k Q_k^H S|_2 == sigma_{k+1} (POD-optimal, Eq. 5.5)."""
+    S = jnp.asarray(make_smooth_matrix(dtype=dtype))
+    res = optimal_rrqr(S, k)
+    err = float(rrqr_error_2norm(S, res.Qk))
+    assert err == pytest.approx(float(res.sigmas[k]), rel=1e-6, abs=1e-12)
+
+
+def test_optimal_rrqr_orthonormal():
+    S = jnp.asarray(make_smooth_matrix())
+    res = optimal_rrqr(S, 10)
+    G = res.Qk.conj().T @ res.Qk
+    assert np.allclose(np.asarray(G), np.eye(10), atol=1e-10)
+
+
+def test_exact_rank_reconstruction(rng):
+    """Cor 5.2: ordinary rank k => S == Q_k R exactly."""
+    k = 6
+    A = rng.standard_normal((40, k)) @ rng.standard_normal((k, 25))
+    S = jnp.asarray(A)
+    res = optimal_rrqr(S, k)
+    recon = res.Qk @ res.R
+    assert np.allclose(np.asarray(recon), A, atol=1e-10)
+
+
+def test_rrqr_error_bounds_interlace():
+    """sigma_{k+1} <= |S - QQ^H S|_2 for ANY rank-k orthonormal Q (POD
+    optimality), with equality for the Thm-5.1 construction."""
+    S = jnp.asarray(make_smooth_matrix())
+    sig = np.linalg.svd(np.asarray(S), compute_uv=False)
+    from repro.core import rb_greedy
+    g = rb_greedy(S, tau=1e-10)
+    for k in (3, 6, 9):
+        greedy_err = float(
+            jnp.linalg.norm(
+                S - g.Q[:, :k] @ (g.Q[:, :k].conj().T @ S), ord=2
+            )
+        )
+        assert greedy_err >= sig[k] - 1e-10
+        opt_err = float(rrqr_error_2norm(S, optimal_rrqr(S, k).Qk))
+        assert opt_err <= greedy_err + 1e-10
