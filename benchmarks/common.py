@@ -1,4 +1,4 @@
-"""Shared benchmark utilities: timing, CSV emission."""
+"""Shared benchmark utilities: timing, CSV emission, JSON registry."""
 
 from __future__ import annotations
 
@@ -6,6 +6,10 @@ import time
 
 import jax
 import numpy as np
+
+# Every emit() is recorded here; benchmarks/run.py dumps the registry to
+# BENCH_greedy.json so the perf trajectory is machine-readable across PRs.
+_RECORDS: list[dict] = []
 
 
 def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
@@ -24,3 +28,11 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.3f},{derived}")
+    _RECORDS.append(
+        {"name": name, "us_per_call": float(us_per_call), "derived": derived}
+    )
+
+
+def records() -> list[dict]:
+    """All rows emitted so far (in emission order)."""
+    return list(_RECORDS)

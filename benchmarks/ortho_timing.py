@@ -1,7 +1,17 @@
-"""Paper Fig. 6.1(b): orthogonalization time vs iteration index j.
+"""Paper Fig. 6.1(b): orthogonalization time vs iteration index j, plus the
+seed-vs-chunked IMGS hot-path comparison.
 
 IMGS cost is O(nu_j * j * N): linear growth with the basis size j.  We
 measure T_j^IMGS/N and fit the slope.
+
+The hot-path rows compare, at N=4096:
+
+  fig6.1b_hotpath_seed   — one jitted :func:`imgs_orthogonalize` dispatch
+                           per basis vector (the seed driver's cadence),
+  fig6.1b_hotpath_fused  — the same orthogonalizations executed
+                           device-resident inside one jitted ``lax.scan``
+                           chunk (the chunked driver's cadence), amortizing
+                           dispatch + host sync over the chunk.
 """
 
 from __future__ import annotations
@@ -15,6 +25,7 @@ from repro.core.greedy import imgs_orthogonalize
 
 
 def run(csv: bool = True):
+    hotpath = run_hotpath(csv=csv)
     results = []
     for N in (1024, 4096):
         rng = np.random.default_rng(0)
@@ -36,7 +47,80 @@ def run(csv: bool = True):
                 np.mean(ts) * 1e6,
                 f"linear_fit_slope={slope*1e6:.3f}us/basis;corr={r:.4f}",
             )
+    results.append(hotpath)
     return results
+
+
+def run_hotpath(csv: bool = True, N: int = 4096, j: int = 64,
+                chunk: int = 16, repeats: int = 9):
+    """Per-call vs chunk-amortized IMGS at the production row count, for
+    the GW production dtype (complex64) and real float32.
+
+    seed:  one jitted :func:`imgs_orthogonalize` dispatch per basis vector
+           with the seed implementation (``backend="xla_ref"``: complex
+           matvecs and all).
+    fused: the same orthogonalizations device-resident inside one jitted
+           ``lax.scan`` chunk through the ``xla`` backend (plane-split
+           complex), amortizing dispatch + host sync over the chunk.
+
+    Each candidate is timed best-of-``repeats`` in its own steady state
+    (see benchmarks.pivot_timing._steady_min for the rationale).
+    """
+    out = {}
+    for dtype, suffix in ((jnp.complex64, ""), (jnp.float32, "_f32")):
+        out[str(jnp.dtype(dtype))] = _hotpath_one_dtype(
+            csv, N, j, chunk, repeats, dtype, suffix
+        )
+    return out
+
+
+def _hotpath_one_dtype(csv, N, j, chunk, repeats, dtype, suffix):
+    from benchmarks.pivot_timing import _steady_min
+
+    rng = np.random.default_rng(0)
+    cplx = jnp.issubdtype(dtype, jnp.complexfloating)
+    A = rng.standard_normal((N, j))
+    v = rng.standard_normal((chunk, N))
+    if cplx:
+        A = A + 1j * rng.standard_normal((N, j))
+        v = v + 1j * rng.standard_normal((chunk, N))
+    Qj = jnp.asarray(np.linalg.qr(A)[0], dtype)
+    V = jnp.asarray(v, dtype)
+
+    # seed cadence: one dispatch + sync per orthogonalization, seed ops
+    fn = jax.jit(
+        lambda v, Q: imgs_orthogonalize(v, Q, backend="xla_ref")[0]
+    )
+
+    def percall():
+        out = [fn(V[i], Qj) for i in range(chunk)]
+        jax.block_until_ready(out)
+
+    # chunked cadence: the same passes device-resident inside one jit
+    @jax.jit
+    def scanned(V, Q):
+        def body(_, v):
+            q, _, _, _ = imgs_orthogonalize(v, Q)
+            return 0, q
+        _, qs = jax.lax.scan(body, 0, V)
+        return qs
+
+    def chunked():
+        jax.block_until_ready(scanned(V, Qj))
+
+    t_seed = _steady_min(percall, chunk, repeats=repeats, warmup=2)
+    t_fused = _steady_min(chunked, chunk, repeats=repeats, warmup=2)
+
+    speedup = t_seed / max(t_fused, 1e-12)
+    dt_name = str(jnp.dtype(dtype))
+    if csv:
+        emit(f"fig6.1b_hotpath_seed_N{N}_j{j}{suffix}", t_seed * 1e6,
+             f"dtype={dt_name};per-call jitted IMGS (seed ops + cadence)")
+        emit(f"fig6.1b_hotpath_fused_N{N}_j{j}{suffix}", t_fused * 1e6,
+             f"dtype={dt_name};device-resident scan chunk C={chunk};"
+             f"speedup_vs_seed={speedup:.2f}x")
+    return {"t_seed_us": t_seed * 1e6, "t_fused_us": t_fused * 1e6,
+            "speedup": speedup}
 
 
 if __name__ == "__main__":

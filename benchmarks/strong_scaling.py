@@ -28,13 +28,13 @@ _SCRIPT = r"""
 import jax, json
 import jax.numpy as jnp
 import numpy as np
+from repro.compat import make_auto_mesh
 from repro.core.distributed import dist_greedy_init, make_dist_greedy_step
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 P_dev = len(jax.devices())
 N, M = 1000, 240 * P_dev * 0 + 2048  # fixed M (strong scaling)
-mesh = jax.make_mesh((P_dev,), ("cols",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_auto_mesh((P_dev,), ("cols",))
 S = jax.ShapeDtypeStruct((N, M), jnp.complex64,
                          sharding=NamedSharding(mesh, P(None, ("cols",))))
 st = jax.eval_shape(lambda: dist_greedy_init(

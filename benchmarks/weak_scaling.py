@@ -20,13 +20,13 @@ from benchmarks.common import emit
 _SCRIPT = r"""
 import jax, json
 import jax.numpy as jnp
+from repro.compat import make_auto_mesh
 from repro.core.distributed import dist_greedy_init, make_dist_greedy_step, state_shardings
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 P_dev = len(jax.devices())
 N, M = 1000, 512 * P_dev   # M grows with P (weak scaling)
-mesh = jax.make_mesh((P_dev,), ("cols",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_auto_mesh((P_dev,), ("cols",))
 S = jax.ShapeDtypeStruct((N, M), jnp.complex64,
                          sharding=NamedSharding(mesh, P(None, ("cols",))))
 st = jax.eval_shape(lambda: dist_greedy_init(

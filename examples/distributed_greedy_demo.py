@@ -22,14 +22,14 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import rb_greedy
 from repro.core.distributed import distributed_greedy
+from repro.compat import make_auto_mesh
 from repro.core.errors import proj_error_max
 from repro.gw import build_snapshot_matrix, chirp_grid, frequency_grid
 
 print(f"devices: {len(jax.devices())}")
 f = frequency_grid(20.0, 512.0, 1000)
 m1, m2 = chirp_grid(n_mc=64, n_eta=8)
-mesh = jax.make_mesh((8,), ("cols",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_auto_mesh((8,), ("cols",))
 sharding = NamedSharding(mesh, P(None, ("cols",)))
 S = build_snapshot_matrix(f, m1, m2, dtype=jnp.complex128,
                           sharding=sharding)

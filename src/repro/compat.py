@@ -1,0 +1,33 @@
+"""Small cross-version JAX compatibility helpers.
+
+The repo targets recent JAX, but two APIs moved under our feet:
+
+* ``jax.sharding.AxisType`` (explicit/auto axis types) does not exist on
+  older releases — :func:`make_auto_mesh` passes ``axis_types`` only when
+  available (every mesh here is fully ``Auto``, which is also the default
+  on versions without the enum).
+* ``jax.lax.axis_size`` is similarly recent; see
+  ``repro.core.distributed._axis_size`` for the in-shard_map fallback.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+
+def make_auto_mesh(
+    shape: Sequence[int],
+    axis_names: Sequence[str],
+    devices=None,
+):
+    """``jax.make_mesh`` with all axes ``Auto``, on any supported version."""
+    kwargs = {}
+    if hasattr(jax.sharding, "AxisType"):
+        kwargs["axis_types"] = (
+            jax.sharding.AxisType.Auto,
+        ) * len(tuple(axis_names))
+    if devices is not None:
+        kwargs["devices"] = devices
+    return jax.make_mesh(tuple(shape), tuple(axis_names), **kwargs)

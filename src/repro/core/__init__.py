@@ -8,17 +8,30 @@
 - :mod:`repro.core.eim`            -- empirical interpolation + ROQ.
 - :mod:`repro.core.errors`         -- the paper's error identities.
 - :mod:`repro.core.distributed`    -- shard_map column-parallel greedy (Sec 6).
+- :mod:`repro.core.backend`        -- hot-loop primitive dispatch
+  (fused Pallas TPU kernels vs pure-jnp XLA; see its module docstring).
 """
 
 from repro.core.pod import pod, pod_basis
 from repro.core.mgs import mgs_pivoted_qr
-from repro.core.greedy import GreedyResult, rb_greedy, imgs_orthogonalize
+from repro.core.backend import (
+    default_backend,
+    resolve_backend,
+    set_default_backend,
+)
+from repro.core.greedy import (
+    GreedyResult,
+    imgs_orthogonalize,
+    rb_greedy,
+    rb_greedy_stepwise,
+)
 from repro.core.rrqr import optimal_rrqr
 from repro.core.reconstruction import reconstruction
 from repro.core.eim import eim_nodes, empirical_interpolant, roq_weights
 
 __all__ = [
     "pod", "pod_basis", "mgs_pivoted_qr", "GreedyResult", "rb_greedy",
-    "imgs_orthogonalize", "optimal_rrqr", "reconstruction", "eim_nodes",
-    "empirical_interpolant", "roq_weights",
+    "rb_greedy_stepwise", "imgs_orthogonalize", "optimal_rrqr",
+    "reconstruction", "eim_nodes", "empirical_interpolant", "roq_weights",
+    "default_backend", "resolve_backend", "set_default_backend",
 ]

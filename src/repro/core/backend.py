@@ -1,0 +1,190 @@
+"""Backend dispatch for the greedy hot-loop primitives.
+
+Every greedy driver in this repo — single-device (:mod:`repro.core.greedy`),
+blocked (:mod:`repro.core.block_greedy`) and column-sharded
+(:mod:`repro.core.distributed`) — spends its time in exactly two primitives:
+
+  pivot_update   the paper's Eq.-(6.3) sweep: ``c = q^H S``,
+                 ``acc += |c|^2``, masked residual argmax — one read of the
+                 snapshot shard per basis vector (Fig. 6.1a),
+  project_pass   one classical-GS projection ``c = Q^H v``,
+                 ``v' = v - Q c`` — the body of Hoffmann's iterated GS
+                 (Fig. 6.1b).
+
+This module is the single point where those primitives are routed to an
+implementation:
+
+  ``pallas``   the fused Pallas TPU kernels
+               (:mod:`repro.kernels.greedy_update`,
+               :mod:`repro.kernels.imgs_project`) — one HBM pass, argmax
+               masking for padded columns, split re/im planes for complex;
+               off-TPU they run in interpret mode (slow, parity-testing
+               only),
+  ``xla``      ``jnp`` ops fused by XLA — the fast path on CPU/GPU.
+               Complex inputs run on split re/im planes (four real GEMVs),
+               mirroring the Pallas kernels: XLA lowers a complex GEMV to a
+               scalar loop ~10x slower than its real counterpart,
+  ``xla_ref``  the literal reference ops (:mod:`..kernels.*.ref`, complex
+               GEMV included) — the seed implementation, kept as the
+               numerical oracle and the benchmark baseline.
+
+Dispatch contract
+-----------------
+
+* Selection happens at **trace time** (it is a plain Python decision), so a
+  backend choice is baked into each jitted computation; drivers thread
+  ``backend=`` through as a static argument.
+* Precedence: explicit ``backend=`` argument > ``REPRO_GREEDY_BACKEND``
+  environment variable > :func:`set_default_backend` > ``"auto"``
+  (``pallas`` iff the default JAX backend is TPU).
+* Both implementations satisfy the same numerical contract (identical
+  signatures and semantics, see ``kernels/*/ref.py``); pivot-for-pivot
+  parity of whole drivers is asserted in ``tests/test_backend.py``.
+* Primitives without a fused kernel yet (the blocked ``block_sweep``) fall
+  back to the ``xla`` implementation under either backend; the dispatch
+  point still exists so a future kernel drops in without touching drivers.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.greedy_update.ops import greedy_update as _pallas_pivot
+from repro.kernels.greedy_update.ref import greedy_update_ref as _xla_pivot
+from repro.kernels.imgs_project.ops import imgs_project as _pallas_project
+from repro.kernels.imgs_project.ref import imgs_project_ref as _xla_project
+
+VALID_BACKENDS = ("auto", "xla", "pallas", "xla_ref")
+
+_ENV_VAR = "REPRO_GREEDY_BACKEND"
+_default_backend = "auto"
+
+
+def set_default_backend(name: str) -> None:
+    """Set the process-wide default backend (overridden by env/explicit)."""
+    global _default_backend
+    if name not in VALID_BACKENDS:
+        raise ValueError(
+            f"unknown greedy backend {name!r}; valid: {VALID_BACKENDS}"
+        )
+    _default_backend = name
+
+
+def default_backend() -> str:
+    return _default_backend
+
+
+def resolve_backend(backend: str | None = None) -> str:
+    """Resolve a backend request to a concrete implementation name.
+
+    Returns ``"pallas"``, ``"xla"`` or ``"xla_ref"``.  ``None`` consults
+    the ``REPRO_GREEDY_BACKEND`` env var, then :func:`default_backend`; the
+    ``"auto"`` policy picks the fused Pallas kernels exactly when running
+    on TPU (interpret-mode Pallas is a debugging tool, not a fast path).
+    """
+    if backend is None:
+        backend = os.environ.get(_ENV_VAR) or _default_backend
+    if backend not in VALID_BACKENDS:
+        raise ValueError(
+            f"unknown greedy backend {backend!r}; valid: {VALID_BACKENDS}"
+        )
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return backend
+
+
+def _plane_split_pivot(q, S, acc, norms_sq):
+    """Complex Eq.-(6.3) sweep as four real GEMVs on split re/im planes.
+
+    Mirrors the Pallas kernel's plane decomposition (TPU MXUs are real) —
+    and is the fast path on CPU/GPU too: XLA lowers a complex GEMV to a
+    scalar loop that is an order of magnitude slower than its real GEMVs
+    (measured 709 ms vs 66 ms for c64 at N=4096, M=16384 on 1 CPU core).
+    Same math as ``q.conj() @ S`` up to float summation order.
+    """
+    qr, qi = q.real, q.imag
+    Sr, Si = S.real, S.imag
+    cr = qr @ Sr + qi @ Si   # Re(q^H S)
+    ci = qr @ Si - qi @ Sr   # Im(q^H S)
+    c = jax.lax.complex(cr, ci).astype(S.dtype)
+    acc_out = acc + (cr * cr + ci * ci).astype(acc.dtype)
+    res = norms_sq - acc_out
+    return c, acc_out, jnp.max(res), jnp.argmax(res).astype(jnp.int32)
+
+
+def _plane_split_project(v, Q):
+    """Complex GS projection pass on split re/im planes (see
+    :func:`_plane_split_pivot` for why)."""
+    Qr, Qi = Q.real, Q.imag
+    vr, vi = v.real, v.imag
+    # c = Q^H v = (Qr - i Qi)^T (vr + i vi)
+    cr = vr @ Qr + vi @ Qi
+    ci = vi @ Qr - vr @ Qi
+    # v' = v - Q c
+    vr_out = vr - (Qr @ cr - Qi @ ci)
+    vi_out = vi - (Qr @ ci + Qi @ cr)
+    return (
+        jax.lax.complex(vr_out, vi_out).astype(v.dtype),
+        jax.lax.complex(cr, ci).astype(Q.dtype),
+    )
+
+
+def pivot_update(
+    q: jax.Array,
+    S: jax.Array,
+    acc: jax.Array,
+    norms_sq: jax.Array,
+    backend: str | None = None,
+):
+    """Fused Eq.-(6.3) update: ``c = q^H S``, ``acc += |c|^2``, argmax.
+
+    Returns ``(c, acc_out, max_res, argmax)`` — identical semantics on both
+    backends (see :func:`repro.kernels.greedy_update.ref.greedy_update_ref`).
+    ``max_res``/``argmax`` describe the residual AFTER this update, i.e. the
+    next iteration's pivot; drivers that re-derive the pivot from
+    ``norms_sq - acc`` may ignore them (XLA dead-code-eliminates the ref
+    computation; the Pallas kernel produces them for free in the same pass).
+    Complex snapshots run on split re/im planes under either backend.
+    """
+    resolved = resolve_backend(backend)
+    if resolved == "pallas":
+        return _pallas_pivot(q, S, acc, norms_sq)
+    if resolved == "xla" and jnp.iscomplexobj(S):
+        return _plane_split_pivot(q, S, acc, norms_sq)
+    return _xla_pivot(q, S, acc, norms_sq)
+
+
+def project_pass(
+    v: jax.Array,
+    Q: jax.Array,
+    backend: str | None = None,
+):
+    """One classical-GS pass: returns ``(v - Q Q^H v, Q^H v)``."""
+    resolved = resolve_backend(backend)
+    if resolved == "pallas":
+        return _pallas_project(v, Q)
+    if resolved == "xla" and jnp.iscomplexobj(Q):
+        return _plane_split_project(v, Q)
+    return _xla_project(v, Q)
+
+
+def block_sweep(
+    Qnew: jax.Array,
+    S: jax.Array,
+    acc: jax.Array,
+    backend: str | None = None,
+):
+    """Blocked Eq.-(6.3) sweep: ``C = Qnew^H S``, ``acc += sum_i |C_i|^2``.
+
+    One read of S per p bases (the block-greedy amortization).  No fused
+    Pallas kernel exists yet, so both backends run the ``jnp`` form; the
+    dispatch point is here so a blocked kernel can be wired in without
+    touching :mod:`repro.core.block_greedy`.
+    """
+    del backend  # single implementation for now (see docstring)
+    C = Qnew.conj().T @ S
+    acc_out = acc + jnp.sum(jnp.abs(C) ** 2, axis=0)
+    return C, acc_out

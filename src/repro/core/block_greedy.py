@@ -32,13 +32,20 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from jax.experimental.shard_map import shard_map
 
+from repro.core import backend as _backend
 from repro.core.greedy import GreedyResult, GreedyState, greedy_init, \
     imgs_orthogonalize
 
 
 def block_greedy_step(S, state: GreedyState, p: int, kappa: float = 2.0,
-                      max_passes: int = 3) -> GreedyState:
-    """Add up to p bases with a single Eq.-6.3 sweep over S."""
+                      max_passes: int = 3,
+                      backend: str | None = None) -> GreedyState:
+    """Add up to p bases with a single Eq.-6.3 sweep over S.
+
+    Per-candidate orthogonalization and the blocked sweep route through
+    :mod:`repro.core.backend` (the sweep's fused kernel slot is
+    :func:`repro.core.backend.block_sweep`).
+    """
     res_sq = jnp.maximum(state.norms_sq - state.acc, 0.0)
     top_vals, top_idx = jax.lax.top_k(res_sq, p)
     err = jnp.sqrt(top_vals[0])
@@ -52,7 +59,8 @@ def block_greedy_step(S, state: GreedyState, p: int, kappa: float = 2.0,
     accepted = []
     for i in range(p):  # p is small and static
         v = jnp.take(S, top_idx[i], axis=1)
-        q, _, rnorm, _ = imgs_orthogonalize(v, Q, kappa, max_passes)
+        q, _, rnorm, _ = imgs_orthogonalize(v, Q, kappa, max_passes,
+                                            backend=backend)
         ok = rnorm > 50.0 * eps * scale
         q = jnp.where(ok, q, jnp.zeros_like(q))
         # fixed-slot write at k+i; rejected candidates leave zero columns
@@ -62,8 +70,8 @@ def block_greedy_step(S, state: GreedyState, p: int, kappa: float = 2.0,
         accepted.append(ok)
 
     Qnew = jnp.stack(new_qs, axis=1)           # (N, p), rejected cols zero
-    C = Qnew.conj().T @ S                      # ONE pass over S: (p, M)
-    acc = state.acc + jnp.sum(jnp.abs(C) ** 2, axis=0)
+    # ONE pass over S: (p, M) block sweep through the dispatch layer
+    C, acc = _backend.block_sweep(Qnew, S, state.acc, backend=backend)
 
     R = jax.lax.dynamic_update_slice_in_dim(state.R, C, k, axis=0)
     pivots = jax.lax.dynamic_update_slice_in_dim(
@@ -80,10 +88,12 @@ def block_greedy_step(S, state: GreedyState, p: int, kappa: float = 2.0,
     )
 
 
-@functools.partial(jax.jit, static_argnames=("p", "kappa", "max_passes"))
+@functools.partial(
+    jax.jit, static_argnames=("p", "kappa", "max_passes", "backend")
+)
 def _jitted_block_step(S, state, p: int, kappa: float = 2.0,
-                       max_passes: int = 3):
-    return block_greedy_step(S, state, p, kappa, max_passes)
+                       max_passes: int = 3, backend: str | None = None):
+    return block_greedy_step(S, state, p, kappa, max_passes, backend=backend)
 
 
 def rb_greedy_block(
@@ -95,6 +105,7 @@ def rb_greedy_block(
     max_passes: int = 3,
     refresh: str = "auto",
     refresh_safety: float = 100.0,
+    backend: str | None = None,
 ) -> GreedyResult:
     """Block-greedy driver (mirrors rb_greedy semantics at block granularity).
 
@@ -106,6 +117,8 @@ def rb_greedy_block(
     if max_k is None:
         max_k = min(N, M)
     max_k = min(max_k + p, min(N, M) + p)
+    # resolve pre-jit so the cache keys on the concrete backend name
+    backend = _backend.resolve_backend(backend)
     state = greedy_init(S, max_k)
     eps = float(jnp.finfo(state.norms_sq.dtype).eps)
     ref_sq = float(jnp.max(state.norms_sq))
@@ -114,7 +127,7 @@ def rb_greedy_block(
         prev_k = int(state.k)
         state = state._replace(k=jnp.asarray(slots, jnp.int32))
         state = _jitted_block_step(S, state, p=p, kappa=kappa,
-                                   max_passes=max_passes)
+                                   max_passes=max_passes, backend=backend)
         n_acc = int(state.k) - slots
         slots += p
         err = float(state.errs[slots - p])  # max residual before this block
@@ -148,10 +161,13 @@ def rb_greedy_block(
 
 # --------------------------------------------------------------- distributed
 def make_dist_block_greedy_step(mesh: Mesh, p: int, kappa: float = 2.0,
-                                max_passes: int = 3):
+                                max_passes: int = 3,
+                                backend: str | None = None):
     """Distributed block step: one S sweep per p bases (flagship roofline)."""
     from repro.core.distributed import DistGreedyState, state_specs, \
         _axis_index
+
+    backend = _backend.resolve_backend(backend)  # pre-jit, concrete name
 
     axes = tuple(mesh.axis_names)
     specs = state_specs(mesh)
@@ -184,12 +200,13 @@ def make_dist_block_greedy_step(mesh: Mesh, p: int, kappa: float = 2.0,
         new_qs = []
         for i in range(p):
             q, _, rnorm, _ = imgs_orthogonalize(V[:, i], Q, kappa,
-                                                max_passes)
+                                                max_passes, backend=backend)
             Q = Q.at[:, k + i].set(q)
             new_qs.append(q)
         Qnew = jnp.stack(new_qs, axis=1)
-        C = Qnew.conj().T @ S_loc                             # ONE pass
-        acc = state.acc + jnp.sum(jnp.abs(C) ** 2, axis=0)
+        # ONE pass over the local shard, through the dispatch layer
+        C, acc = _backend.block_sweep(Qnew, S_loc, state.acc,
+                                      backend=backend)
         R = jax.lax.dynamic_update_slice_in_dim(state.R, C, k, axis=0)
         pivots = jax.lax.dynamic_update_slice_in_dim(
             state.pivots, top_idx.astype(jnp.int32), k, axis=0)

@@ -23,6 +23,13 @@ replicated basis), so the Python driver checkpoints/restores it with the
 standard checkpoint machinery, and restores onto a *different* mesh
 (elastic re-shard) because restore_checkpoint re-places leaves by target
 sharding.
+
+Hot-loop primitives route through :mod:`repro.core.backend` (fused Pallas
+kernels on TPU, ``jnp`` under XLA), and the driver runs CHUNKED: ``chunk``
+iterations execute inside one jitted ``lax.while_loop`` (collectives and
+all) with the host syncing only a (n_done, stop_code) scalar pair per
+chunk — the per-iteration ``float(errs[k-1])`` sync of the seed driver is
+gone.  ``chunk=1`` restores the seed cadence exactly.
 """
 
 from __future__ import annotations
@@ -36,7 +43,15 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from jax.experimental.shard_map import shard_map
 
-from repro.core.greedy import GreedyResult, imgs_orthogonalize
+from repro.core import backend as _backend
+from repro.core.greedy import (
+    GreedyResult,
+    STOP_NONE,
+    STOP_RANK,
+    STOP_REFRESH,
+    STOP_TAU,
+    imgs_orthogonalize,
+)
 
 
 class DistGreedyState(NamedTuple):
@@ -72,6 +87,12 @@ def state_shardings(mesh: Mesh):
     )
 
 
+@jax.jit
+def _column_norms_sq(S):
+    # jitted: eager abs(S)**2 would materialize an S-sized temporary
+    return jnp.sum(jnp.abs(S) ** 2, axis=0)
+
+
 def dist_greedy_init(S: jax.Array, max_k: int, mesh: Mesh) -> DistGreedyState:
     N, M = S.shape
     rdtype = jnp.zeros((), S.dtype).real.dtype
@@ -80,7 +101,7 @@ def dist_greedy_init(S: jax.Array, max_k: int, mesh: Mesh) -> DistGreedyState:
         Q=jax.device_put(jnp.zeros((N, max_k), S.dtype), sh.Q),
         R=jax.device_put(jnp.zeros((max_k, M), S.dtype), sh.R),
         norms_sq=jax.device_put(
-            jnp.sum(jnp.abs(S) ** 2, axis=0).astype(rdtype), sh.norms_sq
+            _column_norms_sq(S).astype(rdtype), sh.norms_sq
         ),
         acc=jax.device_put(jnp.zeros((M,), rdtype), sh.acc),
         pivots=jax.device_put(jnp.zeros((max_k,), jnp.int32), sh.pivots),
@@ -89,28 +110,36 @@ def dist_greedy_init(S: jax.Array, max_k: int, mesh: Mesh) -> DistGreedyState:
     )
 
 
+def _axis_size(a: str):
+    """Size of a mapped axis; ``psum(1, a)`` constant-folds to it and works
+    on jax versions without ``jax.lax.axis_size``."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(a)
+    return jax.lax.psum(1, a)
+
+
 def _axis_index(axes: Sequence[str]):
     """Flattened device rank over (possibly several) mesh axes."""
     idx = jnp.zeros((), jnp.int32)
     for a in axes:
-        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        idx = idx * _axis_size(a) + jax.lax.axis_index(a)
     return idx
 
 
 def _axis_count(axes: Sequence[str]):
     n = 1
     for a in axes:
-        n *= jax.lax.axis_size(a)
+        n *= _axis_size(a)
     return n
 
 
-def make_dist_greedy_step(
-    mesh: Mesh, kappa: float = 2.0, max_passes: int = 3
-):
-    """Build the jitted SPMD greedy step for a mesh."""
-    axes = tuple(mesh.axis_names)
-    specs = state_specs(mesh)
-    s_spec = P(None, axes)
+def _make_local_step(axes, kappa: float, max_passes: int,
+                     backend: str | None):
+    """Per-device body of one distributed greedy iteration (SPMD).
+
+    ``backend`` should already be resolved (the factories resolve it so
+    their lru_cache keys on the concrete name, not on a None that would
+    freeze whatever the env/default said at first build)."""
 
     def local_step(S_loc, state):
         # ---- local pivot search (the greedy_update fusion target) ----
@@ -138,24 +167,45 @@ def make_dist_greedy_step(
 
         # ---- replicated orthogonalization (no master core) ----
         q, _, rnorm, _ = imgs_orthogonalize(
-            v, state.Q, kappa=kappa, max_passes=max_passes
+            v, state.Q, kappa=kappa, max_passes=max_passes, backend=backend
         )
 
-        # ---- Eq. (6.3) update over the local shard ----
-        c = q.conj() @ S_loc  # (M_loc,)
+        # ---- fused Eq. (6.3) update over the local shard ----
+        c, acc, _, _ = _backend.pivot_update(
+            q, S_loc, state.acc, state.norms_sq, backend=backend
+        )
         k = state.k
         return DistGreedyState(
             Q=state.Q.at[:, k].set(q),
             R=state.R.at[k, :].set(c),
             norms_sq=state.norms_sq,
-            acc=state.acc + jnp.abs(c) ** 2,
+            acc=acc,
             pivots=state.pivots.at[k].set(j_global.astype(jnp.int32)),
             errs=state.errs.at[k].set(err),
             k=k + 1,
         )
 
+    return local_step
+
+
+def make_dist_greedy_step(
+    mesh: Mesh, kappa: float = 2.0, max_passes: int = 3,
+    backend: str | None = None,
+):
+    """Build the jitted SPMD greedy step for a mesh (cached per signature)."""
+    return _make_dist_greedy_step(
+        mesh, kappa, max_passes, _backend.resolve_backend(backend)
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _make_dist_greedy_step(mesh, kappa, max_passes, backend):
+    axes = tuple(mesh.axis_names)
+    specs = state_specs(mesh)
+    s_spec = P(None, axes)
+
     sharded = shard_map(
-        local_step,
+        _make_local_step(axes, kappa, max_passes, backend),
         mesh=mesh,
         in_specs=(s_spec, specs),
         out_specs=specs,
@@ -164,6 +214,75 @@ def make_dist_greedy_step(
     return jax.jit(sharded, donate_argnums=(1,))
 
 
+def make_dist_greedy_chunk(
+    mesh: Mesh, chunk: int, kappa: float = 2.0, max_passes: int = 3,
+    backend: str | None = None, check_refresh: bool = True,
+    donate: bool = True,
+):
+    """Build the jitted device-resident chunk for a mesh.
+
+    Runs up to ``chunk`` SPMD iterations (collectives included) inside one
+    ``lax.while_loop``; stops early on the seed driver's host events —
+    checked in ITS order (tau before rank guard) — and reports them as a
+    replicated ``(state, n_done, stop_code)`` so the host syncs two scalars
+    per chunk instead of one error float per basis vector.
+    """
+    return _make_dist_greedy_chunk(
+        mesh, chunk, kappa, max_passes,
+        _backend.resolve_backend(backend), check_refresh, donate,
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _make_dist_greedy_chunk(mesh, chunk, kappa, max_passes, backend,
+                            check_refresh, donate):
+    axes = tuple(mesh.axis_names)
+    specs = state_specs(mesh)
+    s_spec = P(None, axes)
+    local_step = _make_local_step(axes, kappa, max_passes, backend)
+
+    def local_chunk(S_loc, state, tau, scale, ref_sq, refresh_safety):
+        max_k = state.Q.shape[1]
+        eps = jnp.finfo(state.norms_sq.dtype).eps
+
+        def cond(carry):
+            st, n, stop = carry
+            return (stop == STOP_NONE) & (n < chunk) & (st.k < max_k)
+
+        def body(carry):
+            st, n, _ = carry
+            st = local_step(S_loc, st)
+            err = st.errs[st.k - 1]
+            refresh_hit = check_refresh & (
+                err * err < refresh_safety * eps * ref_sq
+            )
+            stop = jnp.where(
+                err < tau,
+                STOP_TAU,
+                jnp.where(err < 50.0 * eps * scale, STOP_RANK,
+                          jnp.where(refresh_hit, STOP_REFRESH, STOP_NONE)),
+            ).astype(jnp.int32)
+            return (st, n + 1, stop)
+
+        state, n_done, stop = jax.lax.while_loop(
+            cond, body,
+            (state, jnp.asarray(0, jnp.int32),
+             jnp.asarray(STOP_NONE, jnp.int32)),
+        )
+        return state, n_done, stop
+
+    sharded = shard_map(
+        local_chunk,
+        mesh=mesh,
+        in_specs=(s_spec, specs, P(), P(), P(), P()),
+        out_specs=(specs, P(), P()),
+        check_rep=False,
+    )
+    # donate=False supports repeated application to one state (benchmarks)
+    return jax.jit(sharded, donate_argnums=(1,) if donate else ())
+
+
+@functools.lru_cache(maxsize=None)
 def make_dist_refresh(mesh: Mesh):
     """Exact residual recomputation (deep-tolerance mode), column-local."""
     axes = tuple(mesh.axis_names)
@@ -193,32 +312,54 @@ def distributed_greedy(
     refresh_safety: float = 100.0,
     kappa: float = 2.0,
     max_passes: int = 3,
+    chunk: int = 16,
+    backend: str | None = None,
 ) -> GreedyResult:
     """Driver mirroring :func:`repro.core.greedy.rb_greedy` on a mesh.
 
     ``S`` should be placed with columns sharded over all mesh axes (the
-    driver places it if not).  ``callback(state)`` runs after every step
-    (checkpointing hook).  Column count must divide the device count.
+    driver places it if not).  Column count must divide the device count.
+
+    Chunked device-resident hot loop: ``chunk`` SPMD iterations run inside
+    one jitted ``lax.while_loop`` per host round-trip.  ``callback(state)``
+    fires once per chunk (state arrays carry the per-step history); pass
+    ``chunk=1`` for the seed per-iteration cadence.  With a callback set
+    the chunk does not donate state buffers (retained checkpoint states
+    stay valid); see :func:`repro.core.greedy.rb_greedy` for that and for
+    the on-device stop-threshold dtype caveat.
     """
     s_sharding = NamedSharding(mesh, P(None, tuple(mesh.axis_names)))
     if getattr(S, "sharding", None) != s_sharding:
         S = jax.device_put(S, s_sharding)
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
 
-    step_fn = make_dist_greedy_step(mesh, kappa, max_passes)
+    chunk_fn = make_dist_greedy_chunk(
+        mesh, chunk, kappa, max_passes, backend,
+        check_refresh=(refresh == "auto"),
+        donate=(callback is None),
+    )
     refresh_fn = make_dist_refresh(mesh)
     state = dist_greedy_init(S, max_k, mesh)
 
-    eps = float(jnp.finfo(state.norms_sq.dtype).eps)
+    rdt = state.norms_sq.dtype
     ref_sq = float(jnp.max(state.norms_sq))
     scale = ref_sq ** 0.5
+    # invariant thresholds device-placed once; only ref_sq changes (refresh)
+    tau_d = jnp.asarray(tau, rdt)
+    scale_d = jnp.asarray(scale, rdt)
+    safety_d = jnp.asarray(refresh_safety, rdt)
+    ref_sq_d = jnp.asarray(ref_sq, rdt)
     k = 0
     while k < max_k:
-        state = step_fn(S, state)
+        state, n_done, stop = chunk_fn(
+            S, state, tau_d, scale_d, ref_sq_d, safety_d,
+        )
         k = int(state.k)
         if callback is not None:
             callback(state)
-        err = float(state.errs[k - 1])
-        if err < tau:
+        stop = int(stop)
+        if stop == STOP_TAU:
             k -= 1
             state = state._replace(
                 k=jnp.asarray(k, jnp.int32),
@@ -226,15 +367,18 @@ def distributed_greedy(
                 pivots=state.pivots.at[k].set(-1),
             )
             break
-        if err < 50.0 * eps * scale:
+        if stop == STOP_RANK:
             k -= 1
             state = state._replace(k=jnp.asarray(k, jnp.int32))
             break
-        if refresh == "auto" and err * err < refresh_safety * eps * ref_sq:
+        if stop == STOP_REFRESH:
             state = refresh_fn(S, state)
             ref_sq = max(float(jnp.max(state.norms_sq)), 1e-300)
-            if float(ref_sq) ** 0.5 < tau:
+            ref_sq_d = jnp.asarray(ref_sq, rdt)
+            if ref_sq ** 0.5 < tau:
                 break
+        # (no n_done check: the chunk cond guarantees >= 1 iteration, and
+        # reading it back would add a host sync per chunk)
     return GreedyResult(
         Q=state.Q, R=state.R, pivots=state.pivots, errs=state.errs,
         k=state.k, n_ortho_passes=jnp.zeros_like(state.pivots),

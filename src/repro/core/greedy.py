@@ -16,11 +16,22 @@ hardware.  We take that suggestion: orthogonalization is iterated *classical*
 GS (two matvecs per pass, MXU-friendly), with the same kappa=2 re-run test
 and the same conjectured orthogonality level |I - Q^H Q| ~ kappa eps sqrt(M).
 
-Two drivers are provided:
+Hot-loop primitives (the Eq.-6.3 sweep and the GS projection pass) are
+routed through :mod:`repro.core.backend`, which dispatches to the fused
+Pallas TPU kernels or the pure-``jnp`` XLA path (``backend=`` on every
+entry point; default ``auto``).
 
-- :func:`rb_greedy` — Python driver calling one jitted step per iteration
-  (checkpointable/restartable between iterations; this is what the
-  production launcher uses).
+Three drivers are provided:
+
+- :func:`rb_greedy` — chunked device-resident driver: runs ``chunk``
+  iterations inside ONE jitted ``lax.while_loop`` and only syncs with the
+  host at chunk boundaries (stop codes for tau / rank-guard / refresh), so
+  per-iteration dispatch + device->host transfer is amortized by ~chunk.
+  ``callback(state)`` fires once per chunk; the state arrays carry the full
+  per-step history (``chunk=1`` restores exact per-iteration callbacks).
+- :func:`rb_greedy_stepwise` — the seed per-step driver (one jitted step +
+  host sync per basis vector).  Kept as the parity oracle and benchmark
+  baseline; semantics are identical pivot-for-pivot.
 - :func:`rb_greedy_scan` — a single ``lax.scan`` over ``max_k`` iterations
   with masked dynamic stopping (embeddable inside a larger jit).
 """
@@ -32,6 +43,8 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import backend as _backend
 
 
 class GreedyResult(NamedTuple):
@@ -68,6 +81,7 @@ def imgs_orthogonalize(
     Q: jax.Array,
     kappa: float = 2.0,
     max_passes: int = 3,
+    backend: str | None = None,
 ):
     """Hoffmann iterated (classical) Gram-Schmidt with ratio test kappa.
 
@@ -75,6 +89,8 @@ def imgs_orthogonalize(
     harmless no-ops, so a zero-padded basis needs no masking).  Re-runs the
     projection while the norm dropped by more than a factor ``kappa``
     (Hoffmann's criterion; "twice is almost always enough", nu_j <= 3).
+    Each projection pass goes through :func:`repro.core.backend.project_pass`
+    (fused Pallas kernel on TPU, ``jnp`` under XLA).
 
     Returns ``(q, coeffs, rnorm, n_passes)`` with
     ``v = Q @ coeffs + rnorm * q`` and ``|q|_2 = 1`` (when rnorm > 0).
@@ -82,8 +98,8 @@ def imgs_orthogonalize(
     norm0 = jnp.linalg.norm(v)
 
     def one_pass(v):
-        c = Q.conj().T @ v
-        return v - Q @ c, c
+        v_out, c = _backend.project_pass(v, Q, backend=backend)
+        return v_out, c
 
     # First pass is unconditional.
     v1, c1 = one_pass(v)
@@ -127,7 +143,12 @@ class GreedyState(NamedTuple):
     k: jax.Array         # () int32
 
 
+@functools.partial(jax.jit, static_argnames=("max_k",))
 def greedy_init(S: jax.Array, max_k: int) -> GreedyState:
+    """Initial greedy state.  Jitted: eager ``jnp.abs(S) ** 2`` would
+    materialize a full S-sized temporary before the norm reduction — at the
+    production shape that is an extra multi-hundred-MB allocation and two
+    memory passes per driver call."""
     N, M = S.shape
     rdtype = jnp.zeros((), S.dtype).real.dtype
     return GreedyState(
@@ -144,7 +165,11 @@ def greedy_init(S: jax.Array, max_k: int) -> GreedyState:
 
 
 def greedy_step(
-    S: jax.Array, state: GreedyState, kappa: float = 2.0, max_passes: int = 3
+    S: jax.Array,
+    state: GreedyState,
+    kappa: float = 2.0,
+    max_passes: int = 3,
+    backend: str | None = None,
 ) -> GreedyState:
     """One iteration of Algorithm 3 (pivot search + orthogonalization).
 
@@ -152,7 +177,8 @@ def greedy_step(
     over columns is the pivot.  The selected column is orthogonalized with
     iterated GS and appended; the new row of R is ``q_k^H S`` which also
     updates the accumulated sums for every column at O(NM) — constant per
-    iteration (paper Fig. 6.1a).
+    iteration (paper Fig. 6.1a).  The sweep runs through
+    :func:`repro.core.backend.pivot_update` (fused Pallas kernel on TPU).
     """
     k = state.k
     res_sq = jnp.maximum(state.norms_sq - state.acc, 0.0)
@@ -160,10 +186,17 @@ def greedy_step(
     err = jnp.sqrt(res_sq[j])
 
     v = jax.lax.dynamic_slice_in_dim(S, j, 1, axis=1)[:, 0]
-    q, _, rnorm, n_pass = imgs_orthogonalize(v, state.Q, kappa, max_passes)
+    q, _, rnorm, n_pass = imgs_orthogonalize(
+        v, state.Q, kappa, max_passes, backend=backend
+    )
 
-    c = q.conj() @ S  # (M,) row k of R — also the Eq. (6.3) update
-    acc = state.acc + jnp.abs(c) ** 2
+    # Row k of R and the Eq.-(6.3) update in one fused S pass.  The fused
+    # kernel's post-update max/argmax belong to the NEXT pivot; this step
+    # re-derives them from norms_sq - acc above, so they are unused here
+    # (free in the Pallas pass, dead-code-eliminated under XLA).
+    c, acc, _, _ = _backend.pivot_update(
+        q, S, state.acc, state.norms_sq, backend=backend
+    )
 
     return GreedyState(
         Q=state.Q.at[:, k].set(q),
@@ -178,9 +211,12 @@ def greedy_step(
     )
 
 
-@functools.partial(jax.jit, static_argnames=("kappa", "max_passes"))
-def _jitted_step(S, state, kappa: float = 2.0, max_passes: int = 3):
-    return greedy_step(S, state, kappa, max_passes)
+@functools.partial(
+    jax.jit, static_argnames=("kappa", "max_passes", "backend")
+)
+def _jitted_step(S, state, kappa: float = 2.0, max_passes: int = 3,
+                 backend: str | None = None):
+    return greedy_step(S, state, kappa, max_passes, backend=backend)
 
 
 @jax.jit
@@ -201,6 +237,87 @@ def greedy_refresh(S: jax.Array, state: GreedyState) -> GreedyState:
     return state._replace(norms_sq=res, acc=jnp.zeros_like(state.acc))
 
 
+# Stop codes reported by a device-resident chunk (host reads ONE scalar per
+# chunk instead of err/rnorm floats per iteration).
+STOP_NONE, STOP_RANK, STOP_TAU, STOP_REFRESH = 0, 1, 2, 3
+
+
+def _drop_last(state: GreedyState, k: int) -> GreedyState:
+    """Remove the most recently added basis (tau-stop / rank-guard drop)."""
+    return state._replace(
+        k=jnp.asarray(k, jnp.int32),
+        Q=state.Q.at[:, k].set(0),
+        R=state.R.at[k, :].set(0),
+        pivots=state.pivots.at[k].set(-1),
+    )
+
+
+def _greedy_chunk_impl(
+    S,
+    state,
+    tau,
+    scale,
+    ref_sq,
+    refresh_safety,
+    chunk: int,
+    kappa: float = 2.0,
+    max_passes: int = 3,
+    backend: str | None = None,
+    check_refresh: bool = True,
+):
+    """Run up to ``chunk`` greedy iterations device-resident.
+
+    A ``lax.while_loop`` applies :func:`greedy_step` until a host-relevant
+    event fires (rank-guard, tau, refresh trigger — checked in the seed
+    driver's order) or ``chunk``/``max_k`` iterations elapse.  Returns
+    ``(state, n_done, stop_code)``; the host only ever syncs these, so
+    dispatch + transfer cost is paid once per chunk, not per basis vector.
+    """
+    max_k = state.Q.shape[1]
+    eps = jnp.finfo(state.norms_sq.dtype).eps
+
+    def cond(carry):
+        st, n, stop = carry
+        return (stop == STOP_NONE) & (n < chunk) & (st.k < max_k)
+
+    def body(carry):
+        st, n, _ = carry
+        st = greedy_step(S, st, kappa, max_passes, backend=backend)
+        k = st.k
+        err = st.errs[k - 1]
+        rnorm = st.rnorms[k - 1]
+        refresh_hit = check_refresh & (err * err < refresh_safety * eps
+                                       * ref_sq)
+        stop = jnp.where(
+            rnorm < 50.0 * eps * scale,
+            STOP_RANK,
+            jnp.where(err < tau, STOP_TAU,
+                      jnp.where(refresh_hit, STOP_REFRESH, STOP_NONE)),
+        ).astype(jnp.int32)
+        return (st, n + 1, stop)
+
+    state, n_done, stop = jax.lax.while_loop(
+        cond, body,
+        (state, jnp.asarray(0, jnp.int32), jnp.asarray(STOP_NONE, jnp.int32)),
+    )
+    return state, n_done, stop
+
+
+_CHUNK_STATICS = ("chunk", "kappa", "max_passes", "backend", "check_refresh")
+
+# Non-donating variant: supports repeated application to one state
+# (benchmarks time the hot loop this way).
+_greedy_chunk = jax.jit(_greedy_chunk_impl, static_argnames=_CHUNK_STATICS)
+
+# The driver's variant donates the state pytree so Q/R/acc buffers are
+# reused across chunks instead of copied (matters on accelerators; CPU
+# ignores donation).  The previous state is never touched again by the
+# driver, so donation is safe there.
+_greedy_chunk_donated = jax.jit(
+    _greedy_chunk_impl, static_argnames=_CHUNK_STATICS, donate_argnums=(1,)
+)
+
+
 def rb_greedy(
     S: jax.Array,
     tau: float,
@@ -210,11 +327,28 @@ def rb_greedy(
     callback=None,
     refresh: str = "auto",
     refresh_safety: float = 100.0,
+    chunk: int = 16,
+    backend: str | None = None,
 ) -> GreedyResult:
     """Algorithm 3 driver: iterate until ``err < tau`` or ``k == max_k``.
 
-    One jitted step per iteration; ``callback(state)`` (if given) is invoked
-    after each step — the production launcher uses it for checkpointing.
+    Chunked device-resident hot loop: ``chunk`` iterations run inside one
+    jitted ``lax.while_loop`` and the host syncs only the (n_done, stop)
+    scalars at chunk boundaries — identical pivots/bases to
+    :func:`rb_greedy_stepwise` (asserted in tests/test_chunked_driver.py),
+    ~chunk x fewer dispatches and device->host transfers.
+
+    ``callback(state)`` fires once per chunk (the state arrays hold the full
+    per-step history up to ``state.k``); pass ``chunk=1`` to restore the
+    seed driver's exact per-iteration callback cadence.  When a callback is
+    set the chunk does NOT donate the state buffers, so retained states
+    (checkpoint histories) stay valid on accelerators; without one the
+    state is donated and Q/R/acc buffers are reused across chunks.
+
+    Stop thresholds are compared ON DEVICE in the residual dtype: with x64
+    disabled (f32/c64 inputs) an err within ~1 ulp of ``tau`` can round the
+    stopping decision differently from the stepwise driver's float64 host
+    comparison — one basis at the boundary, nothing else.
 
     refresh: "auto" triggers :func:`greedy_refresh` when the tracked residual
     nears the Eq.-(6.3) cancellation floor (err^2 < safety * eps * ref^2);
@@ -224,49 +358,115 @@ def rb_greedy(
     if max_k is None:
         max_k = min(N, M)
     max_k = min(max_k, min(N, M))
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    # Resolve here, NOT at trace time: the jit cache is keyed on the static
+    # backend argument, so a still-None backend would freeze whatever the
+    # env/default resolved to at first trace.
+    backend = _backend.resolve_backend(backend)
+    state = greedy_init(S, max_k)
+    rdt = state.norms_sq.dtype
+    ref_sq = float(jnp.max(state.norms_sq))
+    scale = ref_sq ** 0.5  # fixed global column scale for the rank guard
+    # A callback may retain states (checkpointing); donation would
+    # invalidate those retained buffers on accelerators.
+    chunk_fn = _greedy_chunk if callback is not None else \
+        _greedy_chunk_donated
+    # invariant thresholds device-placed once; only ref_sq changes (refresh)
+    tau_d = jnp.asarray(tau, rdt)
+    scale_d = jnp.asarray(scale, rdt)
+    safety_d = jnp.asarray(refresh_safety, rdt)
+    ref_sq_d = jnp.asarray(ref_sq, rdt)
+    k = 0
+    while k < max_k:
+        state, n_done, stop = chunk_fn(
+            S, state, tau_d, scale_d, ref_sq_d, safety_d,
+            chunk=chunk, kappa=kappa, max_passes=max_passes,
+            backend=backend, check_refresh=(refresh == "auto"),
+        )
+        k = int(state.k)
+        if callback is not None:
+            callback(state)
+        stop = int(stop)
+        if stop == STOP_RANK:
+            # Numerical-rank exhaustion: the pivot's true orthogonalization
+            # residual is rounding noise — adding it would inject a junk,
+            # non-orthogonal direction (Cor. 5.6 says rnorm == err in exact
+            # arithmetic; their divergence is the symptom).  Drop and stop.
+            k -= 1
+            state = _drop_last(state, k)
+            break
+        if stop == STOP_TAU:
+            # Last added basis was selected at an error already below tau:
+            # drop it to match Algorithm 3's while-condition semantics.
+            k -= 1
+            state = _drop_last(state, k)
+            break
+        if stop == STOP_REFRESH:
+            # Approaching the Eq.-(6.3) cancellation floor while still above
+            # tau: recompute exact residuals and rescale the reference.
+            state = greedy_refresh(S, state)
+            ref_sq = max(float(jnp.max(state.norms_sq)), 1e-300)
+            ref_sq_d = jnp.asarray(ref_sq, rdt)
+            # The recorded err was floor noise; the *post-add* exact error
+            # decides whether any further basis is needed (keep this one).
+            if ref_sq ** 0.5 < tau:
+                break
+        # (no n_done check: the chunk cond guarantees >= 1 iteration, and
+        # reading it back would add a host sync per chunk)
+    return GreedyResult(
+        Q=state.Q, R=state.R, pivots=state.pivots, errs=state.errs,
+        k=state.k, n_ortho_passes=state.n_passes, rnorms=state.rnorms,
+    )
+
+
+def rb_greedy_stepwise(
+    S: jax.Array,
+    tau: float,
+    max_k: int | None = None,
+    kappa: float = 2.0,
+    max_passes: int = 3,
+    callback=None,
+    refresh: str = "auto",
+    refresh_safety: float = 100.0,
+    backend: str | None = None,
+) -> GreedyResult:
+    """The seed per-step driver: one jitted step + host sync per iteration.
+
+    Pays one dispatch plus ``float(errs[k-1])``/``float(rnorms[k-1])``
+    device->host syncs per basis vector.  Kept verbatim as (a) the parity
+    oracle for :func:`rb_greedy` and (b) the benchmark baseline the chunked
+    driver is measured against; ``callback(state)`` fires every iteration.
+    """
+    N, M = S.shape
+    if max_k is None:
+        max_k = min(N, M)
+    max_k = min(max_k, min(N, M))
+    backend = _backend.resolve_backend(backend)  # see rb_greedy
     state = greedy_init(S, max_k)
     eps = float(jnp.finfo(state.norms_sq.dtype).eps)
     ref_sq = float(jnp.max(state.norms_sq))
     scale = ref_sq ** 0.5  # fixed global column scale for the rank guard
     k = 0
     while k < max_k:
-        state = _jitted_step(S, state, kappa=kappa, max_passes=max_passes)
+        state = _jitted_step(S, state, kappa=kappa, max_passes=max_passes,
+                             backend=backend)
         k = int(state.k)
         if callback is not None:
             callback(state)
         err = float(state.errs[k - 1])
         rnorm = float(state.rnorms[k - 1])
         if rnorm < 50.0 * eps * scale:
-            # Numerical-rank exhaustion: the pivot's true orthogonalization
-            # residual is rounding noise — adding it would inject a junk,
-            # non-orthogonal direction (Cor. 5.6 says rnorm == err in exact
-            # arithmetic; their divergence is the symptom).  Drop and stop.
             k -= 1
-            state = state._replace(
-                k=jnp.asarray(k, jnp.int32),
-                Q=state.Q.at[:, k].set(0),
-                R=state.R.at[k, :].set(0),
-                pivots=state.pivots.at[k].set(-1),
-            )
+            state = _drop_last(state, k)
             break
         if err < tau:
-            # Last added basis was selected at an error already below tau:
-            # drop it to match Algorithm 3's while-condition semantics.
             k -= 1
-            state = state._replace(
-                k=jnp.asarray(k, jnp.int32),
-                Q=state.Q.at[:, k].set(0),
-                R=state.R.at[k, :].set(0),
-                pivots=state.pivots.at[k].set(-1),
-            )
+            state = _drop_last(state, k)
             break
         if refresh == "auto" and err * err < refresh_safety * eps * ref_sq:
-            # Approaching the Eq.-(6.3) cancellation floor while still above
-            # tau: recompute exact residuals and rescale the reference.
             state = greedy_refresh(S, state)
             ref_sq = max(float(jnp.max(state.norms_sq)), 1e-300)
-            # The recorded err was floor noise; the *post-add* exact error
-            # decides whether any further basis is needed (keep this one).
             if float(jnp.sqrt(ref_sq)) < tau:
                 break
     return GreedyResult(
@@ -275,13 +475,13 @@ def rb_greedy(
     )
 
 
-@functools.partial(jax.jit, static_argnames=("max_k", "kappa", "max_passes"))
 def rb_greedy_scan(
     S: jax.Array,
     tau: float,
     max_k: int,
     kappa: float = 2.0,
     max_passes: int = 3,
+    backend: str | None = None,
 ) -> GreedyResult:
     """Fixed-length ``lax.scan`` variant (embeddable inside jit).
 
@@ -289,6 +489,22 @@ def rb_greedy_scan(
     already below ``tau`` are masked out (the basis column stays zero), so
     the result matches :func:`rb_greedy` semantics with static shapes.
     """
+    # resolve pre-jit so the cache keys on the concrete backend name
+    return _rb_greedy_scan(S, tau, max_k, kappa, max_passes,
+                           _backend.resolve_backend(backend))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("max_k", "kappa", "max_passes", "backend")
+)
+def _rb_greedy_scan(
+    S: jax.Array,
+    tau: float,
+    max_k: int,
+    kappa: float = 2.0,
+    max_passes: int = 3,
+    backend: str | None = None,
+) -> GreedyResult:
 
     state0 = greedy_init(S, max_k)
     eps = jnp.finfo(state0.norms_sq.dtype).eps
@@ -300,19 +516,23 @@ def rb_greedy_scan(
         err = jnp.sqrt(res_sq[j])
 
         v = jax.lax.dynamic_slice_in_dim(S, j, 1, axis=1)[:, 0]
-        q, _, rnorm, n_pass = imgs_orthogonalize(v, state.Q, kappa, max_passes)
+        q, _, rnorm, n_pass = imgs_orthogonalize(
+            v, state.Q, kappa, max_passes, backend=backend
+        )
         # Mask out both converged iterations and numerical-rank-exhausted
         # pivots (junk directions whose residual is rounding noise).
         active = (err >= tau) & (rnorm >= 50.0 * eps * scale)
         q = jnp.where(active, q, jnp.zeros_like(q))
-        c = q.conj() @ S
+        c, acc_out, _, _ = _backend.pivot_update(
+            q, S, state.acc, state.norms_sq, backend=backend
+        )
 
         k = state.k
         new = GreedyState(
             Q=state.Q.at[:, k].set(q),
             R=state.R.at[k, :].set(c),
             norms_sq=state.norms_sq,
-            acc=state.acc + jnp.abs(c) ** 2,
+            acc=acc_out,
             pivots=state.pivots.at[k].set(
                 jnp.where(active, j.astype(jnp.int32), -1)
             ),

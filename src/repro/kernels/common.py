@@ -1,0 +1,50 @@
+"""Helpers shared by the Pallas kernel wrappers (ops.py modules).
+
+Single home for tile/padding/backend-detection logic so a change to
+padding semantics or lane constraints applies to every kernel at once.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+LANES = 128
+
+
+@functools.lru_cache(maxsize=None)
+def default_interpret() -> bool:
+    """Interpret-mode default, resolved ONCE per process (not per trace).
+
+    ``jax.default_backend()`` initializes backends and walks the device
+    list; calling it inside every trace of a jitted hot loop is wasted work
+    and can deadlock under some plugin backends.  The platform cannot change
+    after JAX is initialized, so a process-wide cache is exact.
+    """
+    return jax.default_backend() != "tpu"
+
+
+def validate_tiles(name: str, **tiles: int) -> None:
+    """Reject tile sizes the TPU lanes cannot shape, with a clear error."""
+    for tile_name, tile in tiles.items():
+        if tile <= 0 or tile % LANES != 0:
+            raise ValueError(
+                f"{name}: tile {tile_name}={tile} must be a positive "
+                f"multiple of {LANES} (TPU lane count); got a remainder of "
+                f"{tile % LANES if tile > 0 else tile}"
+            )
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def pad_to(x, size, axis, value=0.0):
+    pad = size - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)

@@ -12,19 +12,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.greedy_update import kernel as _k
-
-
-def _pad_to(x, size, axis, value=0.0):
-    pad = size - x.shape[axis]
-    if pad <= 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths, constant_values=value)
-
-
-def _round_up(x: int, m: int) -> int:
-    return ((x + m - 1) // m) * m
+from repro.kernels.common import (  # noqa: F401  (re-exported)
+    LANES,
+    default_interpret,
+    validate_tiles,
+)
+from repro.kernels.common import pad_to as _pad_to
+from repro.kernels.common import round_up as _round_up
 
 
 def greedy_update(
@@ -51,11 +45,12 @@ def greedy_update(
     :func:`repro.kernels.greedy_update.ref.greedy_update_ref`.
     """
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = default_interpret()
+    validate_tiles("greedy_update", nt=nt, mt=mt)
 
     N, M = S.shape
-    nt = min(nt, _round_up(N, 128))
-    mt = min(mt, _round_up(M, 128))
+    nt = min(nt, _round_up(N, LANES))
+    mt = min(mt, _round_up(M, LANES))
     Np, Mp = _round_up(N, nt), _round_up(M, mt)
 
     acc_p = _pad_to(acc[None, :].astype(jnp.float32), Mp, 1)

@@ -15,19 +15,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.imgs_project import kernel as _k
-
-
-def _round_up(x: int, m: int) -> int:
-    return ((x + m - 1) // m) * m
-
-
-def _pad_to(x, size, axis):
-    pad = size - x.shape[axis]
-    if pad <= 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
+from repro.kernels.common import (
+    LANES,
+    default_interpret,
+    validate_tiles,
+)
+from repro.kernels.common import pad_to as _pad_to
+from repro.kernels.common import round_up as _round_up
 
 
 def imgs_project(
@@ -42,7 +36,8 @@ def imgs_project(
     Matches :func:`repro.kernels.imgs_project.ref.imgs_project_ref`.
     """
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = default_interpret()
+    validate_tiles("imgs_project", nt=nt, kt=kt)
 
     N, K = Q.shape
     if jnp.iscomplexobj(Q):
@@ -58,8 +53,8 @@ def imgs_project(
         c = (ce[:K] + 1j * ce[K:]).astype(Q.dtype)
         return v_out, c
 
-    nt = min(nt, _round_up(N, 128))
-    kt = min(kt, _round_up(K, 128))
+    nt = min(nt, _round_up(N, LANES))
+    kt = min(kt, _round_up(K, LANES))
     Np, Kp = _round_up(N, nt), _round_up(K, kt)
     vp = _pad_to(v[None, :].astype(Q.dtype), Np, 1)
     Qp = _pad_to(_pad_to(Q, Np, 0), Kp, 1)

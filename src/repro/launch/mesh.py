@@ -10,14 +10,14 @@ from __future__ import annotations
 
 import jax
 
+from repro.compat import make_auto_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """v5e pod mesh: 16x16 = 256 chips per pod; 2 pods for multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_auto_mesh(shape, axes)
 
 
 def make_host_mesh(n: int | None = None, axes=("data", "model")):
@@ -29,9 +29,7 @@ def make_host_mesh(n: int | None = None, axes=("data", "model")):
     else:
         a = 2 if n % 2 == 0 and n > 1 else 1
         shape = (a, n // a)
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_auto_mesh(shape, axes)
 
 
 def dp_size(mesh) -> int:

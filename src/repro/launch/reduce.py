@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import make_auto_mesh
 from repro.configs.gw_greedy import CONFIG as GW_CONFIG, reduced as gw_reduced
 from repro.core.distributed import (
     DistGreedyState,
@@ -112,16 +113,14 @@ def dryrun(mesh_kind: str, out_dir: str):
     return rec
 
 
-def real_run(tau: float, out: str, small: bool):
+def real_run(tau: float, out: str, small: bool, chunk: int = 16,
+             backend: str | None = None):
     from repro.gw import build_snapshot_matrix, chirp_grid, frequency_grid
     from repro.checkpoint import save_checkpoint
 
     wl = gw_reduced() if small else GW_CONFIG
     devs = jax.devices()
-    mesh = jax.make_mesh(
-        (len(devs),), ("cols",),
-        axis_types=(jax.sharding.AxisType.Auto,),
-    )
+    mesh = make_auto_mesh((len(devs),), ("cols",))
     f = frequency_grid(20.0, 512.0, wl.n_rows)
     n_cols = wl.n_cols
     m1, m2 = chirp_grid(n_mc=n_cols // 16, n_eta=16)
@@ -132,14 +131,20 @@ def real_run(tau: float, out: str, small: bool):
     os.makedirs(out, exist_ok=True)
     ckpt_dir = os.path.join(out, "ckpt")
 
+    # The chunked driver invokes the callback once per chunk (k advances by
+    # up to `chunk` between calls), so checkpoint on an interval threshold
+    # rather than an exact k % 25 == 0 hit.
+    last_ckpt = [0]
+
     def cb(state):
         k = int(state.k)
-        if k % 25 == 0:
+        if k - last_ckpt[0] >= 25:
             save_checkpoint(state, ckpt_dir, k)
+            last_ckpt[0] = k
 
     t0 = time.time()
     res = distributed_greedy(S, tau=wl.tau, max_k=wl.max_k, mesh=mesh,
-                             callback=cb)
+                             callback=cb, chunk=chunk, backend=backend)
     k = int(res.k)
     print(f"greedy k={k} in {time.time()-t0:.1f}s; "
           f"final err={float(res.errs[max(k-1,0)]):.3e}")
@@ -158,11 +163,21 @@ def main():
     ap.add_argument("--tau", type=float, default=1e-6)
     ap.add_argument("--out", default="artifacts/reduce")
     ap.add_argument("--small", action="store_true")
+    ap.add_argument("--chunk", type=int, default=16,
+                    help="greedy iterations per device-resident chunk "
+                         "(1 = seed per-iteration cadence)")
+    ap.add_argument("--backend",
+                    choices=["auto", "xla", "pallas", "xla_ref"],
+                    default=None,
+                    help="hot-loop primitive backend (default: auto — "
+                         "Pallas kernels on TPU, jnp/XLA elsewhere; "
+                         "xla_ref = seed reference ops baseline)")
     args = ap.parse_args()
     if os.environ.get("REPRO_DRYRUN"):
         dryrun(args.mesh, args.out)
     else:
-        real_run(args.tau, args.out, args.small)
+        real_run(args.tau, args.out, args.small, chunk=args.chunk,
+                 backend=args.backend)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,77 @@
+"""Optional-``hypothesis`` shim for property tests.
+
+When ``hypothesis`` is installed (the ``[test]`` extra), this re-exports the
+real ``given``/``settings``/``st``.  On a bare ``jax`` install the property
+tests still run: ``given`` degrades to a deterministic sweep drawing
+``REPRO_FALLBACK_EXAMPLES`` (default 5) samples per test from a seeded
+generator — no shrinking or database, but the same code paths execute, so
+the suite collects and passes without the dependency.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic fallback on bare installs
+    import os
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1))
+            )
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(values):
+            vals = list(values)
+            return _Strategy(
+                lambda rng: vals[int(rng.integers(0, len(vals)))]
+            )
+
+    st = _Strategies()
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        n_examples = int(os.environ.get("REPRO_FALLBACK_EXAMPLES", "5"))
+
+        def deco(fn):
+            # NOTE: no functools.wraps — it would set __wrapped__ and make
+            # pytest introspect fn's original signature, then try to resolve
+            # the strategy parameters as fixtures.
+            def wrapper():
+                rng = np.random.default_rng(0)
+                for _ in range(n_examples):
+                    drawn = {
+                        name: s.draw(rng)
+                        for name, s in strategies.items()
+                    }
+                    fn(**drawn)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco

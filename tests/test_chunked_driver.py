@@ -1,0 +1,179 @@
+"""Chunked device-resident rb_greedy == the seed per-step driver.
+
+The chunked driver runs C iterations inside one jitted lax.while_loop and
+syncs only (n_done, stop_code) per chunk; these tests assert it matches
+:func:`rb_greedy_stepwise` pivot-for-pivot including the rank-guard drop,
+the tau-drop and the refresh path, across chunk sizes and dtypes.
+"""
+
+import subprocess
+import sys
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_smooth_matrix
+from repro.core import rb_greedy, rb_greedy_stepwise
+
+
+def _assert_same(a, b):
+    ka, kb = int(a.k), int(b.k)
+    assert ka == kb
+    assert np.array_equal(np.asarray(a.pivots), np.asarray(b.pivots))
+    np.testing.assert_allclose(np.asarray(a.errs), np.asarray(b.errs),
+                               rtol=1e-12, atol=1e-300)
+    np.testing.assert_allclose(np.asarray(a.Q), np.asarray(b.Q),
+                               rtol=1e-12, atol=1e-300)
+    np.testing.assert_allclose(np.asarray(a.rnorms), np.asarray(b.rnorms),
+                               rtol=1e-12, atol=1e-300)
+
+
+@pytest.mark.parametrize("dtype", [np.float64, np.complex128])
+@pytest.mark.parametrize("chunk", [1, 3, 16, 64])
+@pytest.mark.parametrize("tau", [1e-4, 1e-8])
+def test_matches_stepwise(dtype, chunk, tau):
+    S = jnp.asarray(make_smooth_matrix(dtype=dtype))
+    _assert_same(rb_greedy_stepwise(S, tau=tau),
+                 rb_greedy(S, tau=tau, chunk=chunk))
+
+
+@pytest.mark.parametrize("chunk", [1, 5, 16])
+def test_tau_drop_edge(chunk):
+    """tau hit mid-chunk: the below-tau basis is dropped exactly like the
+    seed driver (k, zeroed Q column/R row, pivot = -1)."""
+    S = jnp.asarray(make_smooth_matrix(dtype=np.float64))
+    a = rb_greedy_stepwise(S, tau=1e-6)
+    b = rb_greedy(S, tau=1e-6, chunk=chunk)
+    _assert_same(a, b)
+    k = int(b.k)
+    assert int(b.pivots[k]) == -1  # dropped slot marker
+    assert float(jnp.linalg.norm(b.Q[:, k])) == 0.0
+
+
+@pytest.mark.parametrize("chunk", [1, 4, 32])
+def test_rank_guard_edge(chunk):
+    """Exactly-low-rank snapshots: the junk pivot is dropped, not added."""
+    rng = np.random.default_rng(0)
+    A = rng.standard_normal((50, 8)) @ rng.standard_normal((8, 30))
+    S = jnp.asarray(A)
+    a = rb_greedy_stepwise(S, tau=1e-18)
+    b = rb_greedy(S, tau=1e-18, chunk=chunk)
+    _assert_same(a, b)
+    assert int(b.k) <= 9  # stopped at numerical rank, no junk directions
+
+
+@pytest.mark.parametrize("dtype", [np.float64, np.complex128])
+@pytest.mark.parametrize("chunk", [2, 16])
+def test_refresh_path(dtype, chunk):
+    """Deep tolerance exercises the refresh stop-code round trip."""
+    S = jnp.asarray(make_smooth_matrix(dtype=dtype))
+    a = rb_greedy_stepwise(S, tau=1e-12)
+    b = rb_greedy(S, tau=1e-12, chunk=chunk)
+    _assert_same(a, b)
+    from repro.core.errors import proj_error_max
+    assert float(proj_error_max(S, b.Q[:, :int(b.k)])) < 1e-11
+
+
+def test_refresh_never_matches(chunk=7):
+    S = jnp.asarray(make_smooth_matrix(dtype=np.float64))
+    _assert_same(rb_greedy_stepwise(S, tau=1e-8, refresh="never"),
+                 rb_greedy(S, tau=1e-8, chunk=chunk, refresh="never"))
+
+
+def test_callback_per_chunk():
+    S = jnp.asarray(make_smooth_matrix(dtype=np.float64))
+    ref = rb_greedy_stepwise(S, tau=1e-8)
+    k = int(ref.k)
+
+    seen = []
+    rb_greedy(S, tau=1e-8, chunk=4, callback=lambda s: seen.append(int(s.k)))
+    # once per chunk, strictly increasing, history arrays complete at each
+    assert seen == sorted(seen)
+    assert len(seen) <= -(-(k + 1) // 4) + 2
+    # chunk=1 restores the seed per-iteration cadence
+    seen1 = []
+    rb_greedy(S, tau=1e-8, chunk=1, callback=lambda s: seen1.append(int(s.k)))
+    assert seen1 == list(range(1, seen1[-1] + 1))
+    assert len(seen1) == k + 1  # k accepted + the dropped below-tau step
+
+
+def test_callback_history_is_complete():
+    """The per-chunk state carries the full per-step history (errs,
+    pivots, rnorms) — what the seed driver exposed per iteration."""
+    S = jnp.asarray(make_smooth_matrix(dtype=np.float64))
+    hist = {}
+
+    def cb(state):
+        k = int(state.k)
+        hist[k] = (np.asarray(state.errs[:k]).copy(),
+                   np.asarray(state.pivots[:k]).copy())
+
+    res = rb_greedy(S, tau=1e-8, chunk=8, callback=cb)
+    k = int(res.k)
+    last = hist[max(hist)]
+    ref = rb_greedy_stepwise(S, tau=1e-8)
+    np.testing.assert_allclose(last[0][:k], np.asarray(ref.errs[:k]))
+    assert np.array_equal(last[1][:k], np.asarray(ref.pivots[:k]))
+
+
+def test_invalid_chunk_rejected():
+    S = jnp.asarray(make_smooth_matrix(dtype=np.float64))
+    with pytest.raises(ValueError, match="chunk"):
+        rb_greedy(S, tau=1e-4, chunk=0)
+
+
+_DIST_SCRIPT = r"""
+import jax
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp, numpy as np, json
+from jax.sharding import Mesh
+from repro.core import rb_greedy_stepwise
+from repro.core.distributed import distributed_greedy
+
+x = np.linspace(0, 1, 200)
+nu = np.linspace(0.5, 2.0, 120)
+S = np.stack([np.sin(2*np.pi*v*x)*np.exp(-v*x) for v in nu], axis=1)
+S = jnp.asarray(S * np.exp(1j*np.outer(x, nu)))
+
+ser = rb_greedy_stepwise(S, tau=1e-5)
+k = int(ser.k)
+mesh = Mesh(np.asarray(jax.devices()), ("cols",))
+out = {"n_devices": len(jax.devices())}
+for chunk in (1, 8):
+    d = distributed_greedy(S, tau=1e-5, max_k=min(*S.shape), mesh=mesh,
+                           chunk=chunk)
+    kd = int(d.k)
+    out[f"chunk{chunk}"] = {
+        "k_serial": k, "k_dist": kd,
+        "pivots_equal": bool(np.array_equal(np.asarray(ser.pivots[:k]),
+                                            np.asarray(d.pivots[:kd]))),
+        "max_err_diff": float(np.max(np.abs(
+            np.asarray(ser.errs[:k]) - np.asarray(d.errs[:kd])))),
+    }
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def dist_chunk_result():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    proc = subprocess.run([sys.executable, "-c", _DIST_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    import json
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULT ")][-1]
+    return json.loads(line[len("RESULT "):])
+
+
+@pytest.mark.parametrize("chunk", [1, 8])
+def test_distributed_chunked_matches_serial(dist_chunk_result, chunk):
+    r = dist_chunk_result[f"chunk{chunk}"]
+    assert r["k_dist"] == r["k_serial"]
+    assert r["pivots_equal"]
+    assert r["max_err_diff"] < 1e-10

@@ -16,6 +16,7 @@ import jax
 jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp, numpy as np, json
 from repro.core import rb_greedy
+from repro.compat import make_auto_mesh
 from repro.core.distributed import distributed_greedy, dist_greedy_init, state_shardings
 from repro.core.errors import proj_error_max, orthogonality_defect
 from repro.gw import build_snapshot_matrix, chirp_grid, frequency_grid
@@ -29,8 +30,7 @@ k = int(g_ser.k)
 
 out = {"n_devices": len(jax.devices())}
 for shape, axes in [((8,), ("cols",)), ((2, 4), ("data", "model"))]:
-    mesh = jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    mesh = make_auto_mesh(shape, axes)
     g = distributed_greedy(S, tau=1e-5, max_k=min(*S.shape), mesh=mesh)
     kd = int(g.k)
     out[str(shape)] = {
@@ -50,7 +50,7 @@ import repro.core.distributed as D
 from repro.checkpoint import save_checkpoint, restore_checkpoint
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-mesh8 = jax.make_mesh((8,), ("cols",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh8 = make_auto_mesh((8,), ("cols",))
 S8 = jax.device_put(S, NamedSharding(mesh8, P(None, ("cols",))))
 state = D.dist_greedy_init(S8, 30, mesh8)
 step8 = D.make_dist_greedy_step(mesh8)
@@ -59,9 +59,7 @@ for _ in range(10):
 
 with tempfile.TemporaryDirectory() as d:
     save_checkpoint(state, d, 10)
-    mesh4 = jax.make_mesh((4,), ("cols",),
-                          axis_types=(jax.sharding.AxisType.Auto,),
-                          devices=jax.devices()[:4])
+    mesh4 = make_auto_mesh((4,), ("cols",), devices=jax.devices()[:4])
     specs4 = D.state_specs(mesh4)
     # placement targets with the NEW mesh's shardings (reshard-on-restore)
     tgt = jax.tree.map(

@@ -8,7 +8,7 @@ sweep), and GW waveform snapshots.
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from conftest import make_smooth_matrix
 from repro.core import mgs_pivoted_qr, rb_greedy

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.greedy_update.ops import greedy_update
 from repro.kernels.greedy_update.ref import greedy_update_ref

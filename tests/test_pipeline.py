@@ -11,12 +11,12 @@ SCRIPT = r"""
 import jax, json
 import jax.numpy as jnp
 import numpy as np
+from repro.compat import make_auto_mesh
 from repro.configs import get_reduced
 from repro.training.pipeline import make_pipeline_forward
 from repro.models import api, transformer as tfm
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+mesh = make_auto_mesh((2, 2, 2), ("pod", "data", "model"))
 cfg = get_reduced("stablelm-3b").replace(n_layers=4)
 params = api.init_params(cfg, jax.random.key(0))
 n_micro, B, S = 4, 2, 16

@@ -19,14 +19,14 @@ import os, json
 import jax
 from repro.configs import get_reduced
 from repro.launch import specs as S
+from repro.compat import make_auto_mesh
 from repro.launch import roofline as R
 from repro.models.config import ShapeConfig
 from repro.models.transformer import unroll_layers
 from repro.sharding import use_mesh
 from repro.training.trainer import make_train_step
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_auto_mesh((2, 4), ("data", "model"))
 shape = ShapeConfig("t", 128, 8, "train")
 
 def cost(L, unroll):

@@ -97,12 +97,12 @@ from repro.configs import get_reduced
 from repro.launch import specs as S
 from repro.launch import roofline as R
 from repro.models import api
+from repro.compat import make_auto_mesh
 from repro.models.config import ShapeConfig
 from repro.sharding import use_mesh
 from repro.training.trainer import make_train_step
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_auto_mesh((2, 4), ("data", "model"))
 cfg = get_reduced("mixtral-8x7b")
 shape = ShapeConfig("t", 64, 8, "train")
 step = make_train_step(cfg, n_microbatches=2, donate=False)
@@ -152,12 +152,12 @@ import jax, numpy as np
 import jax.numpy as jnp
 from repro.configs import get_reduced
 from repro.models import api
+from repro.compat import make_auto_mesh
 from repro.launch import specs as S
 from repro.sharding import use_mesh
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_auto_mesh((2, 4), ("data", "model"))
 for arch in ("stablelm-3b", "mixtral-8x7b"):
     base = get_reduced(arch).replace(
         d_model=64, n_heads=8, n_kv_heads=4, vocab_size=256)

@@ -123,9 +123,11 @@ def test_training_reduces_loss(cfg):
     state = train_state_init(cfg, jax.random.key(0))
     data = SyntheticLMData(vocab_size=cfg.vocab_size, seq_len=32,
                            global_batch=8)
+    # run the full LR schedule (warmup + decay to total_steps): at 40/60
+    # steps the loss is still mid-descent and the margin check is flaky
     step = make_train_step(cfg, base_lr=1e-3, warmup=5, total_steps=60)
     losses = []
-    for i in range(40):
+    for i in range(60):
         state, m = step(state, data.batch(i))
         losses.append(float(m["loss"]))
     assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1
