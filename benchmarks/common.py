@@ -36,3 +36,18 @@ def emit(name: str, us_per_call: float, derived: str = ""):
 def records() -> list[dict]:
     """All rows emitted so far (in emission order)."""
     return list(_RECORDS)
+
+
+def write_bench_json(path: str) -> int:
+    """Dump the registry as {name: us_per_call, _derived: {...}} JSON —
+    the machine-readable perf-trajectory format tracked across PRs.
+    Returns the number of rows written."""
+    import json
+
+    rows = records()
+    payload = {r["name"]: r["us_per_call"] for r in rows}
+    payload["_derived"] = {r["name"]: r["derived"] for r in rows
+                           if r["derived"]}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    return len(rows)

@@ -23,7 +23,6 @@ BEFORE jax initializes.
 
 from __future__ import annotations
 
-import json
 import os
 import sys
 import traceback
@@ -51,6 +50,8 @@ def main() -> None:
         weak_scaling,
     )
 
+    # (benchmarks/streaming_sweep.py is its own CI step writing
+    # BENCH_streaming.json — not in this loop, so the smoke runs once)
     ok = True
     for mod in (pivot_timing, ortho_timing, flops_model, kernel_fusion,
                 strong_scaling, weak_scaling, roofline_table):
@@ -62,13 +63,8 @@ def main() -> None:
                   file=sys.stdout)
             traceback.print_exc(file=sys.stderr)
 
-    rows = common.records()
-    payload = {r["name"]: r["us_per_call"] for r in rows}
-    payload["_derived"] = {r["name"]: r["derived"] for r in rows
-                           if r["derived"]}
-    with open(BENCH_JSON, "w") as f:
-        json.dump(payload, f, indent=1, sort_keys=True)
-    print(f"# wrote {len(rows)} rows to {BENCH_JSON}", file=sys.stderr)
+    n_rows = common.write_bench_json(BENCH_JSON)
+    print(f"# wrote {n_rows} rows to {BENCH_JSON}", file=sys.stderr)
 
     if not ok:
         raise SystemExit(1)

@@ -1,8 +1,9 @@
 from repro.checkpoint.io import (
-    save_checkpoint, restore_checkpoint, latest_step, AsyncCheckpointer,
+    save_checkpoint, restore_checkpoint, load_checkpoint_raw, latest_step,
+    AsyncCheckpointer,
 )
 
 __all__ = [
-    "save_checkpoint", "restore_checkpoint", "latest_step",
-    "AsyncCheckpointer",
+    "save_checkpoint", "restore_checkpoint", "load_checkpoint_raw",
+    "latest_step", "AsyncCheckpointer",
 ]

@@ -84,9 +84,16 @@ def latest_step(directory: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
-def restore_checkpoint(target: Any, directory: str,
-                       step: Optional[int] = None) -> Any:
-    """Load into the structure/shardings of ``target`` (reshard-on-restore)."""
+def load_checkpoint_raw(directory: str, step: Optional[int] = None,
+                        names=None) -> dict[str, np.ndarray]:
+    """Load a checkpoint as a flat ``{leaf-name: array}`` dict, no target.
+
+    :func:`restore_checkpoint` needs a template pytree for structure and
+    shardings; consumers that own their state layout (the streaming greedy
+    driver's resume path) can instead read the manifest directly.  CRCs are
+    verified; arrays come back as host numpy.  ``names`` (optional set)
+    restricts loading to those leaves — untouched leaves pay no I/O.
+    """
     if step is None:
         step = latest_step(directory)
         if step is None:
@@ -94,19 +101,30 @@ def restore_checkpoint(target: Any, directory: str,
     d = os.path.join(directory, f"step_{step:08d}")
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
-    by_name = {m["name"]: m for m in manifest["leaves"]}
+    out = {}
+    for meta in manifest["leaves"]:
+        if names is not None and meta["name"] not in names:
+            continue
+        arr = np.load(os.path.join(d, meta["name"] + ".npy"))
+        if zlib.crc32(arr.tobytes()) != meta["crc32"]:
+            raise IOError(f"crc mismatch for {meta['name']}")
+        out[meta["name"]] = arr
+    return out
 
+
+def restore_checkpoint(target: Any, directory: str,
+                       step: Optional[int] = None) -> Any:
+    """Load into the structure/shardings of ``target`` (reshard-on-restore)."""
     paths_leaves = jax.tree_util.tree_flatten_with_path(target)[0]
     treedef = jax.tree_util.tree_structure(target)
+    wanted = {_leaf_name(path) for path, _ in paths_leaves}
+    by_name = load_checkpoint_raw(directory, step, names=wanted)
     out = []
     for path, leaf in paths_leaves:
         name = _leaf_name(path)
         if name not in by_name:
             raise KeyError(f"checkpoint missing leaf {name}")
-        arr = np.load(os.path.join(d, name + ".npy"))
-        meta = by_name[name]
-        if zlib.crc32(arr.tobytes()) != meta["crc32"]:
-            raise IOError(f"crc mismatch for {name}")
+        arr = by_name[name]
         if hasattr(leaf, "sharding") and leaf.sharding is not None:
             out.append(jax.device_put(arr, leaf.sharding))
         else:

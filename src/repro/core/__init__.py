@@ -8,6 +8,8 @@
 - :mod:`repro.core.eim`            -- empirical interpolation + ROQ.
 - :mod:`repro.core.errors`         -- the paper's error identities.
 - :mod:`repro.core.distributed`    -- shard_map column-parallel greedy (Sec 6).
+- :mod:`repro.core.streaming`      -- out-of-core tile-streamed greedy over
+  snapshot providers (M unbounded; peak device memory O(N(max_k+tile_m))).
 - :mod:`repro.core.backend`        -- hot-loop primitive dispatch
   (fused Pallas TPU kernels vs pure-jnp XLA; see its module docstring).
 """
@@ -25,13 +27,15 @@ from repro.core.greedy import (
     rb_greedy,
     rb_greedy_stepwise,
 )
+from repro.core.streaming import StreamedGreedyResult, rb_greedy_streamed
 from repro.core.rrqr import optimal_rrqr
 from repro.core.reconstruction import reconstruction
 from repro.core.eim import eim_nodes, empirical_interpolant, roq_weights
 
 __all__ = [
     "pod", "pod_basis", "mgs_pivoted_qr", "GreedyResult", "rb_greedy",
-    "rb_greedy_stepwise", "imgs_orthogonalize", "optimal_rrqr",
+    "rb_greedy_stepwise", "rb_greedy_streamed", "StreamedGreedyResult",
+    "imgs_orthogonalize", "optimal_rrqr",
     "reconstruction", "eim_nodes", "empirical_interpolant", "roq_weights",
     "default_backend", "resolve_backend", "set_default_backend",
 ]

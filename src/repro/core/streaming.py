@@ -1,0 +1,490 @@
+"""Out-of-core tile-streamed RB-greedy over snapshot providers.
+
+:func:`rb_greedy_streamed` is an exact refactor of the in-memory drivers in
+:mod:`repro.core.greedy` for snapshot matrices that never fit on device (the
+paper's headline scenario: a dense complex 10,000 x 3,276,800 matrix,
+~0.5 TB, Sec. 6.1.1).  Per iteration it sweeps column tiles of the matrix
+through the SAME fused backend primitives as the resident drivers:
+
+  per tile      the Eq.-(6.3) pivot sweep (:func:`repro.core.backend.
+                pivot_update`): ``c_t = q^H S_t``, ``acc_t += |c_t|^2``,
+                plus the tile's residual (max, argmax) — produced in the
+                same fused pass,
+  across tiles  a running (value, global column) max-loc reduction — the
+                single-machine analogue of the ``MPI_Allreduce(MAXLOC)``
+                the paper's code performs across ranks (Sec. 6.1.3),
+  per pivot     :func:`repro.core.greedy.imgs_orthogonalize` against the
+                device-resident basis Q — bit-identical to the in-memory
+                drivers because Q and the pivot column are the same arrays.
+
+Only Q (N x max_k) and one tile (N x tile_m) are ever device-resident;
+the Eq.-(6.3) residual caches (``norms_sq``, ``acc``: M reals each) and
+the optional R factor live on host.  Peak device memory is
+O(N * (max_k + tile_m)) — independent of M.
+
+Stop semantics (tau drop, rank guard, Eq.-(6.3) refresh) replicate
+:func:`repro.core.greedy.rb_greedy_stepwise` exactly; the parity suite
+(tests/test_streaming.py) asserts pivot-for-pivot agreement across tile
+sizes, dtypes and providers.
+
+Mid-build checkpointing persists the full streaming state — tile cursor,
+pending pivot, residual caches — through :mod:`repro.checkpoint.io`; a
+killed build resumes from the last completed tile, not the last basis.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+import os
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import backend as _backend
+from repro.core.greedy import imgs_orthogonalize
+from repro.data.providers import SnapshotProvider, as_provider
+
+_STATE_VERSION = 1
+
+
+class StreamedGreedyResult(NamedTuple):
+    """Result of the streamed greedy build (field names match
+    :class:`repro.core.greedy.GreedyResult`).
+
+    Attributes:
+      Q:      (N, max_k) device array, orthonormal basis; columns >= k zero.
+      R:      (max_k, M) host array ``R[j] = q_j^H S`` in original column
+              order, or ``None`` when built with ``keep_R=False`` (R costs
+              O(max_k * M) host memory — the one result piece that scales
+              with M).
+      pivots: (max_k,) int32 host array; entries >= k are -1.
+      errs:   (max_k,) greedy error before adding basis j (real dtype).
+      k:      number of accepted bases.
+      n_ortho_passes, rnorms: per-basis iterated-GS diagnostics, as in the
+              in-memory drivers.
+      tile_m: tile width the build used; n_tiles: ceil(M / tile_m).
+    """
+
+    Q: jax.Array
+    R: Optional[np.ndarray]
+    pivots: np.ndarray
+    errs: np.ndarray
+    k: int
+    n_ortho_passes: np.ndarray
+    rnorms: np.ndarray
+    tile_m: int
+    n_tiles: int
+
+
+@jax.jit
+def _tile_init(T: jax.Array):
+    """Column norms^2 of one tile + the tile's (max, argmax) — the init
+    pass's contribution to the first pivot's max-loc reduction."""
+    n = jnp.sum(jnp.abs(T) ** 2, axis=0)
+    return n, jnp.max(n), jnp.argmax(n).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _tile_sweep(q, T, acc_t, norms_t, backend: str):
+    """One tile's Eq.-(6.3) sweep through the fused backend primitive."""
+    return _backend.pivot_update(q, T, acc_t, norms_t, backend=backend)
+
+
+@jax.jit
+def _tile_refresh(Q: jax.Array, T: jax.Array):
+    """Exact residual^2 of one tile against Q (zero columns are no-ops) —
+    the tile-local form of :func:`repro.core.greedy.greedy_refresh`."""
+    C = Q.conj().T @ T
+    E = T - Q @ C
+    res = jnp.sum(jnp.abs(E) ** 2, axis=0)
+    return res, jnp.max(res), jnp.argmax(res).astype(jnp.int32)
+
+
+_jit_ortho = jax.jit(
+    imgs_orthogonalize, static_argnames=("kappa", "max_passes", "backend")
+)
+
+
+class _StreamState:
+    """Host-side streaming state: everything needed to resume mid-build.
+
+    ``pending == 1`` means a pivot has been selected and orthogonalized but
+    its Eq.-(6.3) sweep has only covered tiles [0, cursor) — resume
+    continues the sweep (acc/R for swept tiles are already updated; the
+    sweep is deterministic given the checkpointed acc, so replaying the
+    remaining tiles reproduces the uninterrupted build exactly).
+    """
+
+    __slots__ = (
+        "Q", "R", "norms_sq", "acc", "pivots", "errs", "rnorms", "n_passes",
+        "k", "ref_sq", "scale", "best_val", "best_col", "pending", "cursor",
+        "pending_q", "pending_col", "pending_err", "pending_rnorm",
+        "pending_npass", "sweep_val", "sweep_col", "seq", "tile_m",
+        "backend",
+    )
+
+    def to_tree(self) -> dict:
+        """Flat numpy pytree for :func:`repro.checkpoint.io.save_checkpoint`."""
+        tree = {
+            "version": np.asarray(_STATE_VERSION, np.int64),
+            # cursor/pending are expressed in tile units, so a resume MUST
+            # use the same tiling — persisted for validation, as is the
+            # backend (a mid-sweep resume under a different backend would
+            # mix float summation orders within one acc update).
+            "tile_m": np.asarray(self.tile_m, np.int64),
+            "backend": np.asarray(self.backend),
+            "Q": np.asarray(jax.device_get(self.Q)),
+            "norms_sq": self.norms_sq,
+            "acc": self.acc,
+            "pivots": self.pivots,
+            "errs": self.errs,
+            "rnorms": self.rnorms,
+            "n_passes": self.n_passes,
+            "k": np.asarray(self.k, np.int64),
+            "ref_sq": np.asarray(self.ref_sq, np.float64),
+            "scale": np.asarray(self.scale, np.float64),
+            "best_val": np.asarray(self.best_val, np.float64),
+            "best_col": np.asarray(self.best_col, np.int64),
+            "pending": np.asarray(self.pending, np.int64),
+            "cursor": np.asarray(self.cursor, np.int64),
+            "pending_q": np.asarray(jax.device_get(self.pending_q)),
+            "pending_col": np.asarray(self.pending_col, np.int64),
+            "pending_err": np.asarray(self.pending_err, np.float64),
+            "pending_rnorm": np.asarray(self.pending_rnorm, np.float64),
+            "pending_npass": np.asarray(self.pending_npass, np.int64),
+            "sweep_val": np.asarray(self.sweep_val, np.float64),
+            "sweep_col": np.asarray(self.sweep_col, np.int64),
+            "seq": np.asarray(self.seq, np.int64),
+        }
+        if self.R is not None:
+            # Only the rows written so far (committed bases + the pending
+            # sweep's partial row): checkpoint traffic scales with k*M, not
+            # max_k*M.  keep_R=False avoids R checkpoint traffic entirely.
+            tree["R"] = self.R[:self.k + self.pending]
+        return tree
+
+    @classmethod
+    def from_tree(cls, tree: dict) -> "_StreamState":
+        version = int(tree["version"])
+        if version != _STATE_VERSION:
+            raise ValueError(
+                f"streaming checkpoint version {version} != supported "
+                f"{_STATE_VERSION}"
+            )
+        st = cls()
+        st.tile_m = int(tree["tile_m"])
+        st.backend = str(tree["backend"])
+        st.Q = jnp.asarray(tree["Q"])
+        max_k = st.Q.shape[1]
+        M = tree["norms_sq"].shape[0]
+        R_rows = tree.get("R")
+        if R_rows is not None:
+            st.R = np.zeros((max_k, M), R_rows.dtype)
+            st.R[:R_rows.shape[0]] = R_rows
+        else:
+            st.R = None
+        st.norms_sq = tree["norms_sq"]
+        st.acc = tree["acc"]
+        st.pivots = tree["pivots"]
+        st.errs = tree["errs"]
+        st.rnorms = tree["rnorms"]
+        st.n_passes = tree["n_passes"]
+        st.k = int(tree["k"])
+        st.ref_sq = float(tree["ref_sq"])
+        st.scale = float(tree["scale"])
+        st.best_val = float(tree["best_val"])
+        st.best_col = int(tree["best_col"])
+        st.pending = int(tree["pending"])
+        st.cursor = int(tree["cursor"])
+        st.pending_q = jnp.asarray(tree["pending_q"])
+        st.pending_col = int(tree["pending_col"])
+        st.pending_err = float(tree["pending_err"])
+        st.pending_rnorm = float(tree["pending_rnorm"])
+        st.pending_npass = int(tree["pending_npass"])
+        st.sweep_val = float(tree["sweep_val"])
+        st.sweep_col = int(tree["sweep_col"])
+        st.seq = int(tree["seq"])
+        return st
+
+
+def _fresh_state(prov: SnapshotProvider, max_k: int, tiles, tile_m: int,
+                 keep_R: bool, rdt, backend: str) -> _StreamState:
+    """Init pass: stream all tiles once for column norms^2 + first max-loc."""
+    N, M = prov.shape
+    dtype = jnp.dtype(prov.dtype)
+    st = _StreamState()
+    st.tile_m = tile_m
+    st.backend = backend
+    st.norms_sq = np.empty((M,), rdt)
+    best_val, best_col = -math.inf, -1
+    for lo, hi in tiles:
+        n, mx, am = _tile_init(prov.tile(lo, hi))
+        st.norms_sq[lo:hi] = np.asarray(n, rdt)
+        val = float(mx)
+        if val > best_val:
+            best_val, best_col = val, lo + int(am)
+    st.acc = np.zeros((M,), rdt)
+    st.Q = jnp.zeros((N, max_k), dtype)
+    st.R = np.zeros((max_k, M), np.dtype(dtype)) if keep_R else None
+    st.pivots = np.full((max_k,), -1, np.int32)
+    st.errs = np.zeros((max_k,), rdt)
+    st.rnorms = np.zeros((max_k,), rdt)
+    st.n_passes = np.zeros((max_k,), np.int32)
+    st.k = 0
+    # Same reference scale the in-memory drivers fix at init: ref_sq is the
+    # refresh trigger's reference, scale the rank guard's global scale.
+    st.ref_sq = best_val
+    st.scale = max(best_val, 0.0) ** 0.5
+    st.best_val, st.best_col = best_val, best_col
+    st.pending = 0
+    st.cursor = 0
+    st.pending_q = jnp.zeros((N,), dtype)
+    st.pending_col = -1
+    st.pending_err = 0.0
+    st.pending_rnorm = 0.0
+    st.pending_npass = 0
+    st.sweep_val, st.sweep_col = -math.inf, -1
+    st.seq = 0
+    return st
+
+
+def _save_state(st: _StreamState, directory: str, keep: int = 2) -> None:
+    from repro.checkpoint.io import save_checkpoint
+
+    st.seq += 1
+    save_checkpoint(st.to_tree(), directory, st.seq)
+    # Prune old step dirs: each holds a full state copy (incl. R), and only
+    # the newest complete one is ever restored.
+    import re
+    import shutil
+
+    steps = sorted(
+        int(m.group(1)) for d in os.listdir(directory)
+        if (m := re.fullmatch(r"step_(\d+)", d))
+    )
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+def _load_state(directory: str) -> Optional[_StreamState]:
+    from repro.checkpoint.io import latest_step, load_checkpoint_raw
+
+    if latest_step(directory) is None:
+        return None
+    return _StreamState.from_tree(load_checkpoint_raw(directory))
+
+
+def rb_greedy_streamed(
+    source,
+    tau: float,
+    max_k: int | None = None,
+    *,
+    tile_m: int = 8192,
+    kappa: float = 2.0,
+    max_passes: int = 3,
+    refresh: str = "auto",
+    refresh_safety: float = 100.0,
+    backend: str | None = None,
+    keep_R: bool = True,
+    checkpoint_dir: str | os.PathLike | None = None,
+    checkpoint_every_tiles: int = 0,
+    resume: bool = False,
+    callback: Callable[[dict[str, Any]], None] | None = None,
+) -> StreamedGreedyResult:
+    """Algorithm 3 over a :class:`~repro.data.providers.SnapshotProvider`.
+
+    ``source`` may be a provider, a resident array, or a path to a ``.npy``
+    snapshot file (coerced via :func:`repro.data.providers.as_provider`).
+    Selects the same pivots and builds the same basis as
+    :func:`repro.core.greedy.rb_greedy` on the materialized matrix
+    (tests/test_streaming.py), while holding only Q and one N x ``tile_m``
+    tile on device.
+
+    Args beyond the in-memory drivers':
+      tile_m: columns per streamed tile.  Device peak is
+        O(N * (max_k + tile_m)); throughput prefers the largest tile that
+        fits (every greedy iteration re-streams all of S through the
+        Eq.-(6.3) sweep either way).
+      keep_R: accumulate the (max_k, M) R factor on host.  Disable for
+        M so large that even one host row set is unwanted.
+      checkpoint_dir: if set, persist streaming state via
+        :mod:`repro.checkpoint.io` after every accepted basis (and refresh).
+      checkpoint_every_tiles: additionally checkpoint mid-sweep every this
+        many tiles (0 = per-basis only).  With T tiles per sweep a crash
+        loses at most ``checkpoint_every_tiles`` tile sweeps of work.
+      resume: load the latest checkpoint from ``checkpoint_dir`` and
+        continue (fresh build if the directory has none).
+      callback: called once per accepted basis with a dict
+        ``{k, pivot, err, rnorm, n_passes}``.
+    """
+    prov = as_provider(source)
+    N, M = prov.shape
+    if max_k is None:
+        max_k = min(N, M)
+    max_k = min(max_k, N, M)
+    if tile_m < 1:
+        raise ValueError(f"tile_m must be >= 1, got {tile_m}")
+    if checkpoint_every_tiles < 0:
+        raise ValueError("checkpoint_every_tiles must be >= 0")
+    if resume and checkpoint_dir is None:
+        raise ValueError("resume=True requires checkpoint_dir")
+    backend = _backend.resolve_backend(backend)
+    ckpt_dir = os.fspath(checkpoint_dir) if checkpoint_dir is not None \
+        else None
+
+    tiles = list(prov.tiles(tile_m))
+    dtype = jnp.dtype(prov.dtype)
+    rdt = np.zeros((), dtype).real.dtype
+    eps = float(jnp.finfo(rdt).eps)
+
+    st = _load_state(ckpt_dir) if (resume and ckpt_dir) else None
+    if st is not None:
+        if st.Q.shape != (N, max_k) or st.norms_sq.shape != (M,):
+            raise ValueError(
+                f"checkpoint shape mismatch: Q {st.Q.shape} / M "
+                f"{st.norms_sq.shape[0]} vs requested ({N}, {max_k}) / {M}"
+            )
+        if st.tile_m != tile_m:
+            # The persisted cursor/pending-sweep fields are in tile units:
+            # resuming under a different tiling would re-apply part of the
+            # in-flight sweep (silently wrong acc/R), so refuse.
+            raise ValueError(
+                f"checkpoint tile_m mismatch: saved {st.tile_m}, "
+                f"requested {tile_m}"
+            )
+        if st.Q.dtype != dtype:
+            raise ValueError(
+                f"checkpoint dtype mismatch: saved {st.Q.dtype}, provider "
+                f"{dtype}"
+            )
+        if st.pending and st.backend != backend:
+            # A completed sweep is backend-portable; an in-flight one is
+            # not (its partial acc carries one backend's summation order).
+            raise ValueError(
+                f"checkpoint has an in-flight sweep under backend "
+                f"{st.backend!r}; resume with that backend (requested "
+                f"{backend!r}) or restart from a basis boundary"
+            )
+        st.backend = backend
+        if (st.R is not None) != keep_R:
+            raise ValueError("checkpoint keep_R setting differs from call")
+    else:
+        st = _fresh_state(prov, max_k, tiles, tile_m, keep_R, rdt, backend)
+        if ckpt_dir:
+            # A fresh build may target a directory holding an older run's
+            # steps: continue the step numbering past them so the new
+            # saves sort newest (and the pruner retires the stale ones)
+            # instead of being shadowed — and deleted — by them.
+            from repro.checkpoint.io import latest_step
+
+            st.seq = latest_step(ckpt_dir) or 0
+
+    rzero = np.zeros((), rdt)
+
+    while True:
+        if not st.pending:
+            if st.k >= max_k:
+                break
+            # Pivot from the running max-loc reduction (folded across tiles
+            # during the previous sweep / init / refresh pass).  err is the
+            # same clipped sqrt the in-memory drivers compute, evaluated in
+            # the residual dtype.
+            err = float(np.sqrt(np.maximum(np.asarray(st.best_val, rdt),
+                                           rzero)))
+            if err < tau:
+                break
+            j = st.best_col
+            v = prov.column(j)
+            q, _, rnorm_d, npass_d = _jit_ortho(
+                v, st.Q, kappa=kappa, max_passes=max_passes, backend=backend
+            )
+            rnorm = float(rnorm_d)
+            if rnorm < 50.0 * eps * st.scale:
+                # Numerical-rank exhaustion (same guard as the in-memory
+                # drivers): the pivot's true residual is rounding noise.
+                break
+            st.pending = 1
+            st.cursor = 0
+            st.pending_q = q
+            st.pending_col = j
+            st.pending_err = err
+            st.pending_rnorm = rnorm
+            st.pending_npass = int(npass_d)
+            st.sweep_val, st.sweep_col = -math.inf, -1
+
+        # --- Eq.-(6.3) sweep over tiles (resumable at tile granularity) ---
+        q = st.pending_q
+        while st.cursor < len(tiles):
+            lo, hi = tiles[st.cursor]
+            T = prov.tile(lo, hi)
+            c, acc_out, mx, am = _tile_sweep(
+                q, T, jnp.asarray(st.acc[lo:hi]),
+                jnp.asarray(st.norms_sq[lo:hi]), backend
+            )
+            st.acc[lo:hi] = np.asarray(acc_out, rdt)
+            if st.R is not None:
+                st.R[st.k, lo:hi] = np.asarray(c)
+            # Running MAXLOC fold: strict > keeps the earliest tile on
+            # ties, matching jnp.argmax's first-max tie-break on the full
+            # residual vector.
+            val = float(mx)
+            if val > st.sweep_val:
+                st.sweep_val, st.sweep_col = val, lo + int(am)
+            st.cursor += 1
+            if (ckpt_dir and checkpoint_every_tiles
+                    and st.cursor < len(tiles)
+                    and st.cursor % checkpoint_every_tiles == 0):
+                _save_state(st, ckpt_dir)
+
+        # --- commit the basis -------------------------------------------
+        k = st.k
+        st.Q = st.Q.at[:, k].set(q)
+        st.pivots[k] = st.pending_col
+        st.errs[k] = st.pending_err
+        st.rnorms[k] = st.pending_rnorm
+        st.n_passes[k] = st.pending_npass
+        st.k = k + 1
+        st.best_val, st.best_col = st.sweep_val, st.sweep_col
+        err = st.pending_err
+        st.pending = 0
+        st.cursor = 0
+        st.pending_q = jnp.zeros_like(st.pending_q)
+        if callback is not None:
+            callback({"k": st.k, "pivot": int(st.pivots[k]),
+                      "err": float(err), "rnorm": float(st.rnorms[k]),
+                      "n_passes": int(st.n_passes[k])})
+
+        # --- Eq.-(6.3) refresh near the cancellation floor ---------------
+        stop_after_refresh = False
+        if refresh == "auto" and err * err < refresh_safety * eps * st.ref_sq:
+            new_norms = np.empty_like(st.norms_sq)
+            best_val, best_col = -math.inf, -1
+            for lo, hi in tiles:
+                res, mx, am = _tile_refresh(st.Q, prov.tile(lo, hi))
+                new_norms[lo:hi] = np.asarray(res, rdt)
+                val = float(mx)
+                if val > best_val:
+                    best_val, best_col = val, lo + int(am)
+            st.norms_sq = new_norms
+            st.acc[:] = 0
+            st.best_val, st.best_col = best_val, best_col
+            st.ref_sq = max(best_val, 1e-300)
+            if st.ref_sq ** 0.5 < tau:
+                stop_after_refresh = True
+
+        if ckpt_dir:
+            _save_state(st, ckpt_dir)
+        if stop_after_refresh:
+            break
+
+    # (no final save: every state mutation above is followed by a save —
+    # the pivot-selection / tau / rank-guard exits mutate nothing)
+    return StreamedGreedyResult(
+        Q=st.Q, R=st.R, pivots=st.pivots, errs=st.errs, k=st.k,
+        n_ortho_passes=st.n_passes, rnorms=st.rnorms,
+        tile_m=tile_m, n_tiles=len(tiles),
+    )

@@ -1,3 +1,17 @@
 from repro.data.pipeline import SyntheticLMData, FileLMData
+from repro.data.providers import (
+    SnapshotProvider,
+    ArrayProvider,
+    MemmapProvider,
+    WaveformProvider,
+    as_provider,
+    create_snapshot_npy,
+    write_snapshot_npy,
+)
 
-__all__ = ["SyntheticLMData", "FileLMData"]
+__all__ = [
+    "SyntheticLMData", "FileLMData",
+    "SnapshotProvider", "ArrayProvider", "MemmapProvider",
+    "WaveformProvider", "as_provider", "create_snapshot_npy",
+    "write_snapshot_npy",
+]

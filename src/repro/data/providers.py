@@ -1,0 +1,205 @@
+"""Snapshot providers: column-tile access to matrices of unbounded M.
+
+The paper's headline run greedy-reduces a dense complex 10,000 x 3,276,800
+snapshot matrix (~0.5 TB) that never fits in one worker's memory
+(Sec. 6.1.1: each MPI process forms a "slice" of S over a subset of
+columns).  A :class:`SnapshotProvider` is the single-machine analogue of
+that contract: the streaming driver (:func:`repro.core.streaming.
+rb_greedy_streamed`) only ever asks for one column *tile* ``S[:, lo:hi]``
+at a time, so peak device memory is O(N * (max_k + tile_m)) regardless of M.
+
+Three implementations:
+
+- :class:`ArrayProvider`   — a resident array (the trivial case; used by
+  the parity tests to prove the streamed driver is an exact refactor of
+  the in-memory one).
+- :class:`MemmapProvider`  — a memory-mapped ``.npy`` file; a tile
+  materializes only its own columns.  Write snapshots column-major
+  (:func:`write_snapshot_npy` with ``fortran_order=True``, the default)
+  so a column tile is one contiguous read.
+- :class:`WaveformProvider` — generates GW snapshot columns on the fly
+  from :mod:`repro.gw.waveform` over a parameter grid
+  (:mod:`repro.gw.grids`); the snapshot matrix is never materialized
+  anywhere, matching greedycpp's generate-your-slice strategy.
+"""
+
+from __future__ import annotations
+
+import abc
+import os
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class SnapshotProvider(abc.ABC):
+    """Column-tile access to an (N, M) snapshot matrix.
+
+    Implementations supply :attr:`shape`, :attr:`dtype` and :meth:`tile`;
+    everything else has default implementations in terms of those.  A tile
+    request must be cheap in memory: O(N * (hi - lo)), never O(N * M).
+    """
+
+    @property
+    @abc.abstractmethod
+    def shape(self) -> tuple[int, int]:
+        """(N, M): rows (physical dimension) x columns (parameter values)."""
+
+    @property
+    @abc.abstractmethod
+    def dtype(self):
+        """Element dtype of the snapshot matrix (numpy/jax dtype)."""
+
+    @abc.abstractmethod
+    def tile(self, lo: int, hi: int) -> jax.Array:
+        """Return columns [lo, hi) as an (N, hi - lo) device array."""
+
+    def column(self, j: int) -> jax.Array:
+        """One snapshot column (N,).  Default: a width-1 tile."""
+        return self.tile(j, j + 1)[:, 0]
+
+    def tiles(self, tile_m: int) -> Iterator[tuple[int, int]]:
+        """Tile boundaries [lo, hi) covering all M columns in order."""
+        M = self.shape[1]
+        for lo in range(0, M, tile_m):
+            yield lo, min(lo + tile_m, M)
+
+    def materialize(self) -> jax.Array:
+        """The full matrix as ONE tile — small providers / tests only."""
+        return self.tile(0, self.shape[1])
+
+
+class ArrayProvider(SnapshotProvider):
+    """A resident (N, M) array behind the provider interface."""
+
+    def __init__(self, S):
+        self._S = jnp.asarray(S)
+        if self._S.ndim != 2:
+            raise ValueError(f"expected a 2-D snapshot matrix, got shape "
+                             f"{self._S.shape}")
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return tuple(self._S.shape)
+
+    @property
+    def dtype(self):
+        return self._S.dtype
+
+    def tile(self, lo: int, hi: int) -> jax.Array:
+        return self._S[:, lo:hi]
+
+
+class MemmapProvider(SnapshotProvider):
+    """A memory-mapped ``.npy`` snapshot matrix on disk.
+
+    Only the requested columns of a tile are read (and copied to device);
+    the file itself can exceed host memory.  Column-major files
+    (``fortran_order=True`` in the npy header — what
+    :func:`write_snapshot_npy` emits by default) give contiguous tile
+    reads; row-major files still work but each tile read is strided.
+    """
+
+    def __init__(self, path: str | os.PathLike):
+        self.path = os.fspath(path)
+        self._mm = np.load(self.path, mmap_mode="r")
+        if self._mm.ndim != 2:
+            raise ValueError(
+                f"{self.path}: expected a 2-D snapshot matrix, got shape "
+                f"{self._mm.shape}"
+            )
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return tuple(self._mm.shape)
+
+    @property
+    def dtype(self):
+        return self._mm.dtype
+
+    def tile(self, lo: int, hi: int) -> jax.Array:
+        # np.asarray materializes ONLY the requested columns on host, then
+        # the copy is placed on device; the memmap itself stays lazy.
+        return jnp.asarray(np.asarray(self._mm[:, lo:hi]))
+
+
+class WaveformProvider(SnapshotProvider):
+    """On-the-fly GW snapshot tiles: columns are TaylorF2 waveforms.
+
+    Wraps :func:`repro.gw.waveform.taylorf2` over a parameter grid from
+    :mod:`repro.gw.grids`; ``tile(lo, hi)`` jit-generates the waveforms
+    for parameters [lo, hi) directly on device, so the snapshot matrix is
+    never materialized on host OR device — the enabling trick for the
+    paper's "matrix too large to load into memory" regime.
+    """
+
+    def __init__(self, f, m1s, m2s, dtype=jnp.complex64,
+                 normalize: bool = True):
+        from repro.gw.waveform import taylorf2_batch
+
+        self._f = jnp.asarray(f)
+        self._m1 = np.asarray(m1s)
+        self._m2 = np.asarray(m2s)
+        if self._m1.shape != self._m2.shape or self._m1.ndim != 1:
+            raise ValueError("m1s/m2s must be equal-length 1-D arrays")
+        self._dtype = jnp.dtype(dtype)
+        # One jit cache entry per distinct tile width (at most two with
+        # fixed boundaries: the full width and the ragged last tile).
+        self._gen = jax.jit(
+            lambda a, b: taylorf2_batch(
+                self._f, a, b, normalize=normalize, dtype=self._dtype
+            )
+        )
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self._f.shape[0], self._m1.shape[0])
+
+    @property
+    def dtype(self):
+        return self._dtype
+
+    def tile(self, lo: int, hi: int) -> jax.Array:
+        return self._gen(
+            jnp.asarray(self._m1[lo:hi]), jnp.asarray(self._m2[lo:hi])
+        )
+
+
+def write_snapshot_npy(path: str | os.PathLike, S,
+                       fortran_order: bool = True) -> str:
+    """Write a snapshot matrix as ``.npy`` for :class:`MemmapProvider`.
+
+    ``fortran_order=True`` stores columns contiguously, so a streamed
+    column tile is one sequential read instead of N strided ones.
+    """
+    path = os.fspath(path)
+    if not path.endswith(".npy"):
+        path += ".npy"  # np.save appends it; return the real file name
+    arr = np.asarray(S)
+    np.save(path, np.asfortranarray(arr) if fortran_order
+            else np.ascontiguousarray(arr))
+    return path
+
+
+def create_snapshot_npy(path: str | os.PathLike, shape: tuple[int, int],
+                        dtype, fortran_order: bool = True) -> np.memmap:
+    """Create an empty on-disk ``.npy`` to be filled tile by tile.
+
+    Returns a writable memmap; fill ``mm[:, lo:hi]`` per tile (and
+    ``mm.flush()`` when done) to build matrices larger than host memory.
+    """
+    return np.lib.format.open_memmap(
+        os.fspath(path), mode="w+", dtype=np.dtype(dtype), shape=shape,
+        fortran_order=fortran_order,
+    )
+
+
+def as_provider(source) -> SnapshotProvider:
+    """Coerce an array / ``.npy`` path / provider into a provider."""
+    if isinstance(source, SnapshotProvider):
+        return source
+    if isinstance(source, (str, os.PathLike)):
+        return MemmapProvider(source)
+    return ArrayProvider(source)

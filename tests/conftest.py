@@ -12,9 +12,31 @@ import numpy as np  # noqa: E402
 import pytest  # noqa: E402
 
 
+def pytest_collection_modifyitems(config, items):
+    """Timing-sensitive tests skip (not flake) on the noisy shared CI box;
+    opt in with REPRO_RUN_TIMING_TESTS=1."""
+    if os.environ.get("REPRO_RUN_TIMING_TESTS"):
+        return
+    skip = pytest.mark.skip(
+        reason="timing-sensitive (noisy shared box); "
+               "set REPRO_RUN_TIMING_TESTS=1 to run"
+    )
+    for item in items:
+        if "timing" in item.keywords:
+            item.add_marker(skip)
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+def dtype_tol(dtype, n=1, factor=1000.0):
+    """``factor * eps * sqrt(n)`` comparison tolerance — scales with the
+    working precision and problem size instead of hard-coding ULP-tight
+    constants that flake across BLAS/XLA versions."""
+    eps = float(np.finfo(np.dtype(dtype)).eps)
+    return factor * eps * float(np.sqrt(n))
 
 
 def make_smooth_matrix(n=200, m=120, dtype=np.float64):

@@ -19,7 +19,10 @@ from repro.kernels.imgs_project.ref import imgs_project_ref
 
 
 # ------------------------------------------------------------- resolution
-def test_resolve_auto_is_xla_off_tpu():
+# (resolution tests clear REPRO_GREEDY_BACKEND: CI runs the whole suite
+# under both backend-matrix values of that env var)
+def test_resolve_auto_is_xla_off_tpu(monkeypatch):
+    monkeypatch.delenv("REPRO_GREEDY_BACKEND", raising=False)
     assert jax.default_backend() != "tpu"  # conftest forces cpu
     assert B.resolve_backend(None) == "xla"
     assert B.resolve_backend("auto") == "xla"
@@ -37,7 +40,8 @@ def test_resolve_env_override(monkeypatch):
     assert B.resolve_backend("xla") == "xla"
 
 
-def test_resolve_default_backend_setting():
+def test_resolve_default_backend_setting(monkeypatch):
+    monkeypatch.delenv("REPRO_GREEDY_BACKEND", raising=False)
     try:
         B.set_default_backend("pallas")
         assert B.resolve_backend(None) == "pallas"
@@ -103,6 +107,82 @@ def test_plane_split_matches_ref(rng, dtype):
                                rtol=10 * tol, atol=10 * tol)
     np.testing.assert_allclose(np.asarray(cx), np.asarray(cr),
                                rtol=10 * tol, atol=10 * tol)
+
+
+def _dot_lines(hlo_text):
+    return [l for l in hlo_text.splitlines() if "dot" in l]
+
+
+@pytest.mark.parametrize("dtype", [np.complex64, np.complex128])
+def test_complex_sweep_lowers_to_real_gemvs(rng, dtype):
+    """Regression pin for the PR-1 complex-GEMV pathology: under the xla
+    backend, complex pivot sweeps and projection passes must lower to REAL
+    dot ops only (the split re/im 4-GEMV plan).  A complex-dtype dot in the
+    lowered program means the plane-split path silently regressed — on CPU
+    XLA lowers a complex GEMV to a scalar loop ~10x slower (measured
+    709 ms vs 66 ms at N=4096, M=16384).  Structural, not wall-clock: the
+    pin cannot flake on a noisy box."""
+    N, M, K = 64, 96, 8
+    S = jnp.asarray((rng.standard_normal((N, M))
+                     + 1j * rng.standard_normal((N, M))).astype(dtype))
+    q = jnp.asarray(rng.standard_normal(N).astype(dtype))
+    rdt = np.float64 if dtype == np.complex128 else np.float32
+    acc = jnp.zeros((M,), rdt)
+    norms = jnp.sum(jnp.abs(S) ** 2, axis=0).astype(rdt)
+
+    def lower_pivot(bk):
+        return jax.jit(
+            lambda *a: B.pivot_update(*a, backend=bk)
+        ).lower(q, S, acc, norms).as_text()
+
+    dots = _dot_lines(lower_pivot("xla"))
+    assert dots, "expected the sweep to contain dot ops"
+    assert not any("complex" in l for l in dots), (
+        "xla-backend complex sweep emitted a complex-dtype dot — the "
+        "plane-split 4-GEMV path regressed")
+    # control: the reference path DOES emit a complex dot, so the
+    # detection above is actually discriminating.
+    assert any("complex" in l for l in _dot_lines(lower_pivot("xla_ref")))
+
+    Q = jnp.asarray(np.linalg.qr(
+        rng.standard_normal((N, K)) + 1j * rng.standard_normal((N, K))
+    )[0].astype(dtype))
+    v = jnp.asarray((rng.standard_normal(N)
+                     + 1j * rng.standard_normal(N)).astype(dtype))
+
+    def lower_proj(bk):
+        return jax.jit(
+            lambda *a: B.project_pass(*a, backend=bk)
+        ).lower(v, Q).as_text()
+
+    dots = _dot_lines(lower_proj("xla"))
+    assert dots and not any("complex" in l for l in dots)
+    assert any("complex" in l for l in _dot_lines(lower_proj("xla_ref")))
+
+
+def test_complex_dispatch_routes_to_plane_split(rng, monkeypatch):
+    """The xla backend must take the plane-split branch for complex inputs
+    (and the plain ref branch for real ones) — guards the dispatch itself,
+    complementing the lowering pin above."""
+    calls = []
+    real_split = B._plane_split_pivot
+    monkeypatch.setattr(
+        B, "_plane_split_pivot",
+        lambda *a, **k: (calls.append("split"), real_split(*a, **k))[1],
+    )
+    N, M = 16, 12
+    Sc = jnp.asarray((rng.standard_normal((N, M))
+                      + 1j * rng.standard_normal((N, M))).astype(np.complex64))
+    qc = jnp.asarray(rng.standard_normal(N).astype(np.complex64))
+    accc = jnp.zeros((M,), jnp.float32)
+    normsc = jnp.sum(jnp.abs(Sc) ** 2, axis=0)
+    B.pivot_update(qc, Sc, accc, normsc, backend="xla")
+    assert calls == ["split"]
+    Sr = jnp.asarray(rng.standard_normal((N, M)).astype(np.float32))
+    qr_ = jnp.asarray(rng.standard_normal(N).astype(np.float32))
+    B.pivot_update(qr_, Sr, jnp.zeros((M,), jnp.float32),
+                   jnp.sum(Sr * Sr, axis=0), backend="xla")
+    assert calls == ["split"]  # real input must NOT take the split path
 
 
 def test_xla_ref_driver_parity_complex():

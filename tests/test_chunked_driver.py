@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from conftest import make_smooth_matrix
+from conftest import dtype_tol, make_smooth_matrix
 from repro.core import rb_greedy, rb_greedy_stepwise
 
 
@@ -22,12 +22,17 @@ def _assert_same(a, b):
     ka, kb = int(a.k), int(b.k)
     assert ka == kb
     assert np.array_equal(np.asarray(a.pivots), np.asarray(b.pivots))
+    # dtype-scaled (eps * sqrt(N)) comparison, not hard-coded ULP
+    # constants: both drivers run the same kernels but float reduction
+    # order may differ across XLA versions / fusion decisions.
+    tol = dtype_tol(np.asarray(a.Q).dtype, n=a.Q.shape[0], factor=100.0)
+    errscale = float(np.max(np.asarray(a.errs))) + 1e-300
     np.testing.assert_allclose(np.asarray(a.errs), np.asarray(b.errs),
-                               rtol=1e-12, atol=1e-300)
+                               rtol=tol, atol=tol * errscale)
     np.testing.assert_allclose(np.asarray(a.Q), np.asarray(b.Q),
-                               rtol=1e-12, atol=1e-300)
+                               rtol=tol, atol=tol)
     np.testing.assert_allclose(np.asarray(a.rnorms), np.asarray(b.rnorms),
-                               rtol=1e-12, atol=1e-300)
+                               rtol=tol, atol=tol * errscale)
 
 
 @pytest.mark.parametrize("dtype", [np.float64, np.complex128])

@@ -72,13 +72,20 @@ def test_functional_equivalence_deep(dtype):
     n=st.integers(12, 60),
     m=st.integers(8, 40),
     rank=st.integers(3, 8),
+    use_complex=st.booleans(),
 )
-def test_equivalence_random(seed, n, m, rank):
-    """Property: pivot sequences agree on random low-rank + noise matrices."""
+def test_equivalence_random(seed, n, m, rank, use_complex):
+    """Property (Prop 5.3): on random low-rank + noise matrices — real AND
+    complex — RB-greedy and pivoted MGS agree on pivots and span the same
+    subspace."""
     rng = np.random.default_rng(seed)
     rank = min(rank, n, m)
-    S = rng.standard_normal((n, rank)) @ rng.standard_normal((rank, m))
-    S = S + 1e-9 * rng.standard_normal((n, m))
+
+    def rand(*shape):
+        x = rng.standard_normal(shape)
+        return x + 1j * rng.standard_normal(shape) if use_complex else x
+
+    S = rand(n, rank) @ rand(rank, m) + 1e-9 * rand(n, m)
     S = jnp.asarray(S)
     tau = 1e-6 * float(jnp.linalg.norm(S, ord=2))
     g = rb_greedy(S, tau=tau)
@@ -87,6 +94,9 @@ def test_equivalence_random(seed, n, m, rank):
     assert k >= 1
     assert np.array_equal(np.asarray(g.pivots[:k]),
                           np.asarray(ms.pivots[:k]))
+    # span agreement: identical pivot columns + full-precision GS on both
+    # sides keep the largest principal angle near the noise floor
+    assert _span_distance(g.Q[:, :k], ms.Q[:, :k]) < 1e-4
 
 
 def test_equivalence_gw_waveforms():

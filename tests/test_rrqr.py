@@ -3,8 +3,9 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, st
 
-from conftest import make_smooth_matrix
+from conftest import dtype_tol, make_smooth_matrix
 from repro.core import optimal_rrqr
 from repro.core.rrqr import rrqr_error_2norm
 
@@ -17,6 +18,44 @@ def test_optimal_rrqr_matches_pod_error(dtype, k):
     res = optimal_rrqr(S, k)
     err = float(rrqr_error_2norm(S, res.Qk))
     assert err == pytest.approx(float(res.sigmas[k]), rel=1e-6, abs=1e-12)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.complex64])
+@pytest.mark.parametrize("k", [3, 6])
+def test_optimal_rrqr_exactness_low_precision(dtype, k):
+    """Theorem-5.1 exactness holds in the GW production dtypes too
+    (complex64, float32) — up to an eps*sqrt(N)-scaled absolute floor set
+    by sigma_1 (sigma_{k+1} of this family decays below f32 resolution, so
+    a pure relative check would be ill-posed)."""
+    S = jnp.asarray(make_smooth_matrix(dtype=dtype))
+    res = optimal_rrqr(S, k)
+    err = float(rrqr_error_2norm(S, res.Qk))
+    sig0, sigk = float(res.sigmas[0]), float(res.sigmas[k])
+    atol = dtype_tol(dtype, n=S.shape[0], factor=100.0) * sig0
+    assert abs(err - sigk) <= atol
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 5_000), k=st.integers(1, 8))
+def test_optimal_rrqr_exactness_property_complex64(seed, k):
+    """Property: Thm-5.1 exactness on random complex64 low-rank + noise
+    matrices (error == sigma_{k+1} at dtype-scaled tolerance)."""
+    rng = np.random.default_rng(seed)
+    n, m = 30, 24
+    r = k + 2
+    A = (rng.standard_normal((n, r)) + 1j * rng.standard_normal((n, r))) @ \
+        (rng.standard_normal((r, m)) + 1j * rng.standard_normal((r, m)))
+    A = A + 1e-4 * (rng.standard_normal((n, m))
+                    + 1j * rng.standard_normal((n, m)))
+    S = jnp.asarray(A.astype(np.complex64))
+    res = optimal_rrqr(S, k)
+    err = float(rrqr_error_2norm(S, res.Qk))
+    sig0, sigk = float(res.sigmas[0]), float(res.sigmas[k])
+    atol = dtype_tol(np.complex64, n=n, factor=100.0) * sig0
+    assert abs(err - sigk) <= atol
+    # and the basis is orthonormal at working precision
+    G = np.asarray(res.Qk.conj().T @ res.Qk)
+    assert np.allclose(G, np.eye(k), atol=dtype_tol(np.complex64, n=n))
 
 
 def test_optimal_rrqr_orthonormal():

@@ -1,0 +1,311 @@
+"""Out-of-core streamed greedy == the in-memory drivers, pivot for pivot.
+
+The streamed driver must be an exact refactor of the resident one, not an
+approximation: these tests assert identical pivots, identical basis shapes
+and span-equal Q across tile sizes {1 tile, M-divisible, ragged last tile},
+dtypes {float32, complex64} (plus f64/c128 deep-tolerance paths) and all
+three snapshot providers, and that a crash-interrupted checkpointed build
+resumes to the identical result.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from conftest import dtype_tol, make_smooth_matrix
+from repro.checkpoint import latest_step
+from repro.core import rb_greedy, rb_greedy_stepwise, rb_greedy_streamed
+from repro.data import (
+    ArrayProvider, MemmapProvider, WaveformProvider, as_provider,
+    create_snapshot_npy, write_snapshot_npy,
+)
+
+M_COLS = 120  # make_smooth_matrix default M
+
+# tile regimes: whole matrix in 1 tile, an M-divisible width, a ragged
+# last tile, and degenerate 1-column tiles
+TILES = [M_COLS, 40, 33, 1]
+
+
+def _assert_matches(ref, got, dtype, n):
+    """Streamed result == in-memory result: same k, same pivots, same
+    basis shape, errs/rnorms equal to dtype-scaled tolerance, span-equal
+    (here: elementwise-close) Q."""
+    k = int(ref.k)
+    assert got.k == k
+    assert got.Q.shape == ref.Q.shape  # bitwise-equal basis shapes
+    assert np.array_equal(np.asarray(ref.pivots[:k]), got.pivots[:k])
+    assert np.all(got.pivots[k:] == -1)
+    tol = dtype_tol(dtype, n)
+    scale = float(np.max(np.abs(np.asarray(ref.errs[:k])))) + 1e-30
+    np.testing.assert_allclose(got.errs[:k], np.asarray(ref.errs[:k]),
+                               rtol=tol, atol=tol * scale)
+    np.testing.assert_allclose(got.rnorms[:k], np.asarray(ref.rnorms[:k]),
+                               rtol=tol, atol=tol * scale)
+    np.testing.assert_allclose(np.asarray(got.Q), np.asarray(ref.Q),
+                               rtol=tol, atol=tol)
+    if got.R is not None:
+        np.testing.assert_allclose(got.R[:k], np.asarray(ref.R[:k]),
+                                   rtol=tol,
+                                   atol=tol * float(np.max(np.abs(got.R))))
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.complex64])
+@pytest.mark.parametrize("tile_m", TILES)
+def test_array_provider_matches_inmemory(dtype, tile_m):
+    S = jnp.asarray(make_smooth_matrix(dtype=dtype))
+    tau = 1e-3
+    ref_step = rb_greedy_stepwise(S, tau=tau)
+    ref_chunk = rb_greedy(S, tau=tau)
+    got = rb_greedy_streamed(ArrayProvider(S), tau=tau, tile_m=tile_m)
+    _assert_matches(ref_step, got, dtype, S.shape[0])
+    _assert_matches(ref_chunk, got, dtype, S.shape[0])
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.complex64])
+@pytest.mark.parametrize("tile_m", [40, 33])
+def test_memmap_provider_matches_inmemory(tmp_path, dtype, tile_m):
+    S = make_smooth_matrix(dtype=dtype)
+    path = write_snapshot_npy(tmp_path / "S.npy", S)
+    prov = MemmapProvider(path)
+    assert prov.shape == S.shape and prov.dtype == S.dtype
+    ref = rb_greedy_stepwise(jnp.asarray(S), tau=1e-3)
+    got = rb_greedy_streamed(prov, tau=1e-3, tile_m=tile_m)
+    _assert_matches(ref, got, dtype, S.shape[0])
+
+
+@pytest.mark.parametrize("fortran_order", [True, False])
+def test_memmap_layouts_agree(tmp_path, fortran_order):
+    """Row- and column-major .npy files stream to the same result."""
+    S = make_smooth_matrix(dtype=np.complex64)
+    path = write_snapshot_npy(tmp_path / "S.npy", S,
+                              fortran_order=fortran_order)
+    got = rb_greedy_streamed(path, tau=1e-3, tile_m=33)  # str -> provider
+    ref = rb_greedy_stepwise(jnp.asarray(S), tau=1e-3)
+    _assert_matches(ref, got, np.complex64, S.shape[0])
+
+
+@pytest.mark.parametrize("dtype", [jnp.complex64, jnp.complex128])
+@pytest.mark.parametrize("tile_m", [77, 20])
+def test_waveform_provider_matches_inmemory(dtype, tile_m):
+    """Generator provider: GW snapshots produced tile-by-tile on the fly
+    select the same pivots as the greedy run on the materialized matrix."""
+    from repro.gw import chirp_grid, frequency_grid
+
+    f = frequency_grid(20.0, 256.0, 200)
+    m1, m2 = chirp_grid(n_mc=11, n_eta=7)  # M = 77 (ragged at tile 20)
+    prov = WaveformProvider(f, m1, m2, dtype=dtype, normalize=False)
+    S = prov.materialize()
+    assert S.shape == prov.shape
+    tau = 1e-3 * float(jnp.max(jnp.linalg.norm(S, axis=0)))
+    ref = rb_greedy_stepwise(S, tau=tau)
+    got = rb_greedy_streamed(prov, tau=tau, tile_m=tile_m)
+    _assert_matches(ref, got, np.dtype(dtype), S.shape[0])
+
+
+@pytest.mark.parametrize("dtype", [np.float64, np.complex128])
+def test_deep_tolerance_refresh_parity(dtype):
+    """tau below the Eq.-(6.3) cancellation floor: the streamed refresh
+    (tile-local exact residual recomputation) replays the stepwise
+    driver's refresh decisions."""
+    S = jnp.asarray(make_smooth_matrix(dtype=dtype))
+    ref = rb_greedy_stepwise(S, tau=1e-12)
+    got = rb_greedy_streamed(ArrayProvider(S), tau=1e-12, tile_m=50)
+    _assert_matches(ref, got, dtype, S.shape[0])
+    from repro.core.errors import proj_error_max
+    assert float(proj_error_max(S, got.Q[:, :got.k])) < 1e-11
+
+
+def test_rank_guard_parity():
+    """Exactly-low-rank snapshots: the streamed driver stops at numerical
+    rank without adding junk directions, like the in-memory drivers."""
+    rng = np.random.default_rng(0)
+    A = rng.standard_normal((50, 8)) @ rng.standard_normal((8, 30))
+    S = jnp.asarray(A)
+    ref = rb_greedy_stepwise(S, tau=1e-18)
+    got = rb_greedy_streamed(ArrayProvider(S), tau=1e-18, tile_m=7)
+    _assert_matches(ref, got, np.float64, 50)
+    assert got.k <= 9
+
+
+def test_keep_r_false_and_callback():
+    S = jnp.asarray(make_smooth_matrix(dtype=np.float64))
+    seen = []
+    got = rb_greedy_streamed(ArrayProvider(S), tau=1e-6, tile_m=33,
+                             keep_R=False,
+                             callback=lambda info: seen.append(info))
+    assert got.R is None
+    assert [info["k"] for info in seen] == list(range(1, got.k + 1))
+    assert [info["pivot"] for info in seen] == list(got.pivots[:got.k])
+
+
+def test_invalid_args_rejected():
+    S = jnp.asarray(make_smooth_matrix(dtype=np.float64))
+    with pytest.raises(ValueError, match="tile_m"):
+        rb_greedy_streamed(ArrayProvider(S), tau=1e-4, tile_m=0)
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        rb_greedy_streamed(ArrayProvider(S), tau=1e-4, resume=True)
+
+
+def test_create_snapshot_npy_roundtrip(tmp_path):
+    """Tile-by-tile on-disk construction (for matrices larger than host
+    memory) round-trips through MemmapProvider."""
+    S = make_smooth_matrix(dtype=np.complex64)
+    path = tmp_path / "big.npy"
+    mm = create_snapshot_npy(path, S.shape, S.dtype)
+    for lo in range(0, S.shape[1], 33):
+        hi = min(lo + 33, S.shape[1])
+        mm[:, lo:hi] = S[:, lo:hi]
+    mm.flush()
+    del mm
+    prov = as_provider(path)
+    np.testing.assert_array_equal(np.asarray(prov.materialize()), S)
+
+
+# ------------------------------------------------ checkpoint / resume
+class _CrashingProvider(ArrayProvider):
+    """Raises after serving ``budget`` tiles — crash injection mid-sweep."""
+
+    def __init__(self, S, budget):
+        super().__init__(S)
+        self.budget = budget
+
+    def tile(self, lo, hi):
+        if self.budget <= 0:
+            raise IOError("injected crash")
+        self.budget -= 1
+        return super().tile(lo, hi)
+
+
+# budgets chosen so the crash lands mid-sweep AFTER >= 1 checkpoint: the
+# init pass consumes 4 tile fetches and each iteration 1 column + 4 tile
+# fetches, so 7 dies on sweep tile 3 of basis 0 and 13 on sweep tile 4 of
+# basis 1.
+@pytest.mark.parametrize("dtype", [np.float32, np.complex64])
+@pytest.mark.parametrize("crash_after_tiles", [7, 13])
+def test_crash_resume_identical(tmp_path, dtype, crash_after_tiles):
+    """Kill the build mid-sweep, resume from the checkpoint: the final
+    result is identical to an uninterrupted run (tile-cursor + residual
+    caches round-trip through the checkpoint)."""
+    S = jnp.asarray(make_smooth_matrix(dtype=dtype))
+    tau, tile_m = 1e-3, 33  # 4 tiles per sweep (ragged last)
+    ref = rb_greedy_streamed(ArrayProvider(S), tau=tau, tile_m=tile_m)
+
+    ck = tmp_path / "ck"
+    crashing = _CrashingProvider(S, crash_after_tiles)
+    with pytest.raises(IOError, match="injected crash"):
+        rb_greedy_streamed(crashing, tau=tau, tile_m=tile_m,
+                           checkpoint_dir=ck, checkpoint_every_tiles=1)
+    assert latest_step(str(ck)) is not None  # something was persisted
+
+    got = rb_greedy_streamed(ArrayProvider(S), tau=tau, tile_m=tile_m,
+                             checkpoint_dir=ck, resume=True)
+    assert got.k == ref.k
+    assert np.array_equal(got.pivots, ref.pivots)
+    np.testing.assert_array_equal(np.asarray(got.Q), np.asarray(ref.Q))
+    np.testing.assert_array_equal(got.R, ref.R)
+    np.testing.assert_array_equal(got.errs, ref.errs)
+
+
+def test_resume_with_empty_dir_is_fresh_build(tmp_path):
+    S = jnp.asarray(make_smooth_matrix(dtype=np.float64))
+    ref = rb_greedy_streamed(ArrayProvider(S), tau=1e-4, tile_m=40)
+    got = rb_greedy_streamed(ArrayProvider(S), tau=1e-4, tile_m=40,
+                             checkpoint_dir=tmp_path / "empty", resume=True)
+    assert got.k == ref.k
+    assert np.array_equal(got.pivots, ref.pivots)
+
+
+def test_resume_shape_mismatch_rejected(tmp_path):
+    S = jnp.asarray(make_smooth_matrix(dtype=np.float64))
+    ck = tmp_path / "ck"
+    rb_greedy_streamed(ArrayProvider(S), tau=1e-4, tile_m=40,
+                       checkpoint_dir=ck)
+    with pytest.raises(ValueError, match="mismatch"):
+        rb_greedy_streamed(ArrayProvider(S[:, :60]), tau=1e-4, tile_m=40,
+                           checkpoint_dir=ck, resume=True)
+
+
+def test_resume_tiling_mismatch_rejected(tmp_path):
+    """The checkpointed cursor is in tile units: resuming under a
+    different tile_m would re-apply part of the in-flight sweep, so it
+    must be refused rather than silently corrupt acc/R."""
+    S = jnp.asarray(make_smooth_matrix(dtype=np.float64))
+    ck = tmp_path / "ck"
+    rb_greedy_streamed(ArrayProvider(S), tau=1e-4, tile_m=40,
+                       checkpoint_dir=ck)
+    with pytest.raises(ValueError, match="tile_m mismatch"):
+        rb_greedy_streamed(ArrayProvider(S), tau=1e-4, tile_m=20,
+                           checkpoint_dir=ck, resume=True)
+
+
+def test_resume_dtype_mismatch_rejected(tmp_path):
+    """Same-shaped provider with a different dtype (e.g. a regenerated
+    snapshot file) must not silently mix precisions on resume."""
+    S = make_smooth_matrix(dtype=np.complex64)
+    ck = tmp_path / "ck"
+    rb_greedy_streamed(ArrayProvider(jnp.asarray(S)), tau=1e-3, tile_m=40,
+                       checkpoint_dir=ck)
+    with pytest.raises(ValueError, match="dtype mismatch"):
+        rb_greedy_streamed(ArrayProvider(jnp.asarray(S.real)), tau=1e-3,
+                           tile_m=40, checkpoint_dir=ck, resume=True)
+
+
+def test_resume_midsweep_backend_mismatch_rejected(tmp_path):
+    """An in-flight sweep's partial acc carries one backend's float
+    summation order; resuming it under another backend must be refused
+    (completed sweeps are backend-portable)."""
+    S = jnp.asarray(make_smooth_matrix(dtype=np.complex64))
+    ck = tmp_path / "ck"
+    crashing = _CrashingProvider(S, 7)  # dies mid-sweep, ckpt every tile
+    with pytest.raises(IOError, match="injected crash"):
+        rb_greedy_streamed(crashing, tau=1e-3, tile_m=33, backend="xla",
+                           checkpoint_dir=ck, checkpoint_every_tiles=1)
+    with pytest.raises(ValueError, match="in-flight sweep"):
+        rb_greedy_streamed(ArrayProvider(S), tau=1e-3, tile_m=33,
+                           backend="xla_ref", checkpoint_dir=ck,
+                           resume=True)
+    # same backend resumes fine
+    res = rb_greedy_streamed(ArrayProvider(S), tau=1e-3, tile_m=33,
+                             backend="xla", checkpoint_dir=ck, resume=True)
+    ref = rb_greedy_streamed(ArrayProvider(S), tau=1e-3, tile_m=33,
+                             backend="xla")
+    assert np.array_equal(res.pivots, ref.pivots)
+
+
+def test_fresh_build_over_stale_checkpoints(tmp_path):
+    """A fresh (resume=False) build into a directory holding an older
+    run's steps must not be shadowed by them: its saves continue the step
+    numbering, so a subsequent resume restores the NEW build's state."""
+    S = jnp.asarray(make_smooth_matrix(dtype=np.float64))
+    ck = tmp_path / "ck"
+    old = rb_greedy_streamed(ArrayProvider(S), tau=1e-4, tile_m=40,
+                             checkpoint_dir=ck)
+    new = rb_greedy_streamed(ArrayProvider(S), tau=1e-2, tile_m=40,
+                             checkpoint_dir=ck)  # fresh, different tau
+    assert new.k < old.k
+    resumed = rb_greedy_streamed(ArrayProvider(S), tau=1e-2, tile_m=40,
+                                 checkpoint_dir=ck, resume=True)
+    assert resumed.k == new.k  # restored the fresh build, not the stale one
+    assert np.array_equal(resumed.pivots, new.pivots)
+
+
+def test_write_snapshot_npy_without_suffix(tmp_path):
+    """np.save appends '.npy'; the returned path must be the real file."""
+    S = make_smooth_matrix(dtype=np.float32)
+    path = write_snapshot_npy(tmp_path / "snapshots", S)
+    assert path.endswith(".npy")
+    np.testing.assert_array_equal(
+        np.asarray(MemmapProvider(path).materialize()), S)
+
+
+def test_checkpoints_are_pruned(tmp_path):
+    """Per-tile checkpointing must not accumulate one full state copy per
+    tile on disk — only the newest couple of steps survive."""
+    import os
+    S = jnp.asarray(make_smooth_matrix(dtype=np.float64))
+    ck = tmp_path / "ck"
+    rb_greedy_streamed(ArrayProvider(S), tau=1e-4, tile_m=20,
+                       checkpoint_dir=ck, checkpoint_every_tiles=1)
+    steps = [d for d in os.listdir(ck) if d.startswith("step_")]
+    assert len(steps) <= 2
