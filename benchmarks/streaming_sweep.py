@@ -7,13 +7,15 @@ the in-memory chunked driver on the same matrix.  Emits BENCH-style rows
 (see benchmarks/common.emit); run standalone to write
 ``BENCH_streaming.json`` for the CI artifact.
 
-Peak device allocation of the streamed build is O(N * (max_k + tile_m)):
-basis Q plus one tile (the `device_bytes_bound` annotation), independent
-of M.  Shape overrides: REPRO_STREAM_N / REPRO_STREAM_M / REPRO_STREAM_TILE.
+Peak device allocation of the streamed build is O(N * (max_k + 2*tile_m)):
+basis Q plus the current and prefetched tiles (the `device_bytes_bound`
+annotation), independent of M.  Shape overrides: REPRO_STREAM_N /
+REPRO_STREAM_M / REPRO_STREAM_TILE; REPRO_STREAM_REPEATS for best-of-N.
 """
 
 from __future__ import annotations
 
+import math
 import os
 import tempfile
 import time
@@ -29,6 +31,7 @@ M = int(os.environ.get("REPRO_STREAM_M", 8192))
 TILE_M = int(os.environ.get("REPRO_STREAM_TILE", M // 8))
 TAU = 1e-6
 MAX_K = 48
+REPEATS = int(os.environ.get("REPRO_STREAM_REPEATS", 3))
 
 
 def _smooth_complex_matrix(n: int, m: int) -> np.ndarray:
@@ -40,7 +43,7 @@ def _smooth_complex_matrix(n: int, m: int) -> np.ndarray:
 
 
 def run(csv: bool = False) -> None:
-    from repro.core import rb_greedy, rb_greedy_streamed
+    from repro.api import ReductionSpec, build_basis
     from repro.data import MemmapProvider, write_snapshot_npy
 
     del csv
@@ -51,40 +54,52 @@ def run(csv: bool = False) -> None:
         path = write_snapshot_npy(os.path.join(td, "S.npy"), S_host)
         del S_host  # from here on the matrix lives only on disk
         prov = MemmapProvider(path)
+        spec_stream = ReductionSpec(source=prov, strategy="streamed",
+                                    tau=TAU, max_k=MAX_K, tile_m=TILE_M,
+                                    keep_R=False)
 
-        # warm both paths once (jit compilation excluded from the tracked
-        # rows; wall-clock trend tracking needs compile noise out)
-        rb_greedy_streamed(prov, tau=TAU, max_k=MAX_K, tile_m=TILE_M,
-                           keep_R=False)
-        t0 = time.perf_counter()
-        stream = rb_greedy_streamed(prov, tau=TAU, max_k=MAX_K,
-                                    tile_m=TILE_M, keep_R=False)
-        t_stream = time.perf_counter() - t0
+        # warm once (jit compilation excluded from the tracked rows), then
+        # best-of-N: single-shot wall clock on the shared CI box swings
+        # ~±40%, best-of-N steady state is the stable method (see
+        # benchmarks/pivot_timing)
+        build_basis(spec_stream)
+        t_stream = math.inf
+        for _ in range(REPEATS):
+            t0 = time.perf_counter()
+            stream = build_basis(spec_stream)
+            t_stream = min(t_stream, time.perf_counter() - t0)
 
         S_dev = jnp.asarray(np.load(path))
-        res = rb_greedy(S_dev, tau=TAU, max_k=MAX_K)
+        spec_res = ReductionSpec(source=S_dev, strategy="greedy", tau=TAU,
+                                 max_k=MAX_K)
+        res = build_basis(spec_res)
         jax.block_until_ready(res.Q)
-        t0 = time.perf_counter()
-        res = rb_greedy(S_dev, tau=TAU, max_k=MAX_K)
-        jax.block_until_ready(res.Q)
-        t_resident = time.perf_counter() - t0
+        t_resident = math.inf
+        for _ in range(REPEATS):
+            t0 = time.perf_counter()
+            res = build_basis(spec_res)
+            jax.block_until_ready(res.Q)
+            t_resident = min(t_resident, time.perf_counter() - t0)
 
-    k = int(res.k)
+    k = res.k
+    n_tiles = -(-M // TILE_M)
     match = (stream.k == k and
-             np.array_equal(stream.pivots[:k], np.asarray(res.pivots[:k])))
-    device_bytes_bound = N * (MAX_K + TILE_M + 2) * itemsize
+             np.array_equal(stream.pivots, np.asarray(res.pivots)))
+    # current tile + prefetched next tile are both device-resident
+    device_bytes_bound = N * (MAX_K + 2 * TILE_M + 2) * itemsize
     ratio = t_stream / max(t_resident, 1e-9)
     emit(
         "stream_build_c64_memmap", t_stream * 1e6,
-        derived=(f"N={N},M={M},tile_m={TILE_M},tiles={stream.n_tiles},"
+        derived=(f"N={N},M={M},tile_m={TILE_M},tiles={n_tiles},"
                  f"M_over_tile={M // TILE_M},k={stream.k},"
                  f"device_bytes_bound={device_bytes_bound},"
                  f"pivots_match_resident={match},"
-                 f"overhead_vs_resident={ratio:.2f}x (host<->device tile "
-                 f"copies dominate on CPU at smoke shape)"),
+                 f"overhead_vs_resident={ratio:.2f}x (next-tile prefetch "
+                 f"overlaps host<->device copies with the sweep)"),
     )
     emit("stream_resident_baseline_c64", t_resident * 1e6,
-         derived=f"k={k} (fully device-resident rb_greedy, warm)")
+         derived=f"k={k} (device-resident build_basis strategy='greedy', "
+                 f"warm)")
     if not match:
         raise RuntimeError(
             "streamed pivots diverged from the resident driver — parity "

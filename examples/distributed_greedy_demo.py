@@ -20,8 +20,7 @@ import numpy as np
 import tempfile, time
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import rb_greedy
-from repro.core.distributed import distributed_greedy
+from repro.api import build_basis
 from repro.compat import make_auto_mesh
 from repro.core.errors import proj_error_max
 from repro.gw import build_snapshot_matrix, chirp_grid, frequency_grid
@@ -36,15 +35,17 @@ S = build_snapshot_matrix(f, m1, m2, dtype=jnp.complex128,
 print(f"S: {S.shape} sharded over {mesh.shape} "
       f"({S.size*16/1e6:.0f} MB, {S.size*16/8e6:.0f} MB/device)")
 
+# one front door: passing a mesh flips strategy="auto" to "distributed"
 t0 = time.time()
-res = distributed_greedy(S, tau=1e-6, max_k=min(*S.shape), mesh=mesh)
-k = int(res.k)
+basis = build_basis(source=S, tau=1e-6, mesh=mesh)
+k = basis.k
 print(f"distributed greedy: k={k} in {time.time()-t0:.1f}s, "
-      f"max err {float(proj_error_max(S, jnp.asarray(np.array(res.Q[:, :k])))):.2e}")
+      f"max err {float(proj_error_max(S, jnp.asarray(np.array(basis.Q)))):.2e}")
 
-ser = rb_greedy(jax.device_get(S), tau=1e-6)
-print(f"matches serial: k {int(ser.k)}=={k}, pivots equal: "
-      f"{bool(np.array_equal(np.array(ser.pivots[:k]), np.array(res.pivots[:k])))}")
+ser = build_basis(source=jax.device_get(S), strategy="greedy", tau=1e-6)
+kk = min(ser.k, k)  # compare the shared prefix if ranks differ at tau
+print(f"matches serial: k {ser.k}=={k}, pivots equal: "
+      f"{bool(np.array_equal(ser.pivots[:kk], basis.pivots[:kk]))}")
 """
 
 

@@ -18,7 +18,7 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import eim_nodes, rb_greedy, roq_weights
+from repro.api import build_basis
 from repro.gw import build_snapshot_matrix, chirp_grid, frequency_grid
 from repro.gw.grids import random_mass_samples
 from repro.gw.waveform import taylorf2
@@ -30,9 +30,9 @@ def main():
     f = frequency_grid(20.0, 512.0, N)
     m1, m2 = chirp_grid(n_mc=50, n_eta=12)
     S = build_snapshot_matrix(f, m1, m2, dtype=jnp.complex128)
-    res = rb_greedy(S, tau=1e-6)
-    k = int(res.k)
-    ei = eim_nodes(res.Q[:, :k])
+    basis = build_basis(source=S, tau=1e-6)   # one front door (repro.api)
+    k = basis.k
+    ei = basis.eim()
     print(f"offline: basis k = {k}, EIM nodes selected from N = {N} bins")
 
     # synthetic "data" = signal + noise, quadrature = uniform df
@@ -43,7 +43,7 @@ def main():
         + 1j * jnp.asarray(rng.standard_normal(N))
     )
     w = jnp.full((N,), float(f[1] - f[0]))
-    omega = roq_weights(data, w, ei.B)  # (k,) precomputed ROQ weights
+    omega = basis.roq_weights(data, w)  # (k,) precomputed ROQ weights
 
     # ---- online stage: batched likelihood-style inner products ----
     n_req = 256

@@ -1,13 +1,17 @@
 """Quickstart: build a reduced basis for gravitational waveforms.
 
-The 60-second tour of the paper's pipeline:
+The 60-second tour of the paper's pipeline, through the one front door
+(:mod:`repro.api`):
   1. generate a snapshot matrix from the TaylorF2 waveform family,
-  2. run RB-greedy (Algorithm 3) to a target tolerance,
+  2. ``build_basis`` it to a target tolerance (RB-greedy under the hood),
   3. compare against POD (Algorithm 1) and the reconstruction (Algorithm 4),
-  4. build an empirical interpolant (EIM) and validate out-of-sample.
+  4. build an empirical interpolant (EIM) and validate out-of-sample,
+  5. save the artifact and reload it.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
+
+import tempfile
 
 import jax
 
@@ -16,10 +20,9 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    eim_nodes, empirical_interpolant, pod, rb_greedy, reconstruction,
-)
-from repro.core.errors import proj_error_max, orthogonality_defect
+from repro.api import ReducedBasis, build_basis
+from repro.core import empirical_interpolant, reconstruction
+from repro.core.errors import orthogonality_defect, proj_error_max
 from repro.gw import build_snapshot_matrix, chirp_grid, frequency_grid
 from repro.gw.grids import random_mass_samples
 
@@ -32,28 +35,32 @@ def main():
     print(f"snapshot matrix S: {S.shape} {S.dtype} "
           f"({S.size * 16 / 1e6:.1f} MB)")
 
-    # 2. RB-greedy to tau = 1e-6
+    # 2. one front door: strategy="auto" resolves to the resident chunked
+    #    greedy driver at this shape (see the repro.api log line)
     tau = 1e-6
-    res = rb_greedy(S, tau=tau)
-    k = int(res.k)
+    basis = build_basis(source=S, tau=tau)
+    k = basis.k
     print(f"greedy basis: k = {k} of {S.shape[1]} columns "
           f"(compression {S.shape[1] / k:.1f}x)")
-    print(f"  max projection error: {float(proj_error_max(S, res.Q[:, :k])):.2e}"
+    print(f"  max projection error: "
+          f"{float(jnp.max(basis.per_column_errors(S))):.2e}"
           f" (tau = {tau:.0e})")
     print(f"  orthogonality defect: "
-          f"{float(orthogonality_defect(res.Q[:, :k])):.2e}")
-    print(f"  error decay: {[f'{float(e):.1e}' for e in res.errs[:k:k//8]]}")
+          f"{float(orthogonality_defect(basis.Q)):.2e}")
+    print(f"  error decay: "
+          f"{[f'{float(e):.1e}' for e in basis.errs[::max(1, k // 8)]]}")
 
-    # 3. POD comparison (Theorem 3.2 / Remark 4.2)
-    p = pod(S, tau=tau)
-    print(f"POD rank at same tau (2-norm): k = {int(p.k)} "
+    # 3. POD comparison (Theorem 3.2 / Remark 4.2) — same front door,
+    #    different strategy
+    p = build_basis(source=S, strategy="pod", tau=tau)
+    print(f"POD rank at same tau (2-norm): k = {p.k} "
           f"(greedy uses max-norm; Cor. 4.4 orders the criteria)")
     rec = reconstruction(S, tau1=tau * 1e-2, tau2=tau)
     print(f"reconstruction (Alg. 4): j = {rec.j} QR terms -> "
           f"k = {int(rec.k)} SVD-rotated bases")
 
     # 4. EIM + out-of-sample validation (greedycpp's validation step)
-    ei = eim_nodes(res.Q[:, :k])
+    ei = basis.eim()
     mv1, mv2 = random_mass_samples(200, 7.0, 25.0, seed=7)
     V = build_snapshot_matrix(f, mv1, mv2, dtype=jnp.complex128)
     errs = [
@@ -63,6 +70,14 @@ def main():
     ]
     print(f"EIM: {k} nodes; out-of-sample interpolation error "
           f"median {np.median(errs):.2e} / max {np.max(errs):.2e}")
+
+    # 5. the basis is a durable artifact: save, reload, reuse
+    with tempfile.TemporaryDirectory() as td:
+        basis.save(td)
+        again = ReducedBasis.load(td)
+        same = bool(jnp.all(again.Q == basis.Q))
+        print(f"save/load round trip: bit-identical Q = {same}, "
+              f"provenance strategy = {again.provenance['strategy']!r}")
 
 
 if __name__ == "__main__":

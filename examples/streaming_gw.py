@@ -2,11 +2,12 @@
 
 The paper's headline run reduces a ~0.5 TB snapshot matrix that no single
 worker can hold.  This example reproduces that regime's *structure* at demo
-scale: a :class:`repro.data.WaveformProvider` generates TaylorF2 snapshot
-tiles on demand from a (chirp mass, eta) grid — the full matrix never
-exists — and :func:`repro.core.rb_greedy_streamed` sweeps the tiles with
-peak device memory O(N * (max_k + tile_m)), checkpointing mid-build so a
-killed job resumes from the last completed tile:
+scale through the front door: ``ReductionSpec.waveform`` wraps a (chirp
+mass, eta) grid in a :class:`repro.data.WaveformProvider` that generates
+TaylorF2 snapshot tiles on demand — the full matrix never exists — and
+``build_basis(strategy="streamed")`` sweeps the tiles with peak device
+memory O(N * (max_k + 2*tile_m)), checkpointing mid-build so a killed job
+resumes from the last completed tile:
 
     python examples/streaming_gw.py            # build (interrupt freely)
     python examples/streaming_gw.py            # re-run: resumes, no rework
@@ -21,8 +22,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax.numpy as jnp  # noqa: E402
 
-from repro.core import rb_greedy_streamed  # noqa: E402
-from repro.data import WaveformProvider  # noqa: E402
+from repro.api import ReductionSpec, build_basis  # noqa: E402
 from repro.gw import chirp_grid, frequency_grid  # noqa: E402
 
 
@@ -30,31 +30,36 @@ def main():
     f = frequency_grid(20.0, 512.0, 2000)
     # narrow chirp-mass band: the family's n-width decays within ~60 bases
     m1, m2 = chirp_grid(mc_min=9.0, mc_max=11.0, n_mc=120, n_eta=40)
-    prov = WaveformProvider(f, m1, m2, dtype=jnp.complex64)
-    N, M = prov.shape
     tile_m = 600
-    print(f"provider: N={N} x M={M} complex64 "
-          f"(~{N * M * 8 / 1e6:.0f} MB if materialized), tile_m={tile_m} "
-          f"-> device peak ~{N * (96 + tile_m) * 8 / 1e6:.1f} MB")
-
     ckpt = os.path.join(os.path.dirname(__file__), "_streaming_ckpt")
-    res = rb_greedy_streamed(
-        prov, tau=1e-4, max_k=96, tile_m=tile_m, keep_R=False,
-        checkpoint_dir=ckpt, checkpoint_every_tiles=2, resume=True,
+    # a waveform-grid spec: snapshot columns generated on the fly, the
+    # matrix never materialized (the paper's out-of-core regime)
+    spec = ReductionSpec.waveform(
+        f, m1, m2, dtype=jnp.complex64,
+        strategy="streamed", tau=1e-4, max_k=96, tile_m=tile_m,
+        keep_R=False, checkpoint_dir=ckpt, checkpoint_every_tiles=2,
+        resume=True,
         callback=lambda i: print(
             f"  basis {i['k']:3d}  pivot {i['pivot']:5d}  "
             f"err {i['err']:.3e}"),
     )
-    print(f"built k={res.k} bases over {res.n_tiles} tiles/sweep")
+    prov = spec.source
+    N, M = prov.shape
+    print(f"provider: N={N} x M={M} complex64 "
+          f"(~{N * M * 8 / 1e6:.0f} MB if materialized), tile_m={tile_m} "
+          f"-> device peak ~{N * (96 + 2 * tile_m) * 8 / 1e6:.1f} MB "
+          f"(current + prefetched tile)")
+
+    basis = build_basis(spec)
+    print(f"built k={basis.k} bases over {-(-M // tile_m)} tiles/sweep")
 
     # out-of-sample validation against freshly generated waveforms
     rng = np.random.default_rng(7)
-    Q = res.Q[:, :res.k]
     worst = 0.0
     for _ in range(50):
         j = int(rng.integers(0, M))
         h = prov.column(j)
-        r = h - Q @ (Q.conj().T @ h)
+        r = h - basis.reconstruct(h)
         worst = max(worst, float(jnp.linalg.norm(r)))
     print(f"max in-grid residual over 50 spot checks: {worst:.3e}")
 

@@ -17,8 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import build_basis
 from repro.configs import get_config
-from repro.core import rb_greedy
 from repro.data import SyntheticLMData
 from repro.models import api
 from repro.training import make_train_step, train_state_init
@@ -103,8 +103,7 @@ def main():
                        ("(c) position sweep", cols_pos)):
         S = jnp.asarray(np.stack(cols, axis=1))
         S = S / jnp.linalg.norm(S, axis=0, keepdims=True)
-        res = rb_greedy(S, tau=1e-3)
-        k = int(res.k)
+        k = build_basis(source=S, strategy="greedy", tau=1e-3).k
         print(f"{name}: greedy basis k = {k}/{S.shape[1]} "
               f"({S.shape[1]/max(k,1):.1f}x compression at tau=1e-3)")
     print("=> unstructured sweeps are near full rank; smooth parametric "

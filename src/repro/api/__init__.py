@@ -1,0 +1,39 @@
+"""One front door for model reduction.
+
+The paper's Prop. 5.3 / Thm. 5.1 make POD, pivoted MGS and RB-greedy
+interchangeable reducers with the same error estimate; this package makes
+them interchangeable in code::
+
+    from repro.api import build_basis
+
+    basis = build_basis(source=S, tau=1e-6)        # strategy="auto"
+    basis.eim()                                    # EIM nodes + interpolant
+    basis.save("artifacts/basis")                  # durable artifact
+
+- :class:`ReductionSpec`   — declarative build description (source,
+  strategy, tolerance, execution options).
+- :func:`build_basis`      — spec (or kwargs) in, :class:`ReducedBasis`
+  out; ``strategy="auto"`` picks resident / streamed / distributed from
+  the problem shape and device-memory budget.
+- :class:`ReducedBasis`    — the one result artifact: trimmed Q / R /
+  pivots / errs + provenance, with ``project`` / ``reconstruct`` /
+  ``per_column_errors`` / ``eim`` / ``roq_weights`` and
+  ``save``/``load``.
+
+The legacy drivers in :mod:`repro.core` remain the strategy engines (and
+keep working), but new code should come through this door — it is the
+seam future strategies (e.g. randomized sketching) plug into without
+another bespoke entry point.
+"""
+
+from repro.api.artifact import ReducedBasis
+from repro.api.build import build_basis, device_memory_budget
+from repro.api.spec import STRATEGIES, ReductionSpec
+
+__all__ = [
+    "ReductionSpec",
+    "ReducedBasis",
+    "build_basis",
+    "device_memory_budget",
+    "STRATEGIES",
+]

@@ -1,0 +1,147 @@
+"""`ReducedBasis`: the one result artifact of every reduction strategy.
+
+Wraps the trimmed basis Q (plus R / pivots / errs where the strategy
+produces them) together with build provenance, and carries the paper's
+downstream workflow as methods: projection / reconstruction / per-column
+errors (Sec. 4), empirical-interpolation nodes and ROQ weights (the GW
+application, Sec. 6.2), and durable ``save``/``load`` built on
+:mod:`repro.checkpoint.io` (atomic step directory, CRC-verified leaves).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_ARTIFACT_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ReducedBasis:
+    """A built reduced basis plus provenance.
+
+    Attributes:
+      Q:      (N, k) orthonormal basis, trimmed to the accepted rank
+              (legacy drivers zero-pad to max_k; the artifact never does).
+      pivots: (k,) int32 selected snapshot columns.  Empty for ``pod``
+              (SVD has no pivots).
+      errs:   (k,) per-basis greedy errors (error *before* adding basis j;
+              Cor. 5.6) — for ``pod`` the singular values sigma_1..sigma_k,
+              for ``mgs`` the pivoted diagonal R(j,j) (equal quantities by
+              Cor. 5.6 / Prop. 5.3).
+      k:      accepted rank (== Q.shape[1]).
+      R:      (k, M) triangular rows ``R[j] = q_j^H S`` in ORIGINAL column
+              order, or None (pod; streamed with ``keep_R=False``).
+      provenance: how the basis was built — strategy, backend, dtype,
+              snapshot shape, wall time, and the originating spec
+              (:meth:`repro.api.spec.ReductionSpec.describe`).
+    """
+
+    Q: jax.Array
+    pivots: np.ndarray
+    errs: np.ndarray
+    k: int
+    R: Optional[np.ndarray] = None
+    provenance: dict = dataclasses.field(default_factory=dict)
+
+    # ---------------------------------------------------------- reuse ----
+    @property
+    def N(self) -> int:
+        return int(self.Q.shape[0])
+
+    def project(self, f: jax.Array) -> jax.Array:
+        """Basis coefficients ``c = Q^H f`` for a vector or (N, m) batch."""
+        return self.Q.conj().T @ jnp.asarray(f)
+
+    def reconstruct(self, f: jax.Array) -> jax.Array:
+        """Orthogonal projection ``Q Q^H f`` onto the reduced subspace."""
+        return self.Q @ self.project(f)
+
+    def per_column_errors(self, S) -> jax.Array:
+        """``|s_i - Q Q^H s_i|_2`` per column of S (Thm 4.3)."""
+        from repro.core.errors import per_column_errors
+        from repro.data.providers import materialize_source
+
+        return per_column_errors(materialize_source(S), self.Q)
+
+    @functools.cached_property
+    def _eim(self):
+        from repro.core.eim import eim_nodes
+
+        return eim_nodes(self.Q)
+
+    def eim(self):
+        """EIM/DEIM node selection for this basis (cached EIMResult)."""
+        return self._eim
+
+    def roq_weights(self, data: jax.Array, quad_w: jax.Array) -> jax.Array:
+        """Reduced-order quadrature weights for ``<data, .>`` at the EIM
+        nodes (the paper's GW likelihood application)."""
+        from repro.core.eim import roq_weights
+
+        return roq_weights(jnp.asarray(data), jnp.asarray(quad_w),
+                           self._eim.B)
+
+    # ------------------------------------------------------ persistence ----
+    def save(self, directory: str) -> str:
+        """Persist to ``directory`` (atomic; one step dir under it).
+
+        Arrays round-trip bit-identically (``.npy`` leaves, CRC-checked by
+        the manifest); provenance rides along as a JSON leaf.  Each save
+        writes a NEW step directory numbered past any existing steps
+        (:meth:`load` reads the newest), so saving into a reused directory
+        never shadows the fresh artifact behind stale higher-numbered
+        steps.  Returns the written step directory.
+        """
+        from repro.checkpoint.io import latest_step, save_checkpoint
+
+        tree = {
+            "artifact_version": np.asarray(_ARTIFACT_VERSION, np.int64),
+            "Q": np.asarray(jax.device_get(self.Q)),
+            "pivots": np.asarray(self.pivots),
+            "errs": np.asarray(self.errs),
+            "k": np.asarray(self.k, np.int64),
+            "provenance_json": np.asarray(
+                json.dumps(self.provenance, default=str)
+            ),
+        }
+        if self.R is not None:
+            tree["R"] = np.asarray(self.R)
+        last = latest_step(directory)
+        return save_checkpoint(tree, directory,
+                               0 if last is None else last + 1)
+
+    @classmethod
+    def load(cls, directory: str) -> "ReducedBasis":
+        """Load a basis saved by :meth:`save` (bit-identical arrays)."""
+        from repro.checkpoint.io import load_checkpoint_raw
+
+        tree = load_checkpoint_raw(directory)
+        version = int(tree["artifact_version"])
+        if version != _ARTIFACT_VERSION:
+            raise ValueError(
+                f"ReducedBasis artifact version {version} != supported "
+                f"{_ARTIFACT_VERSION}"
+            )
+        return cls(
+            Q=jnp.asarray(tree["Q"]),
+            pivots=tree["pivots"],
+            errs=tree["errs"],
+            k=int(tree["k"]),
+            R=tree.get("R"),
+            provenance=json.loads(str(tree["provenance_json"])),
+        )
+
+    def __repr__(self) -> str:  # compact, log-friendly
+        p = self.provenance
+        return (
+            f"ReducedBasis(k={self.k}, N={self.N}, "
+            f"dtype={self.Q.dtype}, strategy={p.get('strategy')!r}, "
+            f"backend={p.get('backend')!r})"
+        )

@@ -1,0 +1,262 @@
+"""`build_basis`: the one front door to every reduction strategy.
+
+Dispatches a :class:`~repro.api.spec.ReductionSpec` to the matching driver
+in :mod:`repro.core` and wraps the result as a
+:class:`~repro.api.artifact.ReducedBasis`.  Strategy ``"auto"`` picks the
+driver from the problem shape and a device-memory budget:
+
+  mesh given                         -> "distributed"
+  N*M (+ greedy state) fits budget   -> "greedy"   (resident chunked)
+  otherwise                          -> "streamed" (tile-streamed)
+
+and logs the choice (logger ``repro.api``).  Every strategy goes through
+the same drivers the legacy entry points use, so results are bit-for-bit
+identical to calling those drivers directly (asserted in
+``tests/test_api.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import os
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.artifact import ReducedBasis
+from repro.api.spec import STRATEGIES, ReductionSpec
+
+logger = logging.getLogger("repro.api")
+
+_ENV_BUDGET = "REPRO_DEVICE_MEM_BUDGET"
+_FALLBACK_BUDGET = 4 << 30  # 4 GiB when nothing else is detectable
+
+
+def device_memory_budget() -> int:
+    """Device-memory budget (bytes) the ``"auto"`` strategy plans against.
+
+    Precedence: ``REPRO_DEVICE_MEM_BUDGET`` env var > the default device's
+    reported memory (``memory_stats()["bytes_limit"]``, TPU/GPU) > half of
+    host MemAvailable (CPU devices share host RAM) > 4 GiB.
+    """
+    env = os.environ.get(_ENV_BUDGET)
+    if env:
+        return int(float(env))
+    try:
+        stats = jax.devices()[0].memory_stats()
+        if stats and stats.get("bytes_limit"):
+            return int(stats["bytes_limit"])
+    except Exception:  # memory_stats unimplemented on some backends
+        pass
+    try:
+        with open("/proc/meminfo") as f:
+            for line in f:
+                if line.startswith("MemAvailable:"):
+                    return int(line.split()[1]) * 1024 // 2
+    except OSError:
+        pass
+    return _FALLBACK_BUDGET
+
+
+def _resident_bytes(shape, dtype, max_k: Optional[int]) -> int:
+    """Device footprint of a resident greedy build: S + Q + R (+ M-vectors)."""
+    N, M = shape
+    mk = min(N, M) if max_k is None else min(max_k, N, M)
+    itemsize = jnp.dtype(dtype).itemsize
+    return itemsize * (N * M + mk * (N + M)) + 4 * M * itemsize
+
+
+def _auto_strategy(spec: ReductionSpec, shape, dtype) -> str:
+    if spec.mesh is not None:
+        choice, why = "distributed", "a mesh was passed"
+    else:
+        need = _resident_bytes(shape, dtype, spec.max_k)
+        budget = (spec.memory_budget_bytes
+                  if spec.memory_budget_bytes is not None
+                  else device_memory_budget())
+        if need <= budget:
+            choice = "greedy"
+            why = (f"resident footprint ~{need / 1e6:.0f} MB fits the "
+                   f"device budget ~{budget / 1e6:.0f} MB")
+        else:
+            choice = "streamed"
+            why = (f"resident footprint ~{need / 1e6:.0f} MB exceeds the "
+                   f"device budget ~{budget / 1e6:.0f} MB")
+    logger.info(
+        "auto strategy -> %r for shape %s %s (%s)",
+        choice, tuple(shape), jnp.dtype(dtype).name, why,
+    )
+    return choice
+
+
+# ------------------------------------------------------- strategy bodies ----
+# Each returns (Q, pivots, errs, R, k) TRIMMED to the accepted rank, with
+# values bit-identical to the corresponding legacy driver's (sliced) output.
+
+
+def _trim_greedy(res):
+    k = int(res.k)
+    return (res.Q[:, :k], np.asarray(res.pivots[:k]),
+            np.asarray(res.errs[:k]),
+            None if res.R is None else np.asarray(res.R[:k]), k)
+
+
+def _build_greedy(spec, S):
+    from repro.core.greedy import rb_greedy
+
+    return _trim_greedy(rb_greedy(
+        S, tau=spec.tau, max_k=spec.max_k, kappa=spec.kappa,
+        max_passes=spec.max_passes, callback=spec.callback,
+        refresh=spec.refresh, refresh_safety=spec.refresh_safety,
+        chunk=spec.chunk, backend=spec.backend,
+    ))
+
+
+def _build_block_greedy(spec, S):
+    from repro.core.block_greedy import _rb_greedy_block_impl
+
+    return _trim_greedy(_rb_greedy_block_impl(
+        S, tau=spec.tau, p=spec.block_p, max_k=spec.max_k,
+        kappa=spec.kappa, max_passes=spec.max_passes, refresh=spec.refresh,
+        refresh_safety=spec.refresh_safety, backend=spec.backend,
+    ))
+
+
+def _build_distributed(spec, S):
+    from repro.core.distributed import distributed_greedy
+
+    if spec.mesh is None:
+        raise ValueError('strategy "distributed" requires spec.mesh')
+    N, M = S.shape
+    max_k = min(N, M) if spec.max_k is None else spec.max_k
+    return _trim_greedy(distributed_greedy(
+        S, tau=spec.tau, max_k=max_k, mesh=spec.mesh,
+        callback=spec.callback, refresh=spec.refresh,
+        refresh_safety=spec.refresh_safety, kappa=spec.kappa,
+        max_passes=spec.max_passes, chunk=spec.chunk, backend=spec.backend,
+    ))
+
+
+def _build_streamed(spec, _S_unused=None):
+    from repro.core.streaming import rb_greedy_streamed
+
+    res = rb_greedy_streamed(
+        spec.source, tau=spec.tau, max_k=spec.max_k, tile_m=spec.tile_m,
+        kappa=spec.kappa, max_passes=spec.max_passes, refresh=spec.refresh,
+        refresh_safety=spec.refresh_safety, backend=spec.backend,
+        keep_R=spec.keep_R, checkpoint_dir=spec.checkpoint_dir,
+        checkpoint_every_tiles=spec.checkpoint_every_tiles,
+        resume=spec.resume, callback=spec.callback,
+    )
+    k = int(res.k)
+    return (res.Q[:, :k], np.asarray(res.pivots[:k]),
+            np.asarray(res.errs[:k]),
+            None if res.R is None else np.asarray(res.R[:k]), k)
+
+
+def _build_mgs(spec, S):
+    from repro.core.mgs import _mgs_pivoted_qr_impl
+
+    res = _mgs_pivoted_qr_impl(S, tau=spec.tau, max_k=spec.max_k)
+    return (res.Q, np.asarray(res.pivots), np.asarray(res.r_diag),
+            np.asarray(res.R), int(res.k))
+
+
+def _build_pod(spec, S):
+    from repro.core.pod import pod
+
+    res = pod(S, tau=spec.tau)
+    k = int(res.k)
+    if spec.max_k is not None:
+        k = min(k, spec.max_k)
+    return (res.basis[:, :k], np.zeros((0,), np.int32),
+            np.asarray(res.sigmas[:k]), None, k)
+
+
+_BUILDERS = {
+    "greedy": _build_greedy,
+    "block_greedy": _build_block_greedy,
+    "distributed": _build_distributed,
+    "streamed": _build_streamed,
+    "mgs": _build_mgs,
+    "pod": _build_pod,
+}
+
+
+def build_basis(spec: ReductionSpec | None = None,
+                **kwargs) -> ReducedBasis:
+    """Build a reduced basis: the front door to every strategy.
+
+    Call with a :class:`ReductionSpec`, keyword arguments, or both (the
+    keywords override spec fields)::
+
+        basis = build_basis(source=S, tau=1e-6)              # auto strategy
+        basis = build_basis(ReductionSpec(source=S, strategy="pod"))
+        basis = build_basis(spec, tau=1e-8)                  # override
+
+    Returns a :class:`ReducedBasis` whose arrays are bit-identical to the
+    corresponding legacy driver's output, trimmed to the accepted rank,
+    with build provenance attached.
+    """
+    if spec is None:
+        spec = ReductionSpec(**kwargs)
+    elif kwargs:
+        spec = dataclasses.replace(spec, **kwargs)
+    if not isinstance(spec, ReductionSpec):
+        raise TypeError(
+            f"build_basis takes a ReductionSpec (or keyword args), got "
+            f"{type(spec).__name__}"
+        )
+
+    from repro.core.backend import resolve_backend
+    from repro.data.providers import as_provider, materialize_source
+
+    strategy = spec.strategy
+    if strategy == "streamed":
+        shape, dtype = (p := as_provider(spec.source)).shape, p.dtype
+        S = None
+    else:
+        # Every resident strategy accepts anything as_provider accepts
+        # (small sources are materialized); "auto" decides BEFORE
+        # materializing so an out-of-core source never lands on device.
+        if strategy == "auto":
+            prov = as_provider(spec.source)
+            shape, dtype = prov.shape, prov.dtype
+            strategy = _auto_strategy(spec, shape, dtype)
+        if strategy == "streamed":
+            S = None
+        else:
+            S = materialize_source(spec.source)
+            shape, dtype = S.shape, S.dtype
+
+    build = _BUILDERS[strategy]
+    t0 = time.perf_counter()
+    Q, pivots, errs, R, k = build(spec, S)
+    jax.block_until_ready(Q)
+    wall = time.perf_counter() - t0
+
+    provenance = {
+        "strategy": strategy,
+        "requested_strategy": spec.strategy,
+        "backend": (None if strategy in ("pod", "mgs")
+                    else resolve_backend(spec.backend)),
+        "dtype": jnp.dtype(dtype).name,
+        "shape": [int(shape[0]), int(shape[1])],
+        "tau": spec.tau,
+        "max_k": spec.max_k,
+        "wall_time_s": wall,
+        "spec": spec.describe(),
+        "repro_version": _repro_version(),
+    }
+    return ReducedBasis(Q=Q, pivots=pivots, errs=errs, k=k, R=R,
+                        provenance=provenance)
+
+
+def _repro_version() -> str:
+    import repro
+
+    return getattr(repro, "__version__", "unknown")

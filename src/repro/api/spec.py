@@ -1,0 +1,144 @@
+"""`ReductionSpec`: one declarative description of a basis build.
+
+The paper presents POD (Algorithm 1), pivoted MGS (Algorithm 2) and
+RB-greedy (Algorithm 3) as *interchangeable* reducers with the same error
+estimate (Prop. 5.3 / Thm. 5.1), and its software section sells a single
+workflow: build a basis from snapshots, then reuse it.  A
+:class:`ReductionSpec` captures everything that workflow needs — what the
+snapshots are, which reducer to run, to what tolerance, and how to execute
+it — so :func:`repro.api.build_basis` is the only call site a consumer
+ever touches.
+
+The spec is a frozen dataclass: reuse one across builds with
+``dataclasses.replace(spec, tau=...)`` (or pass overrides straight to
+``build_basis(spec, tau=...)``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Callable, Optional
+
+# Reduction strategies build_basis dispatches on.  "auto" resolves to
+# "distributed" (a mesh was given), "greedy" (the problem fits the device
+# memory budget) or "streamed" (it does not) — see repro.api.build.
+STRATEGIES = (
+    "pod", "mgs", "greedy", "block_greedy", "streamed", "distributed",
+    "auto",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ReductionSpec:
+    """Everything :func:`repro.api.build_basis` needs to build a basis.
+
+    Attributes:
+      source: the snapshot matrix — anything
+        :func:`repro.data.providers.as_provider` accepts: a resident
+        (jax/numpy) array, a path to a ``.npy`` file (memory-mapped), or a
+        :class:`~repro.data.providers.SnapshotProvider` (e.g. a
+        :class:`~repro.data.providers.WaveformProvider` generating GW
+        snapshot tiles on the fly; see :meth:`waveform`).
+      strategy: one of ``STRATEGIES``.  ``"auto"`` picks from the problem
+        shape and the device-memory budget and logs its choice.
+      tau: greedy/POD stopping tolerance (the paper's ``tau``).
+      max_k: basis-size cap (default ``min(N, M)``).
+
+    Execution options (each consumed only by the strategies it applies to):
+      backend: hot-loop primitive backend (``repro.core.backend``):
+        ``"auto" | "xla" | "pallas" | "xla_ref"`` or None (env/default).
+      chunk: greedy iterations per device-resident chunk
+        (``greedy`` / ``distributed``).
+      tile_m: streamed tile width in columns (``streamed``).
+      mesh: a ``jax.sharding.Mesh`` — required by ``distributed``, and
+        flips ``"auto"`` to it.
+      block_p: pivots per sweep (``block_greedy``).
+      kappa, max_passes: Hoffmann iterated-GS controls (greedy family).
+      refresh, refresh_safety: Eq.-(6.3) exact-refresh policy
+        (greedy family; ``"never"`` is the paper-faithful mode).
+      keep_R: accumulate the (k, M) R factor (``streamed``; the one result
+        piece that scales with M).
+      checkpoint_dir / checkpoint_every_tiles / resume: mid-build
+        checkpointing (``streamed``).
+      callback: per-progress callback, forwarded verbatim to the driver
+        (chunk-cadence for ``greedy``/``distributed``, per-basis dict for
+        ``streamed``).
+      memory_budget_bytes: device-memory budget ``"auto"`` decides
+        against (default: detected device memory, overridable with the
+        ``REPRO_DEVICE_MEM_BUDGET`` env var).
+    """
+
+    source: Any = None
+    strategy: str = "auto"
+    tau: float = 1e-6
+    max_k: Optional[int] = None
+    backend: Optional[str] = None
+    chunk: int = 16
+    tile_m: int = 8192
+    mesh: Any = None
+    block_p: int = 4
+    kappa: float = 2.0
+    max_passes: int = 3
+    refresh: str = "auto"
+    refresh_safety: float = 100.0
+    keep_R: bool = True
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every_tiles: int = 0
+    resume: bool = False
+    callback: Optional[Callable] = None
+    memory_budget_bytes: Optional[int] = None
+
+    def __post_init__(self):
+        if self.strategy not in STRATEGIES:
+            raise ValueError(
+                f"unknown strategy {self.strategy!r}; valid: {STRATEGIES}"
+            )
+        if self.source is None:
+            raise ValueError("ReductionSpec requires a source")
+
+    @classmethod
+    def waveform(cls, f, m1s, m2s, dtype=None, normalize: bool = True,
+                 **kwargs) -> "ReductionSpec":
+        """Spec over a GW waveform grid: columns generated on the fly.
+
+        Wraps ``(f, m1s, m2s)`` in a
+        :class:`~repro.data.providers.WaveformProvider` — the snapshot
+        matrix is never materialized, so this pairs naturally with
+        ``strategy="streamed"`` (or ``"auto"``, which will pick it when
+        the grid exceeds the memory budget).
+        """
+        import jax.numpy as jnp
+
+        from repro.data.providers import WaveformProvider
+
+        prov = WaveformProvider(
+            f, m1s, m2s,
+            dtype=jnp.complex64 if dtype is None else dtype,
+            normalize=normalize,
+        )
+        return cls(source=prov, **kwargs)
+
+    def describe(self) -> dict:
+        """JSON-serializable provenance view of this spec (source/mesh/
+        callback summarized, not embedded)."""
+        # shallow per-field dict (dataclasses.asdict deep-copies, which
+        # chokes on device arrays / mesh Device objects)
+        d = {f.name: getattr(self, f.name)
+             for f in dataclasses.fields(self)}
+        src = self.source
+        shape = getattr(src, "shape", None)
+        d["source"] = {
+            "kind": type(src).__name__,
+            "shape": list(shape) if shape is not None else None,
+            "dtype": str(getattr(src, "dtype", None)),
+            **({"path": os.fspath(src)}
+               if isinstance(src, (str, os.PathLike)) else {}),
+        }
+        d["mesh"] = (
+            None if self.mesh is None
+            else {"axis_names": list(self.mesh.axis_names),
+                  "shape": [int(s) for s in self.mesh.devices.shape]}
+        )
+        d["callback"] = None if self.callback is None else "<callback>"
+        return d

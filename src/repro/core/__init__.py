@@ -1,15 +1,27 @@
 """Core model-reduction algorithms from the paper.
 
+NOTE: these modules are the strategy *engines*.  The recommended entry
+point is the front door, :mod:`repro.api` —
+``build_basis(source=S, tau=...)`` dispatches to the right engine
+(``strategy="pod" | "mgs" | "greedy" | "block_greedy" | "streamed" |
+"distributed" | "auto"``) and returns one ``ReducedBasis`` artifact with
+``eim()`` / ``roq_weights()`` / ``save()`` built in.
+
 - :mod:`repro.core.pod`            -- Algorithm 1 (POD via SVD).
-- :mod:`repro.core.mgs`            -- Algorithm 2 (MGS with column pivoting).
+- :mod:`repro.core.mgs`            -- Algorithm 2 (MGS with column pivoting;
+  direct ``mgs_pivoted_qr`` calls are deprecated in favor of the front
+  door — the implementation stays as the Prop.-5.3 reference).
 - :mod:`repro.core.greedy`         -- Algorithm 3 (RB-greedy w/ Hoffmann IMGS).
+- :mod:`repro.core.block_greedy`   -- blocked variant (p pivots per sweep;
+  direct ``rb_greedy_block`` calls likewise deprecated).
 - :mod:`repro.core.rrqr`           -- optimal RRQR (Theorem 5.1).
 - :mod:`repro.core.reconstruction` -- Algorithm 4 (QR + SVD-of-R).
 - :mod:`repro.core.eim`            -- empirical interpolation + ROQ.
 - :mod:`repro.core.errors`         -- the paper's error identities.
 - :mod:`repro.core.distributed`    -- shard_map column-parallel greedy (Sec 6).
 - :mod:`repro.core.streaming`      -- out-of-core tile-streamed greedy over
-  snapshot providers (M unbounded; peak device memory O(N(max_k+tile_m))).
+  snapshot providers (M unbounded; peak device memory
+  O(N(max_k+2*tile_m)) with next-tile prefetch).
 - :mod:`repro.core.backend`        -- hot-loop primitive dispatch
   (fused Pallas TPU kernels vs pure-jnp XLA; see its module docstring).
 """

@@ -24,6 +24,7 @@ applied to the paper's Eq.-6.3 greedy bookkeeping.
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import NamedTuple, Sequence
 
 import jax
@@ -97,7 +98,39 @@ def _jitted_block_step(S, state, p: int, kappa: float = 2.0,
 
 
 def rb_greedy_block(
-    S: jax.Array,
+    S,
+    tau: float,
+    p: int = 4,
+    max_k: int | None = None,
+    kappa: float = 2.0,
+    max_passes: int = 3,
+    refresh: str = "auto",
+    refresh_safety: float = 100.0,
+    backend: str | None = None,
+) -> GreedyResult:
+    """Deprecated entry point: use ``repro.api.build_basis(source=S,
+    strategy="block_greedy", tau=tau, block_p=p)``.
+
+    Block pivoting is an execution optimization of the same greedy
+    reduction — as a *public* entry point it is redundant with the front
+    door.  The implementation is unchanged; this wrapper delegates to it
+    verbatim.
+    """
+    warnings.warn(
+        "rb_greedy_block is deprecated: call repro.api.build_basis("
+        "source=S, strategy='block_greedy', tau=tau, block_p=p) instead "
+        "(identical result, unified ReducedBasis artifact)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return _rb_greedy_block_impl(
+        S, tau, p=p, max_k=max_k, kappa=kappa, max_passes=max_passes,
+        refresh=refresh, refresh_safety=refresh_safety, backend=backend,
+    )
+
+
+def _rb_greedy_block_impl(
+    S,
     tau: float,
     p: int = 4,
     max_k: int | None = None,
@@ -113,6 +146,9 @@ def rb_greedy_block(
     buffer; ``k`` counts accepted bases but their slots are the first
     ``k + holes`` columns.  For simplicity the driver compacts Q at the end.
     """
+    from repro.data.providers import materialize_source
+
+    S = materialize_source(S)
     N, M = S.shape
     if max_k is None:
         max_k = min(N, M)

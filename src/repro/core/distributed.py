@@ -303,7 +303,7 @@ def make_dist_refresh(mesh: Mesh):
 
 
 def distributed_greedy(
-    S: jax.Array,
+    S,
     tau: float,
     max_k: int,
     mesh: Mesh,
@@ -327,7 +327,13 @@ def distributed_greedy(
     the chunk does not donate state buffers (retained checkpoint states
     stay valid); see :func:`repro.core.greedy.rb_greedy` for that and for
     the on-device stop-threshold dtype caveat.
+
+    ``S`` may be anything :func:`repro.data.providers.as_provider`
+    accepts; non-array sources are materialized before placement.
     """
+    from repro.data.providers import materialize_source
+
+    S = materialize_source(S)
     s_sharding = NamedSharding(mesh, P(None, tuple(mesh.axis_names)))
     if getattr(S, "sharding", None) != s_sharding:
         S = jax.device_put(S, s_sharding)

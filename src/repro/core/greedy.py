@@ -319,7 +319,7 @@ _greedy_chunk_donated = jax.jit(
 
 
 def rb_greedy(
-    S: jax.Array,
+    S,
     tau: float,
     max_k: int | None = None,
     kappa: float = 2.0,
@@ -353,7 +353,15 @@ def rb_greedy(
     refresh: "auto" triggers :func:`greedy_refresh` when the tracked residual
     nears the Eq.-(6.3) cancellation floor (err^2 < safety * eps * ref^2);
     "never" is the paper-faithful mode.
+
+    ``S`` may be anything :func:`repro.data.providers.as_provider` accepts
+    (arrays pass through; paths/providers are materialized — use
+    :func:`repro.core.streaming.rb_greedy_streamed` for sources that do
+    not fit on device).
     """
+    from repro.data.providers import materialize_source
+
+    S = materialize_source(S)
     N, M = S.shape
     if max_k is None:
         max_k = min(N, M)
@@ -421,7 +429,7 @@ def rb_greedy(
 
 
 def rb_greedy_stepwise(
-    S: jax.Array,
+    S,
     tau: float,
     max_k: int | None = None,
     kappa: float = 2.0,
@@ -438,6 +446,9 @@ def rb_greedy_stepwise(
     oracle for :func:`rb_greedy` and (b) the benchmark baseline the chunked
     driver is measured against; ``callback(state)`` fires every iteration.
     """
+    from repro.data.providers import materialize_source
+
+    S = materialize_source(S)
     N, M = S.shape
     if max_k is None:
         max_k = min(N, M)

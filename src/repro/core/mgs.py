@@ -13,6 +13,7 @@ overhead relative to RB-greedy (Remark 5.4's discussion).
 
 from __future__ import annotations
 
+import warnings
 from typing import NamedTuple
 
 import jax
@@ -27,12 +28,39 @@ class MGSResult(NamedTuple):
     k: int
 
 
-def mgs_pivoted_qr(S: jax.Array, tau: float, max_k: int | None = None) -> MGSResult:
+def mgs_pivoted_qr(S, tau: float, max_k: int | None = None) -> MGSResult:
+    """Deprecated entry point: use ``repro.api.build_basis(source=S,
+    strategy="mgs", tau=tau)``.
+
+    Pivoted MGS selects the same pivots as RB-greedy (Prop. 5.3) — as a
+    *public* entry point it is redundant with the front door, which also
+    returns the unified :class:`~repro.api.artifact.ReducedBasis` artifact.
+    The implementation is unchanged and stays the Prop.-5.3 reference
+    oracle; this wrapper delegates to it verbatim.
+    """
+    warnings.warn(
+        "mgs_pivoted_qr is deprecated: call repro.api.build_basis("
+        "source=S, strategy='mgs', tau=tau) instead (identical pivots and "
+        "basis, unified ReducedBasis result)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return _mgs_pivoted_qr_impl(S, tau, max_k)
+
+
+def _mgs_pivoted_qr_impl(S, tau: float,
+                         max_k: int | None = None) -> MGSResult:
     """Algorithm 2 (host-loop reference implementation).
 
     Stops when ``R(k,k) = max_j |V(:,j)|_2 < tau`` (the paper's criterion,
     equal to the RB-greedy max-residual by Cor. 5.6) or at ``max_k``.
+
+    ``S`` may be anything :func:`repro.data.providers.as_provider`
+    accepts (arrays pass through; paths/providers are materialized).
     """
+    from repro.data.providers import materialize_source
+
+    S = materialize_source(S)
     N, M = S.shape
     if max_k is None:
         max_k = min(N, M)

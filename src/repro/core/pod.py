@@ -30,20 +30,27 @@ class PODResult(NamedTuple):
     k: jax.Array
 
 
-def pod_basis(S: jax.Array, k: int) -> jax.Array:
+def pod_basis(S, k: int) -> jax.Array:
     """First k left singular vectors of S (the rank-k POD basis)."""
-    V, _, _ = jnp.linalg.svd(S, full_matrices=False)
+    from repro.data.providers import materialize_source
+
+    V, _, _ = jnp.linalg.svd(materialize_source(S), full_matrices=False)
     return V[:, :k]
 
 
-def pod(S: jax.Array, tau: float) -> PODResult:
+def pod(S, tau: float) -> PODResult:
     """Algorithm 1: POD with error tolerance ``tau`` (2-norm criterion).
 
     By Theorem 3.2(ii), ``|S - V_k V_k^H S|_2 = sigma_{k+1}``, so choosing the
     smallest k with ``sigma_{k+1} < tau`` guarantees a 2-norm projection error
     below ``tau``.
+
+    ``S`` may be anything :func:`repro.data.providers.as_provider` accepts
+    (arrays pass through; paths/providers are materialized).
     """
-    V, sig, _ = jnp.linalg.svd(S, full_matrices=False)
+    from repro.data.providers import materialize_source
+
+    V, sig, _ = jnp.linalg.svd(materialize_source(S), full_matrices=False)
     # smallest k with sigma_{k+1} < tau;  sigma indices are 0-based here:
     # sigma_{k+1} in the paper == sig[k].
     below = sig < tau

@@ -17,10 +17,14 @@ through the SAME fused backend primitives as the resident drivers:
                 device-resident basis Q — bit-identical to the in-memory
                 drivers because Q and the pivot column are the same arrays.
 
-Only Q (N x max_k) and one tile (N x tile_m) are ever device-resident;
+Tile traffic is double-buffered: while one tile's pass runs on device, the
+next tile's host read + ``jax.device_put`` is issued (jax dispatch is
+async), hiding the host<->device copies that otherwise dominate streamed
+builds.  Only Q (N x max_k) and two tiles (N x tile_m each, current +
+prefetched) are ever device-resident;
 the Eq.-(6.3) residual caches (``norms_sq``, ``acc``: M reals each) and
 the optional R factor live on host.  Peak device memory is
-O(N * (max_k + tile_m)) — independent of M.
+O(N * (max_k + 2 * tile_m)) — independent of M.
 
 Stop semantics (tau drop, rank guard, Eq.-(6.3) refresh) replicate
 :func:`repro.core.greedy.rb_greedy_stepwise` exactly; the parity suite
@@ -220,8 +224,15 @@ def _fresh_state(prov: SnapshotProvider, max_k: int, tiles, tile_m: int,
     st.backend = backend
     st.norms_sq = np.empty((M,), rdt)
     best_val, best_col = -math.inf, -1
-    for lo, hi in tiles:
-        n, mx, am = _tile_init(prov.tile(lo, hi))
+    nxt = prov.tile(*tiles[0]) if tiles else None
+    for i, (lo, hi) in enumerate(tiles):
+        T, nxt = nxt, None
+        out = _tile_init(T)  # async dispatch
+        if i + 1 < len(tiles):
+            # Prefetch the next tile (host read + async device_put) while
+            # the dispatched init pass runs — see the sweep loop.
+            nxt = prov.tile(*tiles[i + 1])
+        n, mx, am = out
         st.norms_sq[lo:hi] = np.asarray(n, rdt)
         val = float(mx)
         if val > best_val:
@@ -306,9 +317,10 @@ def rb_greedy_streamed(
 
     Args beyond the in-memory drivers':
       tile_m: columns per streamed tile.  Device peak is
-        O(N * (max_k + tile_m)); throughput prefers the largest tile that
-        fits (every greedy iteration re-streams all of S through the
-        Eq.-(6.3) sweep either way).
+        O(N * (max_k + 2 * tile_m)) — current tile plus the prefetched
+        next one; throughput prefers the largest tile that fits (every
+        greedy iteration re-streams all of S through the Eq.-(6.3) sweep
+        either way).
       keep_R: accumulate the (max_k, M) R factor on host.  Disable for
         M so large that even one host row set is unwanted.
       checkpoint_dir: if set, persist streaming state via
@@ -417,14 +429,24 @@ def rb_greedy_streamed(
             st.sweep_val, st.sweep_col = -math.inf, -1
 
         # --- Eq.-(6.3) sweep over tiles (resumable at tile granularity) ---
+        # The next tile is prefetched while the current tile's sweep runs:
+        # jax dispatch is async, so issuing the sweep, then the next tile's
+        # host read + device_put, THEN blocking on the sweep's outputs
+        # overlaps the host<->device tile traffic with device compute —
+        # this copy overhead dominated the streamed build before
+        # (BENCH_streaming.json: 3.58x vs resident on the CPU smoke shape).
         q = st.pending_q
+        nxt = prov.tile(*tiles[st.cursor]) if st.cursor < len(tiles) \
+            else None
         while st.cursor < len(tiles):
             lo, hi = tiles[st.cursor]
-            T = prov.tile(lo, hi)
+            T, nxt = nxt, None
             c, acc_out, mx, am = _tile_sweep(
                 q, T, jnp.asarray(st.acc[lo:hi]),
                 jnp.asarray(st.norms_sq[lo:hi]), backend
             )
+            if st.cursor + 1 < len(tiles):
+                nxt = prov.tile(*tiles[st.cursor + 1])  # overlaps the sweep
             st.acc[lo:hi] = np.asarray(acc_out, rdt)
             if st.R is not None:
                 st.R[st.k, lo:hi] = np.asarray(c)
@@ -463,8 +485,13 @@ def rb_greedy_streamed(
         if refresh == "auto" and err * err < refresh_safety * eps * st.ref_sq:
             new_norms = np.empty_like(st.norms_sq)
             best_val, best_col = -math.inf, -1
-            for lo, hi in tiles:
-                res, mx, am = _tile_refresh(st.Q, prov.tile(lo, hi))
+            nxt = prov.tile(*tiles[0]) if tiles else None
+            for i, (lo, hi) in enumerate(tiles):
+                T, nxt = nxt, None
+                out = _tile_refresh(st.Q, T)  # async dispatch
+                if i + 1 < len(tiles):
+                    nxt = prov.tile(*tiles[i + 1])  # overlaps the refresh
+                res, mx, am = out
                 new_norms[lo:hi] = np.asarray(res, rdt)
                 val = float(mx)
                 if val > best_val:

@@ -6,6 +6,7 @@ from repro.data.providers import (
     WaveformProvider,
     as_provider,
     create_snapshot_npy,
+    materialize_source,
     write_snapshot_npy,
 )
 
@@ -13,5 +14,5 @@ __all__ = [
     "SyntheticLMData", "FileLMData",
     "SnapshotProvider", "ArrayProvider", "MemmapProvider",
     "WaveformProvider", "as_provider", "create_snapshot_npy",
-    "write_snapshot_npy",
+    "materialize_source", "write_snapshot_npy",
 ]

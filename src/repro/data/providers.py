@@ -72,10 +72,17 @@ class SnapshotProvider(abc.ABC):
 
 
 class ArrayProvider(SnapshotProvider):
-    """A resident (N, M) array behind the provider interface."""
+    """A resident (N, M) array behind the provider interface.
+
+    Host (numpy) arrays are kept host-resident: each tile is device_put
+    separately, so streaming a big host matrix never places all of it on
+    device (and the ``"auto"`` strategy can probe shape/dtype without a
+    transfer).  Device arrays pass through and tiles are device slices.
+    """
 
     def __init__(self, S):
-        self._S = jnp.asarray(S)
+        self._S = S if isinstance(S, (jax.Array, np.ndarray)) \
+            else jnp.asarray(S)
         if self._S.ndim != 2:
             raise ValueError(f"expected a 2-D snapshot matrix, got shape "
                              f"{self._S.shape}")
@@ -89,6 +96,8 @@ class ArrayProvider(SnapshotProvider):
         return self._S.dtype
 
     def tile(self, lo: int, hi: int) -> jax.Array:
+        if isinstance(self._S, np.ndarray):
+            return jax.device_put(self._S[:, lo:hi])
         return self._S[:, lo:hi]
 
 
@@ -120,9 +129,10 @@ class MemmapProvider(SnapshotProvider):
         return self._mm.dtype
 
     def tile(self, lo: int, hi: int) -> jax.Array:
-        # np.asarray materializes ONLY the requested columns on host, then
-        # the copy is placed on device; the memmap itself stays lazy.
-        return jnp.asarray(np.asarray(self._mm[:, lo:hi]))
+        # np.asarray materializes ONLY the requested columns on host; the
+        # async jax.device_put lets the streaming driver prefetch the next
+        # tile while the current tile's sweep runs.  The memmap stays lazy.
+        return jax.device_put(np.asarray(self._mm[:, lo:hi]))
 
 
 class WaveformProvider(SnapshotProvider):
@@ -203,3 +213,23 @@ def as_provider(source) -> SnapshotProvider:
     if isinstance(source, (str, os.PathLike)):
         return MemmapProvider(source)
     return ArrayProvider(source)
+
+
+def materialize_source(source) -> jax.Array:
+    """Coerce anything :func:`as_provider` accepts into a resident matrix.
+
+    The in-memory drivers (``rb_greedy``, ``mgs_pivoted_qr``, ``pod``, ...)
+    call this so the same ``source=`` value works across every strategy:
+    a provider or ``.npy`` path is materialized as ONE tile — appropriate
+    for sources that fit on device; use the streamed driver otherwise.
+    Arrays pass through untouched (no copy, shardings preserved).
+    """
+    if isinstance(source, jax.Array):
+        return source
+    if isinstance(source, np.ndarray):
+        if source.ndim != 2:
+            raise ValueError(
+                f"expected a 2-D snapshot matrix, got shape {source.shape}"
+            )
+        return jnp.asarray(source)
+    return as_provider(source).materialize()

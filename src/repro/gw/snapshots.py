@@ -33,16 +33,17 @@ def build_snapshot_matrix(
     setting).
     """
     f = jnp.asarray(f)
-    gen = jax.jit(
-        jax.vmap(lambda a, b: taylorf2(f, a, b, dtype=dtype)), backend="cpu"
-    )
+    gen = jax.jit(jax.vmap(lambda a, b: taylorf2(f, a, b, dtype=dtype)))
     M = len(m1s)
     outs = []
-    for lo in range(0, M, chunk):
-        hi = min(lo + chunk, M)
-        block = gen(jnp.asarray(m1s[lo:hi]), jnp.asarray(m2s[lo:hi])).T
-        outs.append(block)
-    S = jnp.concatenate(outs, axis=1)
+    # generate on host CPU (jit's backend= kwarg is deprecated; the
+    # default_device context is the supported spelling), then place
+    with jax.default_device(jax.local_devices(backend="cpu")[0]):
+        for lo in range(0, M, chunk):
+            hi = min(lo + chunk, M)
+            block = gen(jnp.asarray(m1s[lo:hi]), jnp.asarray(m2s[lo:hi])).T
+            outs.append(block)
+        S = jnp.concatenate(outs, axis=1)
     if sharding is not None:
         S = jax.device_put(S, sharding)
     return S

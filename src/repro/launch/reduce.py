@@ -36,8 +36,6 @@ from repro.compat import make_auto_mesh
 from repro.configs.gw_greedy import CONFIG as GW_CONFIG, reduced as gw_reduced
 from repro.core.distributed import (
     DistGreedyState,
-    dist_greedy_init,
-    distributed_greedy,
     make_dist_greedy_step,
     state_shardings,
 )
@@ -115,8 +113,9 @@ def dryrun(mesh_kind: str, out_dir: str):
 
 def real_run(tau: float, out: str, small: bool, chunk: int = 16,
              backend: str | None = None):
-    from repro.gw import build_snapshot_matrix, chirp_grid, frequency_grid
+    from repro.api import ReductionSpec, build_basis
     from repro.checkpoint import save_checkpoint
+    from repro.gw import build_snapshot_matrix, chirp_grid, frequency_grid
 
     wl = gw_reduced() if small else GW_CONFIG
     devs = jax.devices()
@@ -142,19 +141,24 @@ def real_run(tau: float, out: str, small: bool, chunk: int = 16,
             save_checkpoint(state, ckpt_dir, k)
             last_ckpt[0] = k
 
+    spec = ReductionSpec(
+        source=S, strategy="distributed", tau=wl.tau, max_k=wl.max_k,
+        mesh=mesh, chunk=chunk, backend=backend, callback=cb,
+    )
     t0 = time.time()
-    res = distributed_greedy(S, tau=wl.tau, max_k=wl.max_k, mesh=mesh,
-                             callback=cb, chunk=chunk, backend=backend)
-    k = int(res.k)
+    basis = build_basis(spec)
+    k = basis.k
     print(f"greedy k={k} in {time.time()-t0:.1f}s; "
-          f"final err={float(res.errs[max(k-1,0)]):.3e}")
-    np.save(os.path.join(out, "basis.npy"), np.asarray(res.Q[:, :k]))
-    np.save(os.path.join(out, "pivots.npy"), np.asarray(res.pivots[:k]))
-
-    from repro.core import eim_nodes
-    ei = eim_nodes(jnp.asarray(np.asarray(res.Q[:, :k])))
+          f"final err={float(basis.errs[max(k-1, 0)]):.3e}")
+    # the durable artifact (Q/R/pivots/errs + provenance; serve with
+    # `python -m repro.launch.serve --basis <dir>`) ...
+    basis.save(os.path.join(out, "basis"))
+    # ... plus the legacy flat exports
+    np.save(os.path.join(out, "basis.npy"), np.asarray(basis.Q))
+    np.save(os.path.join(out, "pivots.npy"), np.asarray(basis.pivots))
+    ei = basis.eim()
     np.save(os.path.join(out, "ei_nodes.npy"), np.asarray(ei.nodes))
-    print(f"exported basis + {k} EI nodes to {out}")
+    print(f"exported ReducedBasis artifact + {k} EI nodes to {out}")
 
 
 def main():

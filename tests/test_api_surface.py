@@ -1,0 +1,99 @@
+"""Public-API snapshot: accidental surface breaks fail fast.
+
+Pins (a) the exported names of ``repro.api`` / ``repro.core`` /
+``repro.data``, (b) the exact signature of ``build_basis``, (c) the
+``ReductionSpec`` fields and defaults, and (d) the ``ReducedBasis``
+method surface.  Changing any of these is an intentional, reviewed act:
+update the snapshot here in the same commit.
+"""
+
+import dataclasses
+import inspect
+
+import repro.api
+import repro.core
+import repro.data
+from repro.api import ReducedBasis, ReductionSpec, build_basis
+
+
+def test_repro_api_exports():
+    assert sorted(repro.api.__all__) == [
+        "ReducedBasis",
+        "ReductionSpec",
+        "STRATEGIES",
+        "build_basis",
+        "device_memory_budget",
+    ]
+    for name in repro.api.__all__:
+        assert hasattr(repro.api, name), name
+
+
+def test_strategies_pinned():
+    assert repro.api.STRATEGIES == (
+        "pod", "mgs", "greedy", "block_greedy", "streamed", "distributed",
+        "auto",
+    )
+
+
+def test_build_basis_signature_pinned():
+    assert str(inspect.signature(build_basis)) == \
+        "(spec: 'ReductionSpec | None' = None, **kwargs) -> 'ReducedBasis'"
+
+
+def test_reduction_spec_fields_pinned():
+    fields = [(f.name, f.default) for f in dataclasses.fields(ReductionSpec)]
+    assert fields == [
+        ("source", None),
+        ("strategy", "auto"),
+        ("tau", 1e-6),
+        ("max_k", None),
+        ("backend", None),
+        ("chunk", 16),
+        ("tile_m", 8192),
+        ("mesh", None),
+        ("block_p", 4),
+        ("kappa", 2.0),
+        ("max_passes", 3),
+        ("refresh", "auto"),
+        ("refresh_safety", 100.0),
+        ("keep_R", True),
+        ("checkpoint_dir", None),
+        ("checkpoint_every_tiles", 0),
+        ("resume", False),
+        ("callback", None),
+        ("memory_budget_bytes", None),
+    ]
+
+
+def test_reduced_basis_surface_pinned():
+    public = sorted(
+        n for n in vars(ReducedBasis)
+        if not n.startswith("_") and callable(getattr(ReducedBasis, n))
+    )
+    assert public == [
+        "eim", "load", "per_column_errors", "project", "reconstruct",
+        "roq_weights", "save",
+    ]
+    assert [f.name for f in dataclasses.fields(ReducedBasis)] == [
+        "Q", "pivots", "errs", "k", "R", "provenance",
+    ]
+
+
+def test_repro_core_exports_stable():
+    """The legacy driver names keep importing (wrappers stay in place)."""
+    assert sorted(repro.core.__all__) == sorted([
+        "pod", "pod_basis", "mgs_pivoted_qr", "GreedyResult", "rb_greedy",
+        "rb_greedy_stepwise", "rb_greedy_streamed", "StreamedGreedyResult",
+        "imgs_orthogonalize", "optimal_rrqr", "reconstruction", "eim_nodes",
+        "empirical_interpolant", "roq_weights", "default_backend",
+        "resolve_backend", "set_default_backend",
+    ])
+
+
+def test_repro_data_exports_stable():
+    assert sorted(repro.data.__all__) == sorted([
+        "SyntheticLMData", "FileLMData", "SnapshotProvider",
+        "ArrayProvider", "MemmapProvider", "WaveformProvider",
+        "as_provider", "create_snapshot_npy", "materialize_source",
+        "write_snapshot_npy",
+    ])

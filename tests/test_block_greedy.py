@@ -1,4 +1,9 @@
-"""Block RB-greedy (beyond-paper §Perf): quality + cost properties."""
+"""Block RB-greedy (beyond-paper §Perf): quality + cost properties.
+
+Block builds run through the front door
+(``build_basis(strategy="block_greedy")``; the direct ``rb_greedy_block``
+entry point is deprecated).
+"""
 
 import jax
 import jax.numpy as jnp
@@ -6,10 +11,16 @@ import numpy as np
 import pytest
 
 from conftest import make_smooth_matrix
+from repro.api import build_basis
 from repro.core import rb_greedy
-from repro.core.block_greedy import block_greedy_step, rb_greedy_block
+from repro.core.block_greedy import block_greedy_step
 from repro.core.errors import orthogonality_defect, proj_error_max
 from repro.core.greedy import greedy_init
+
+
+def block_front_door(S, tau, p):
+    return build_basis(source=S, strategy="block_greedy", tau=tau,
+                       block_p=p)
 
 
 @pytest.fixture(scope="module")
@@ -23,9 +34,8 @@ def gw_S():
 @pytest.mark.parametrize("p", [2, 4, 8])
 def test_block_greedy_meets_tau(gw_S, p):
     tau = 1e-5
-    res = rb_greedy_block(gw_S, tau=tau, p=p)
-    k = int(res.k)
-    Q = res.Q[:, :k]
+    res = block_front_door(gw_S, tau=tau, p=p)
+    Q = res.Q
     assert float(proj_error_max(gw_S, Q)) < tau
     assert float(orthogonality_defect(Q)) < 1e-10
 
@@ -35,7 +45,7 @@ def test_block_greedy_basis_count_near_plain(gw_S, p):
     """Pivot staleness costs at most ~15% extra bases on smooth families."""
     tau = 1e-5
     k_plain = int(rb_greedy(gw_S, tau=tau).k)
-    k_block = int(rb_greedy_block(gw_S, tau=tau, p=p).k)
+    k_block = block_front_door(gw_S, tau=tau, p=p).k
     assert k_block <= int(k_plain * 1.15) + p
 
 
@@ -43,8 +53,8 @@ def test_block_p1_matches_plain():
     S = jnp.asarray(make_smooth_matrix())
     tau = 1e-6
     plain = rb_greedy(S, tau=tau)
-    blk = rb_greedy_block(S, tau=tau, p=1)
-    kp, kb = int(plain.k), int(blk.k)
+    blk = block_front_door(S, tau=tau, p=1)
+    kp, kb = int(plain.k), blk.k
     assert abs(kp - kb) <= 1
     k = min(kp, kb)
     assert np.array_equal(np.asarray(plain.pivots[:k]),

@@ -3,6 +3,10 @@
 Identical pivot sequences, identical pivoted-diagonal values, identical
 basis spans — on deterministic smooth families, random matrices (hypothesis
 sweep), and GW waveform snapshots.
+
+MGS runs through the front door (``build_basis(strategy="mgs")``; the
+direct ``mgs_pivoted_qr`` entry point is deprecated) — its ``errs`` are
+the pivoted diagonal R(j,j).
 """
 
 import jax.numpy as jnp
@@ -11,7 +15,12 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from conftest import make_smooth_matrix
-from repro.core import mgs_pivoted_qr, rb_greedy
+from repro.api import build_basis
+from repro.core import rb_greedy
+
+
+def mgs_front_door(S, tau, max_k=None):
+    return build_basis(source=S, strategy="mgs", tau=tau, max_k=max_k)
 
 
 def _span_distance(Q1, Q2):
@@ -29,11 +38,11 @@ def test_equivalence_smooth(dtype):
     S = jnp.asarray(make_smooth_matrix(dtype=dtype))
     tau = 1e-4
     g = rb_greedy(S, tau=tau)
-    m = mgs_pivoted_qr(S, tau=tau)
+    m = mgs_front_door(S, tau=tau)
     k = int(g.k)
     assert m.k == k
     assert np.array_equal(np.asarray(g.pivots[:k]), np.asarray(m.pivots))
-    assert np.allclose(np.asarray(g.errs[:k]), np.asarray(m.r_diag),
+    assert np.allclose(np.asarray(g.errs[:k]), np.asarray(m.errs),
                        rtol=1e-6)
     assert _span_distance(g.Q[:, :k], m.Q) < 1e-5
 
@@ -46,7 +55,7 @@ def test_functional_equivalence_deep(dtype):
     S = jnp.asarray(make_smooth_matrix(dtype=dtype))
     tau = 1e-8
     g = rb_greedy(S, tau=tau)
-    m = mgs_pivoted_qr(S, tau=tau)
+    m = mgs_front_door(S, tau=tau)
     k = int(g.k)
     assert abs(m.k - k) <= 1
     kk = min(k, m.k)
@@ -56,7 +65,7 @@ def test_functional_equivalence_deep(dtype):
     j_div = next((i for i in range(kk) if gp[i] != mp[i]), kk)
     assert j_div >= min(kk, 8)
     assert np.allclose(np.asarray(g.errs[:j_div]),
-                       np.asarray(m.r_diag[:j_div]), rtol=1e-3)
+                       np.asarray(m.errs[:j_div]), rtol=1e-3)
     # greedy + Hoffmann iterated GS meets tau;
     assert float(proj_error_max(S, g.Q[:, :k])) < tau * 1.01
     # plain MGS deflation loses ~kappa(S)*eps of true accuracy — exactly
@@ -89,7 +98,7 @@ def test_equivalence_random(seed, n, m, rank, use_complex):
     S = jnp.asarray(S)
     tau = 1e-6 * float(jnp.linalg.norm(S, ord=2))
     g = rb_greedy(S, tau=tau)
-    ms = mgs_pivoted_qr(S, tau=tau)
+    ms = mgs_front_door(S, tau=tau)
     k = min(int(g.k), ms.k)
     assert k >= 1
     assert np.array_equal(np.asarray(g.pivots[:k]),
@@ -111,7 +120,7 @@ def test_equivalence_gw_waveforms():
     S = jnp.stack(cols, axis=1)
     tau = 1e-5 * float(jnp.max(jnp.linalg.norm(S, axis=0)))
     g = rb_greedy(S, tau=tau)
-    m = mgs_pivoted_qr(S, tau=tau)
+    m = mgs_front_door(S, tau=tau)
     k = int(g.k)
     assert m.k == k
     assert np.array_equal(np.asarray(g.pivots[:k]), np.asarray(m.pivots))
