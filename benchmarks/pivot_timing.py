@@ -24,13 +24,11 @@ iterations), which cancels init/compile/fixed overheads exactly.
 
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, steady_min as _steady_min, time_fn
 from repro.core.greedy import greedy_init, _jitted_step
 
 
@@ -65,24 +63,6 @@ def run(csv: bool = True):
     return results
 
 
-def _steady_min(fn, per: int, repeats: int = 12, warmup: int = 3) -> float:
-    """Best-of-``repeats`` steady-state seconds per iteration.
-
-    ``fn`` performs ``per`` hot-loop iterations; it is timed CONSECUTIVELY
-    (hot thread pools, warm allocator — what a production driver loop
-    experiences) and the minimum rejects load spikes / unlucky thread
-    placement on a shared CI box.
-    """
-    for _ in range(warmup):
-        fn()
-    best = float("inf")
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        fn()
-        best = min(best, time.perf_counter() - t0)
-    return best / per
-
-
 def run_hotpath(csv: bool = True, N: int = 4096, M: int = 16384,
                 chunk: int = 8, max_k: int = 64):
     """Seed per-step driver vs chunked/fused hot loop at the production
@@ -101,7 +81,11 @@ def run_hotpath(csv: bool = True, N: int = 4096, M: int = 16384,
               chunk-boundary host work (two scalar syncs), single device,
               plane-split complex sweeps (the `xla` backend),
       fused   the same chunk through the column-sharded distributed driver
-              over all available devices (the production hot path).
+              over all available devices (the production hot path),
+      blocked the panel-blocked chunk (``repro.core.block_greedy``): p
+              pivots per Eq.-(6.3) sweep, ONE (p,N)x(N,M) panel GEMM per
+              block — the BLAS-3 path that lifts the f32 sweep off the
+              DRAM roof (time reported PER BASIS for comparability).
     """
     out = {}
     for dtype, suffix, primary in ((jnp.complex64, "", True),
@@ -151,6 +135,24 @@ def _hotpath_one_dtype(csv, N, M, chunk, max_k, dtype, suffix, primary):
 
     t_chunk1 = _steady_min(chunk_iter, chunk, repeats=(6 if cplx else 12))
 
+    # Panel-blocked chunk: BLOCK_CHUNK blocks x BLOCK_P bases per
+    # application; per-basis time is what competes with the rows above.
+    from repro.core.block_greedy import _block_chunk
+
+    BLOCK_P, BLOCK_CHUNK = 8, 2
+
+    def blocked_iter():
+        st, n_done, stop = _block_chunk(
+            S, state0, *consts, chunk=BLOCK_CHUNK, p=BLOCK_P,
+            backend="xla", check_refresh=False,
+        )
+        _ = int(n_done), int(stop)
+        return st
+
+    t_blocked = _steady_min(blocked_iter, BLOCK_P * BLOCK_CHUNK,
+                            repeats=(6 if cplx else 12))
+    piv_blocked = int(blocked_iter().pivots[0])
+
     n_dev = len(jax.devices())
     if n_dev > 1 and M % n_dev == 0:
         from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -193,11 +195,19 @@ def _hotpath_one_dtype(csv, N, M, chunk, max_k, dtype, suffix, primary):
              t_chunk1 * 1e6,
              f"dtype={dt_name};chunked(P=1,C={chunk});"
              f"speedup_vs_seed={t_seed / max(t_chunk1, 1e-12):.2f}x")
+        emit(f"fig6.1a_hotpath_blocked_N{N}_M{M}{suffix}",
+             t_blocked * 1e6,
+             f"dtype={dt_name};blocked(p={BLOCK_P},C={BLOCK_CHUNK});"
+             f"us_per_basis;one S read per {BLOCK_P} bases;"
+             f"speedup_vs_seed={t_seed / max(t_blocked, 1e-12):.2f}x;"
+             f"first_pivot_equal={piv_blocked == int(seed_iter().pivots[0])}")
     return {
         "t_seed_us": t_seed * 1e6,
         "t_fused_us": t_fused * 1e6,
         "t_chunked_1dev_us": t_chunk1 * 1e6,
+        "t_blocked_us": t_blocked * 1e6,
         "speedup": speedup,
+        "speedup_blocked": t_seed / max(t_blocked, 1e-12),
         "pivots_equal": pivots_equal,
     }
 

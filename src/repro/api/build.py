@@ -3,16 +3,27 @@
 Dispatches a :class:`~repro.api.spec.ReductionSpec` to the matching driver
 in :mod:`repro.core` and wraps the result as a
 :class:`~repro.api.artifact.ReducedBasis`.  Strategy ``"auto"`` picks the
-driver from the problem shape and a device-memory budget:
+driver from the problem shape, a device-memory budget and a DRAM-roofline
+machine model:
 
   mesh given                         -> "distributed"
-  N*M (+ greedy state) fits budget   -> "greedy"   (resident chunked)
-  otherwise                          -> "streamed" (tile-streamed)
+  fits budget, sweep roof-bound      -> "block_greedy" (BLAS-3 panel sweep)
+  fits budget otherwise              -> "greedy"   (resident chunked)
+  too big, sweep roof-bound          -> "streamed" + block_p (blocked)
+  too big otherwise                  -> "streamed" (tile-streamed)
 
-and logs the choice (logger ``repro.api``).  Every strategy goes through
-the same drivers the legacy entry points use, so results are bit-for-bit
-identical to calling those drivers directly (asserted in
-``tests/test_api.py``).
+"Roof-bound" means the Eq.-(6.3) pivot sweep's arithmetic intensity sits
+below the machine balance (peak FLOP/s over DRAM bandwidth) AND one sweep
+over S exceeds the last-level cache — i.e. every basis vector pays a full
+DRAM read of S, which block pivoting amortizes by block_p.  The model's
+knobs come from the spec (``bandwidth_gbps`` / ``peak_gflops`` /
+``cache_bytes``), the ``REPRO_DRAM_BW_GBPS`` / ``REPRO_PEAK_GFLOPS`` /
+``REPRO_LLC_BYTES`` env vars, or per-platform defaults, in that order.
+
+The choice (and the roofline numbers behind it) is logged on logger
+``repro.api``.  Every strategy goes through the same drivers the legacy
+entry points use, so results are bit-for-bit identical to calling those
+drivers directly (asserted in ``tests/test_api.py``).
 """
 
 from __future__ import annotations
@@ -70,7 +81,80 @@ def _resident_bytes(shape, dtype, max_k: Optional[int]) -> int:
     return itemsize * (N * M + mk * (N + M)) + 4 * M * itemsize
 
 
-def _auto_strategy(spec: ReductionSpec, shape, dtype) -> str:
+# --------------------------------------------------- DRAM roofline model ----
+
+_ENV_BW = "REPRO_DRAM_BW_GBPS"
+_ENV_FLOPS = "REPRO_PEAK_GFLOPS"
+_ENV_CACHE = "REPRO_LLC_BYTES"
+
+# Conservative per-platform roofs for when nothing is measured/configured:
+# (DRAM bandwidth GB/s, peak GFLOP/s, last-level cache bytes).  The point
+# is the RATIO (machine balance) and the cache cutoff, not precision —
+# override with the spec fields or REPRO_* env vars for a measured box.
+_PLATFORM_ROOFS = {
+    "cpu": (25.0, 80.0, 64 << 20),
+    "gpu": (900.0, 30_000.0, 64 << 20),
+    "tpu": (800.0, 100_000.0, 128 << 20),
+}
+
+# Panel width "auto" applies when it decides blocking pays and the spec
+# left block_p at the stepwise default: one S read per 8 bases cuts the
+# dominant DRAM term ~8x while the staleness cost stays a few extra bases
+# on fast-decaying families (tests/test_block_greedy.py).
+_AUTO_BLOCK_P = 8
+
+
+def machine_roofline(spec: Optional[ReductionSpec] = None):
+    """(bandwidth GB/s, peak GFLOP/s, cache bytes) the ``"auto"`` roofline
+    model plans against.  Precedence per knob: spec field >
+    ``REPRO_DRAM_BW_GBPS`` / ``REPRO_PEAK_GFLOPS`` / ``REPRO_LLC_BYTES``
+    env var > per-platform default."""
+    defaults = _PLATFORM_ROOFS.get(jax.default_backend(),
+                                   _PLATFORM_ROOFS["cpu"])
+
+    def pick(field, env, default, cast):
+        if field is not None:
+            return cast(field)
+        raw = os.environ.get(env)
+        return cast(float(raw)) if raw else default
+
+    return (
+        pick(getattr(spec, "bandwidth_gbps", None), _ENV_BW, defaults[0],
+             float),
+        pick(getattr(spec, "peak_gflops", None), _ENV_FLOPS, defaults[1],
+             float),
+        pick(getattr(spec, "cache_bytes", None), _ENV_CACHE, defaults[2],
+             int),
+    )
+
+
+def _sweep_roofline(shape, dtype, spec: Optional[ReductionSpec] = None):
+    """Classify the Eq.-(6.3) pivot sweep for this problem.
+
+    Returns ``(roof_bound, why)``: one sweep reads S once (``N*M*itemsize``
+    bytes) for 2 real FLOPs per element (8 for complex, on the plane-split
+    path).  The sweep is DRAM-roof-bound when that intensity sits below the
+    machine balance AND the sweep exceeds the last-level cache — exactly
+    the regime where block pivoting (one read per block_p bases) is the
+    lever.
+    """
+    bw, gflops, cache = machine_roofline(spec)
+    N, M = shape
+    dt = jnp.dtype(dtype)
+    sweep_bytes = N * M * dt.itemsize
+    flops = (8 if jnp.issubdtype(dt, jnp.complexfloating) else 2) * N * M
+    intensity = flops / sweep_bytes
+    balance = gflops / bw
+    roof_bound = intensity < balance and sweep_bytes > cache
+    why = (f"sweep ~{sweep_bytes / 1e6:.0f} MB at {intensity:.2f} FLOP/B "
+           f"vs balance {balance:.2f} FLOP/B, cache ~{cache / 1e6:.0f} MB"
+           f" -> {'roof-bound' if roof_bound else 'not roof-bound'}")
+    return roof_bound, why
+
+
+def _auto_strategy(spec: ReductionSpec, shape, dtype):
+    """Resolve ``"auto"`` to ``(strategy, block_p)`` and log the decision."""
+    block_p = spec.block_p
     if spec.mesh is not None:
         choice, why = "distributed", "a mesh was passed"
     else:
@@ -78,19 +162,25 @@ def _auto_strategy(spec: ReductionSpec, shape, dtype) -> str:
         budget = (spec.memory_budget_bytes
                   if spec.memory_budget_bytes is not None
                   else device_memory_budget())
-        if need <= budget:
-            choice = "greedy"
-            why = (f"resident footprint ~{need / 1e6:.0f} MB fits the "
-                   f"device budget ~{budget / 1e6:.0f} MB")
+        roof_bound, roof_why = _sweep_roofline(shape, dtype, spec)
+        fits = need <= budget
+        fit_why = (f"resident footprint ~{need / 1e6:.0f} MB "
+                   f"{'fits' if fits else 'exceeds'} the device budget "
+                   f"~{budget / 1e6:.0f} MB")
+        if roof_bound and block_p == 1:
+            block_p = _AUTO_BLOCK_P
+        if fits:
+            choice = "block_greedy" if roof_bound else "greedy"
         else:
             choice = "streamed"
-            why = (f"resident footprint ~{need / 1e6:.0f} MB exceeds the "
-                   f"device budget ~{budget / 1e6:.0f} MB")
+        why = f"{fit_why}; {roof_why}"
+        if roof_bound:
+            why += f"; blocked sweep, block_p={block_p}"
     logger.info(
         "auto strategy -> %r for shape %s %s (%s)",
         choice, tuple(shape), jnp.dtype(dtype).name, why,
     )
-    return choice
+    return choice, block_p
 
 
 # ------------------------------------------------------- strategy bodies ----
@@ -119,10 +209,15 @@ def _build_greedy(spec, S):
 def _build_block_greedy(spec, S):
     from repro.core.block_greedy import _rb_greedy_block_impl
 
+    # spec.chunk counts greedy ITERATIONS per device-resident chunk; the
+    # blocked driver's chunk counts BLOCKS of block_p, so divide to keep
+    # the host-sync cadence the user configured.
     return _trim_greedy(_rb_greedy_block_impl(
         S, tau=spec.tau, p=spec.block_p, max_k=spec.max_k,
         kappa=spec.kappa, max_passes=spec.max_passes, refresh=spec.refresh,
         refresh_safety=spec.refresh_safety, backend=spec.backend,
+        chunk=max(1, spec.chunk // max(spec.block_p, 1)),
+        callback=spec.callback,
     ))
 
 
@@ -138,6 +233,7 @@ def _build_distributed(spec, S):
         callback=spec.callback, refresh=spec.refresh,
         refresh_safety=spec.refresh_safety, kappa=spec.kappa,
         max_passes=spec.max_passes, chunk=spec.chunk, backend=spec.backend,
+        block_p=spec.block_p,
     ))
 
 
@@ -146,7 +242,8 @@ def _build_streamed(spec, _S_unused=None):
 
     res = rb_greedy_streamed(
         spec.source, tau=spec.tau, max_k=spec.max_k, tile_m=spec.tile_m,
-        kappa=spec.kappa, max_passes=spec.max_passes, refresh=spec.refresh,
+        block_p=spec.block_p, kappa=spec.kappa,
+        max_passes=spec.max_passes, refresh=spec.refresh,
         refresh_safety=spec.refresh_safety, backend=spec.backend,
         keep_R=spec.keep_R, checkpoint_dir=spec.checkpoint_dir,
         checkpoint_every_tiles=spec.checkpoint_every_tiles,
@@ -226,7 +323,11 @@ def build_basis(spec: ReductionSpec | None = None,
         if strategy == "auto":
             prov = as_provider(spec.source)
             shape, dtype = prov.shape, prov.dtype
-            strategy = _auto_strategy(spec, shape, dtype)
+            strategy, auto_p = _auto_strategy(spec, shape, dtype)
+            if auto_p != spec.block_p:
+                # the roofline model opted into blocking: the chosen panel
+                # width must reach the driver (and the provenance)
+                spec = dataclasses.replace(spec, block_p=auto_p)
         if strategy == "streamed":
             S = None
         else:
@@ -248,6 +349,7 @@ def build_basis(spec: ReductionSpec | None = None,
         "shape": [int(shape[0]), int(shape[1])],
         "tau": spec.tau,
         "max_k": spec.max_k,
+        "block_p": spec.block_p,
         "wall_time_s": wall,
         "spec": spec.describe(),
         "repro_version": _repro_version(),

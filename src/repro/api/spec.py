@@ -21,8 +21,10 @@ import os
 from typing import Any, Callable, Optional
 
 # Reduction strategies build_basis dispatches on.  "auto" resolves to
-# "distributed" (a mesh was given), "greedy" (the problem fits the device
-# memory budget) or "streamed" (it does not) — see repro.api.build.
+# "distributed" (a mesh was given), "greedy" / "block_greedy" (the problem
+# fits the device memory budget; blocked when the Eq.-(6.3) sweep is
+# DRAM-roof-bound) or "streamed" (it does not fit; blocked under the same
+# roofline test) — see repro.api.build.
 STRATEGIES = (
     "pod", "mgs", "greedy", "block_greedy", "streamed", "distributed",
     "auto",
@@ -53,7 +55,12 @@ class ReductionSpec:
       tile_m: streamed tile width in columns (``streamed``).
       mesh: a ``jax.sharding.Mesh`` — required by ``distributed``, and
         flips ``"auto"`` to it.
-      block_p: pivots per sweep (``block_greedy``).
+      block_p: pivots per sweep, flowing to every blocked execution path
+        (``block_greedy``; ``streamed`` and ``distributed`` run blocked
+        when > 1).  ``1`` = stepwise (exact paper semantics); > 1 amortizes
+        each read/transfer of S over block_p bases at the cost of pivot
+        staleness (a few extra bases on fast-decaying families).
+        ``"auto"`` may raise it on roof-bound shapes (logged).
       kappa, max_passes: Hoffmann iterated-GS controls (greedy family).
       refresh, refresh_safety: Eq.-(6.3) exact-refresh policy
         (greedy family; ``"never"`` is the paper-faithful mode).
@@ -67,6 +74,12 @@ class ReductionSpec:
       memory_budget_bytes: device-memory budget ``"auto"`` decides
         against (default: detected device memory, overridable with the
         ``REPRO_DEVICE_MEM_BUDGET`` env var).
+      bandwidth_gbps, peak_gflops, cache_bytes: the DRAM-roofline machine
+        model ``"auto"`` uses to detect roof-bound Eq.-(6.3) sweeps (and
+        pick a blocked strategy).  ``None`` falls back to the
+        ``REPRO_DRAM_BW_GBPS`` / ``REPRO_PEAK_GFLOPS`` /
+        ``REPRO_LLC_BYTES`` env vars, then to conservative per-platform
+        defaults (see :func:`repro.api.build.machine_roofline`).
     """
 
     source: Any = None
@@ -77,7 +90,7 @@ class ReductionSpec:
     chunk: int = 16
     tile_m: int = 8192
     mesh: Any = None
-    block_p: int = 4
+    block_p: int = 1
     kappa: float = 2.0
     max_passes: int = 3
     refresh: str = "auto"
@@ -88,6 +101,9 @@ class ReductionSpec:
     resume: bool = False
     callback: Optional[Callable] = None
     memory_budget_bytes: Optional[int] = None
+    bandwidth_gbps: Optional[float] = None
+    peak_gflops: Optional[float] = None
+    cache_bytes: Optional[int] = None
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:

@@ -40,9 +40,10 @@ Dispatch contract
 * Both implementations satisfy the same numerical contract (identical
   signatures and semantics, see ``kernels/*/ref.py``); pivot-for-pivot
   parity of whole drivers is asserted in ``tests/test_backend.py``.
-* Primitives without a fused kernel yet (the blocked ``block_sweep``) fall
-  back to the ``xla`` implementation under either backend; the dispatch
-  point still exists so a future kernel drops in without touching drivers.
+* Three primitives are dispatched: ``pivot_update`` and ``project_pass``
+  (above), plus the blocked ``block_sweep`` panel GEMM (the BLAS-3 form of
+  the Eq.-(6.3) sweep; :mod:`repro.kernels.block_sweep`) used by the
+  block-pivoted drivers — one read of S per p bases instead of per basis.
 """
 
 from __future__ import annotations
@@ -52,6 +53,8 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.block_sweep.ops import block_sweep as _pallas_block
+from repro.kernels.block_sweep.ref import block_sweep_ref as _xla_block
 from repro.kernels.greedy_update.ops import greedy_update as _pallas_pivot
 from repro.kernels.greedy_update.ref import greedy_update_ref as _xla_pivot
 from repro.kernels.imgs_project.ops import imgs_project as _pallas_project
@@ -171,6 +174,22 @@ def project_pass(
     return _xla_project(v, Q)
 
 
+def _plane_split_block_sweep(Qnew, S, acc):
+    """Complex blocked Eq.-(6.3) sweep as four real GEMMs on split re/im
+    planes (see :func:`_plane_split_pivot` for why: XLA lowers complex
+    matmuls on CPU to scalar loops an order of magnitude slower than their
+    real counterparts).  Same math as ``Qnew.conj().T @ S`` up to float
+    summation order."""
+    Qr, Qi = Qnew.real, Qnew.imag
+    Sr, Si = S.real, S.imag
+    # C = Qnew^H S = (Qr - i Qi)^T (Sr + i Si)
+    Cr = Qr.T @ Sr + Qi.T @ Si
+    Ci = Qr.T @ Si - Qi.T @ Sr
+    C = jax.lax.complex(Cr, Ci).astype(S.dtype)
+    acc_out = acc + jnp.sum(Cr * Cr + Ci * Ci, axis=0).astype(acc.dtype)
+    return C, acc_out
+
+
 def block_sweep(
     Qnew: jax.Array,
     S: jax.Array,
@@ -179,12 +198,18 @@ def block_sweep(
 ):
     """Blocked Eq.-(6.3) sweep: ``C = Qnew^H S``, ``acc += sum_i |C_i|^2``.
 
-    One read of S per p bases (the block-greedy amortization).  No fused
-    Pallas kernel exists yet, so both backends run the ``jnp`` form; the
-    dispatch point is here so a blocked kernel can be wired in without
-    touching :mod:`repro.core.block_greedy`.
+    One read of S per p bases — the block-greedy amortization that turns
+    the memory-roof-bound BLAS-2 pivot sweep into a BLAS-3 panel GEMM.
+    ``pallas`` routes to the fused panel kernel
+    (:mod:`repro.kernels.block_sweep`); ``xla`` runs the ``jnp`` GEMM form,
+    with complex inputs on split re/im planes (four real GEMMs, mirroring
+    :func:`pivot_update`); ``xla_ref`` is the literal reference
+    (:func:`repro.kernels.block_sweep.ref.block_sweep_ref`, complex GEMM
+    included).
     """
-    del backend  # single implementation for now (see docstring)
-    C = Qnew.conj().T @ S
-    acc_out = acc + jnp.sum(jnp.abs(C) ** 2, axis=0)
-    return C, acc_out
+    resolved = resolve_backend(backend)
+    if resolved == "pallas":
+        return _pallas_block(Qnew, S, acc)
+    if resolved == "xla" and jnp.iscomplexobj(S):
+        return _plane_split_block_sweep(Qnew, S, acc)
+    return _xla_block(Qnew, S, acc)

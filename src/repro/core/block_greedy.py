@@ -2,57 +2,87 @@
 
 The paper's algorithm is memory-bound at one full pass over S per basis
 vector (the Eq.-6.3 update c = q^H S dominates, arithmetic intensity ~1
-FLOP/byte).  The flagship dry-run confirms it: the greedy step's roofline
-is the HBM read of the local shard of S.
+FLOP/byte).  The committed perf trajectory confirms it: the float32
+hot-path rows in BENCH_greedy.json sit at the DRAM roof (see the README
+"Choosing a strategy" guide).
 
 Block pivoting amortizes that read: select the top-p residual columns in
 one sweep, orthogonalize them jointly (iterated GS, with a rank guard that
 rejects candidates whose residual collapses once the earlier picks in the
 block are added), then update ALL column residuals with ONE (p, N) x (N, M)
-matmul — one read of S per p bases, cutting the dominant memory term by ~p.
+panel GEMM — one read of S per p bases, cutting the dominant memory term
+by ~p.
 
 The trade-off is pivot staleness: picks 2..p within a block are made
 against residuals that ignore picks 1..i-1.  For fast-decaying (smooth /
 GW) snapshot families the effect is a few extra bases at the same tau —
-measured in tests/test_block_greedy.py and reported in EXPERIMENTS.md §Perf.
+measured in tests/test_block_greedy.py; the blocked hot-path rows in
+BENCH_greedy.json track the speedup.
 
 This is the classical blocked column-pivoted QR idea (cf. the BLAS-3
 literature the paper cites: [35] Quintana-Orti; [18] Demmel et al. CA-RRQR)
 applied to the paper's Eq.-6.3 greedy bookkeeping.
+
+Two drivers are provided, mirroring :mod:`repro.core.greedy`:
+
+- the chunked device-resident hot path (the front door's
+  ``strategy="block_greedy"``): ``chunk`` blocks run inside ONE jitted
+  ``lax.while_loop`` — top-p selection, joint IMGS with the in-block rank
+  guard, and the fused panel sweep
+  (:func:`repro.core.backend.block_sweep`) all execute in the trace, and
+  the host syncs only a stop-code scalar per chunk,
+- :func:`rb_greedy_block_stepwise` — the eager per-block driver (one
+  jitted block step + host sync per block), kept as the parity oracle.
 """
 
 from __future__ import annotations
 
 import functools
 import warnings
-from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-
-from jax.experimental.shard_map import shard_map
 
 from repro.core import backend as _backend
-from repro.core.greedy import GreedyResult, GreedyState, greedy_init, \
-    imgs_orthogonalize
+from repro.core.greedy import (
+    GreedyResult,
+    GreedyState,
+    STOP_NONE,
+    STOP_RANK,
+    STOP_REFRESH,
+    STOP_TAU,
+    greedy_init,
+    greedy_refresh,
+    imgs_orthogonalize,
+)
 
 
 def block_greedy_step(S, state: GreedyState, p: int, kappa: float = 2.0,
                       max_passes: int = 3,
-                      backend: str | None = None) -> GreedyState:
+                      backend: str | None = None,
+                      scale=None) -> GreedyState:
     """Add up to p bases with a single Eq.-6.3 sweep over S.
 
     Per-candidate orthogonalization and the blocked sweep route through
-    :mod:`repro.core.backend` (the sweep's fused kernel slot is
-    :func:`repro.core.backend.block_sweep`).
+    :mod:`repro.core.backend` (the sweep's fused kernel is
+    :func:`repro.core.backend.block_sweep`).  This is the eager per-block
+    step used by :func:`rb_greedy_block_stepwise`; the chunked driver runs
+    the same math inside a ``lax.while_loop`` (see
+    :func:`_block_chunk_impl`).
+
+    ``scale`` is the rank guard's reference column scale.  The greedy
+    family fixes it at init (``sqrt(max |s_i|^2)``) so the guard measures
+    candidates against the ORIGINAL data scale even after an Eq.-(6.3)
+    refresh shrinks ``norms_sq``; ``None`` falls back to the in-state
+    value (pre-PR-4 behavior, correct when no refresh has happened).
     """
     res_sq = jnp.maximum(state.norms_sq - state.acc, 0.0)
     top_vals, top_idx = jax.lax.top_k(res_sq, p)
     err = jnp.sqrt(top_vals[0])
 
     eps = jnp.finfo(state.norms_sq.dtype).eps
-    scale = jnp.sqrt(jnp.max(state.norms_sq))
+    if scale is None:
+        scale = jnp.sqrt(jnp.max(state.norms_sq))
 
     Q = state.Q
     k = state.k
@@ -93,8 +123,10 @@ def block_greedy_step(S, state: GreedyState, p: int, kappa: float = 2.0,
     jax.jit, static_argnames=("p", "kappa", "max_passes", "backend")
 )
 def _jitted_block_step(S, state, p: int, kappa: float = 2.0,
-                       max_passes: int = 3, backend: str | None = None):
-    return block_greedy_step(S, state, p, kappa, max_passes, backend=backend)
+                       max_passes: int = 3, backend: str | None = None,
+                       scale=None):
+    return block_greedy_step(S, state, p, kappa, max_passes,
+                             backend=backend, scale=scale)
 
 
 def rb_greedy_block(
@@ -113,8 +145,8 @@ def rb_greedy_block(
 
     Block pivoting is an execution optimization of the same greedy
     reduction — as a *public* entry point it is redundant with the front
-    door.  The implementation is unchanged; this wrapper delegates to it
-    verbatim.
+    door.  This wrapper delegates to the same chunked driver the front
+    door uses.
     """
     warnings.warn(
         "rb_greedy_block is deprecated: call repro.api.build_basis("
@@ -129,6 +161,175 @@ def rb_greedy_block(
     )
 
 
+# ------------------------------------------------ chunked blocked driver ----
+
+
+def _block_chunk_impl(
+    S,
+    state,
+    tau,
+    scale,
+    ref_sq,
+    refresh_safety,
+    chunk: int,
+    p: int,
+    kappa: float = 2.0,
+    max_passes: int = 3,
+    backend: str | None = None,
+    check_refresh: bool = True,
+):
+    """Run up to ``chunk`` blocked greedy iterations device-resident.
+
+    Each ``lax.while_loop`` round is one block: top-p residual selection,
+    joint IMGS of the p pivot columns against Q *including* the earlier
+    in-block picks (fixed-slot writes at ``k..k+p-1``), the in-block rank
+    guard (a candidate whose orthogonalization residual is rounding noise
+    becomes a zero "hole" column), and ONE fused panel sweep over S
+    (:func:`repro.core.backend.block_sweep`).  ``state.k`` counts occupied
+    SLOTS (holes included); the driver compacts at the end.
+
+    Stops on the stepwise drivers' host events, reported as stop codes so
+    the host syncs one scalar per chunk:
+
+      STOP_TAU      the max residual fell below tau BEFORE a block — the
+                    block is not added (no trailing drop needed),
+      STOP_RANK     every candidate in a block was rank-rejected,
+      STOP_REFRESH  the post-block residual neared the Eq.-(6.3)
+                    cancellation floor.
+    """
+    max_slots = state.Q.shape[1]
+    eps = jnp.finfo(state.norms_sq.dtype).eps
+    rdt = state.norms_sq.dtype
+
+    def cond(carry):
+        st, n, stop = carry
+        return (stop == STOP_NONE) & (n < chunk) & (st.k + p <= max_slots)
+
+    def add_block(st, top_vals, top_idx):
+        slots = st.k
+        Q = st.Q
+        qs, oks, rnorms, npasses = [], [], [], []
+        for i in range(p):  # p is small and static
+            v = jnp.take(S, top_idx[i], axis=1)
+            q, _, rnorm, n_pass = imgs_orthogonalize(
+                v, Q, kappa, max_passes, backend=backend
+            )
+            ok = rnorm > 50.0 * eps * scale
+            q = jnp.where(ok, q, jnp.zeros_like(q))
+            Q = Q.at[:, slots + i].set(q)
+            qs.append(q)
+            oks.append(ok)
+            rnorms.append(rnorm)
+            npasses.append(n_pass)
+        Qnew = jnp.stack(qs, axis=1)          # (N, p), rejected cols zero
+        C, acc = _backend.block_sweep(Qnew, S, st.acc, backend=backend)
+        oks_arr = jnp.asarray(oks)
+        st = st._replace(
+            Q=Q,
+            R=jax.lax.dynamic_update_slice_in_dim(st.R, C, slots, axis=0),
+            acc=acc,
+            pivots=jax.lax.dynamic_update_slice_in_dim(
+                st.pivots,
+                jnp.where(oks_arr, top_idx, -1).astype(jnp.int32),
+                slots, axis=0,
+            ),
+            errs=jax.lax.dynamic_update_slice_in_dim(
+                st.errs,
+                jnp.sqrt(jnp.maximum(top_vals, 0.0)).astype(rdt),
+                slots, axis=0,
+            ),
+            rnorms=jax.lax.dynamic_update_slice_in_dim(
+                st.rnorms, jnp.asarray(rnorms).astype(rdt), slots, axis=0,
+            ),
+            n_passes=jax.lax.dynamic_update_slice_in_dim(
+                st.n_passes, jnp.asarray(npasses).astype(jnp.int32),
+                slots, axis=0,
+            ),
+            k=slots + p,
+        )
+        n_ok = jnp.sum(oks_arr.astype(jnp.int32))
+        res_after = jnp.maximum(jnp.max(st.norms_sq - st.acc), 0.0)
+        refresh_hit = check_refresh & (res_after
+                                       < refresh_safety * eps * ref_sq)
+        stop = jnp.where(
+            n_ok == 0, STOP_RANK,
+            jnp.where(refresh_hit, STOP_REFRESH, STOP_NONE),
+        ).astype(jnp.int32)
+        return st, stop
+
+    def body(carry):
+        st, n, _ = carry
+        res_sq = jnp.maximum(st.norms_sq - st.acc, 0.0)
+        top_vals, top_idx = jax.lax.top_k(res_sq, p)
+        err = jnp.sqrt(top_vals[0])
+        st, stop = jax.lax.cond(
+            err >= tau,
+            lambda s: add_block(s, top_vals, top_idx),
+            lambda s: (s, jnp.asarray(STOP_TAU, jnp.int32)),
+            st,
+        )
+        return (st, n + 1, stop)
+
+    state, n_done, stop = jax.lax.while_loop(
+        cond, body,
+        (state, jnp.asarray(0, jnp.int32), jnp.asarray(STOP_NONE, jnp.int32)),
+    )
+    return state, n_done, stop
+
+
+_BLOCK_CHUNK_STATICS = (
+    "chunk", "p", "kappa", "max_passes", "backend", "check_refresh",
+)
+
+# Non-donating variant: supports repeated application to one state
+# (benchmarks time the hot loop this way).
+_block_chunk = jax.jit(_block_chunk_impl, static_argnames=_BLOCK_CHUNK_STATICS)
+
+# The driver's variant donates the state pytree so Q/R/acc buffers are
+# reused across chunks instead of copied (see repro.core.greedy).
+_block_chunk_donated = jax.jit(
+    _block_chunk_impl, static_argnames=_BLOCK_CHUNK_STATICS,
+    donate_argnums=(1,),
+)
+
+
+def _compact_result(state, max_k: int) -> GreedyResult:
+    """Drop hole columns (rejected in-block candidates) from the slot
+    buffers: keep unit columns of Q and their matching R rows / pivots /
+    errs / diagnostics, capped at ``max_k`` accepted bases (the slot
+    buffers carry +p overrun headroom, and the final block may push the
+    accepted count past the cap — the basis is nested, so truncation is
+    exact).
+
+    Works on any state with Q/R/pivots/errs fields (GreedyState and the
+    distributed DistGreedyState both qualify); per-basis diagnostics are
+    compacted when present.
+    """
+    Qh = jnp.asarray(state.Q)
+    norms = jnp.linalg.norm(Qh, axis=0)
+    keep = jnp.where(norms > 0.5)[0][:max_k]  # unit columns, capped
+    k = keep.shape[0]
+    Qc = jnp.zeros_like(state.Q).at[:, :k].set(Qh[:, keep])
+    R = jnp.asarray(state.R)
+    Rc = jnp.zeros_like(R).at[:k, :].set(R[keep, :])
+    piv = jnp.zeros_like(state.pivots).at[:k].set(state.pivots[keep])
+    errs = jnp.zeros_like(state.errs).at[:k].set(state.errs[keep])
+    rnorms_src = getattr(state, "rnorms", None)
+    if rnorms_src is not None:
+        rnorms = jnp.zeros_like(rnorms_src).at[:k].set(rnorms_src[keep])
+        n_passes = jnp.zeros_like(state.n_passes).at[:k].set(
+            state.n_passes[keep])
+    else:
+        rnorms = jnp.zeros_like(errs)
+        n_passes = jnp.zeros_like(piv)
+    return GreedyResult(
+        Q=Qc, R=Rc, pivots=piv, errs=errs,
+        k=jnp.asarray(k, jnp.int32),
+        n_ortho_passes=n_passes,
+        rnorms=rnorms,
+    )
+
+
 def _rb_greedy_block_impl(
     S,
     tau: float,
@@ -139,8 +340,92 @@ def _rb_greedy_block_impl(
     refresh: str = "auto",
     refresh_safety: float = 100.0,
     backend: str | None = None,
+    chunk: int = 4,
+    callback=None,
 ) -> GreedyResult:
-    """Block-greedy driver (mirrors rb_greedy semantics at block granularity).
+    """Chunked device-resident blocked driver (the front door's
+    ``strategy="block_greedy"``).
+
+    ``chunk`` BLOCKS (i.e. up to ``chunk * p`` bases) run inside one jitted
+    ``lax.while_loop``; the host syncs only the (n_done, stop) scalars at
+    chunk boundaries.  Selects the same pivots as
+    :func:`rb_greedy_block_stepwise` (asserted in
+    tests/test_block_greedy.py) at ~chunk x fewer dispatches.
+
+    ``callback(state)`` fires once per chunk (the slot arrays carry the
+    per-slot history up to ``state.k``, holes included); with a callback
+    set the chunk does not donate the state buffers, mirroring
+    :func:`repro.core.greedy.rb_greedy`.
+
+    Note: rejected in-block candidates leave zero "hole" columns inside the
+    Q slot buffer during the build; the driver compacts them away at the
+    end and caps the result at ``max_k``, so the returned ``k`` counts
+    accepted bases only and never exceeds ``max_k``.
+    """
+    from repro.data.providers import materialize_source
+
+    S = materialize_source(S)
+    N, M = S.shape
+    if p < 1:
+        raise ValueError(f"block_p must be >= 1, got {p}")
+    p = min(p, min(N, M))
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    if max_k is None:
+        max_k = min(N, M)
+    max_k = min(max_k, N, M)  # the accepted-basis cap
+    max_slots = min(max_k + p, min(N, M) + p)  # + hole headroom
+    # resolve pre-jit so the cache keys on the concrete backend name
+    backend = _backend.resolve_backend(backend)
+    state = greedy_init(S, max_slots)
+    rdt = state.norms_sq.dtype
+    ref_sq = float(jnp.max(state.norms_sq))
+    scale = ref_sq ** 0.5  # fixed global column scale for the rank guard
+    tau_d = jnp.asarray(tau, rdt)
+    scale_d = jnp.asarray(scale, rdt)
+    safety_d = jnp.asarray(refresh_safety, rdt)
+    ref_sq_d = jnp.asarray(ref_sq, rdt)
+    # a callback may retain states (checkpointing); donation would
+    # invalidate those retained buffers on accelerators
+    chunk_fn = _block_chunk if callback is not None else \
+        _block_chunk_donated
+    while int(state.k) + p <= max_slots:
+        state, n_done, stop = chunk_fn(
+            S, state, tau_d, scale_d, ref_sq_d, safety_d,
+            chunk=chunk, p=p, kappa=kappa, max_passes=max_passes,
+            backend=backend, check_refresh=(refresh == "auto"),
+        )
+        if callback is not None:
+            callback(state)
+        stop = int(stop)
+        if stop == STOP_TAU or stop == STOP_RANK:
+            break
+        if stop == STOP_REFRESH:
+            state = greedy_refresh(S, state)
+            ref_sq = max(float(jnp.max(state.norms_sq)), 1e-300)
+            ref_sq_d = jnp.asarray(ref_sq, rdt)
+            if ref_sq ** 0.5 < tau:
+                break
+    return _compact_result(state, max_k)
+
+
+# --------------------------------------------------- stepwise block oracle --
+
+
+def rb_greedy_block_stepwise(
+    S,
+    tau: float,
+    p: int = 4,
+    max_k: int | None = None,
+    kappa: float = 2.0,
+    max_passes: int = 3,
+    refresh: str = "auto",
+    refresh_safety: float = 100.0,
+    backend: str | None = None,
+) -> GreedyResult:
+    """The eager per-block driver: one jitted block step + host syncs per
+    block.  Kept verbatim as the parity oracle for the chunked driver
+    (mirroring :func:`repro.core.greedy.rb_greedy_stepwise`).
 
     Note: rejected in-block candidates leave zero columns inside the Q
     buffer; ``k`` counts accepted bases but their slots are the first
@@ -152,18 +437,23 @@ def _rb_greedy_block_impl(
     N, M = S.shape
     if max_k is None:
         max_k = min(N, M)
-    max_k = min(max_k + p, min(N, M) + p)
+    max_k_req = min(max_k, N, M)  # the accepted-basis cap
+    max_k = min(max_k + p, min(N, M) + p)  # slot buffer incl. hole headroom
     # resolve pre-jit so the cache keys on the concrete backend name
     backend = _backend.resolve_backend(backend)
     state = greedy_init(S, max_k)
     eps = float(jnp.finfo(state.norms_sq.dtype).eps)
     ref_sq = float(jnp.max(state.norms_sq))
+    # fixed global column scale for the rank guard (the greedy-family
+    # convention; see block_greedy_step's docstring)
+    scale_d = jnp.asarray(ref_sq ** 0.5, state.norms_sq.dtype)
     slots = 0  # occupied slots including holes
     while slots + p <= max_k:
         prev_k = int(state.k)
         state = state._replace(k=jnp.asarray(slots, jnp.int32))
         state = _jitted_block_step(S, state, p=p, kappa=kappa,
-                                   max_passes=max_passes, backend=backend)
+                                   max_passes=max_passes, backend=backend,
+                                   scale=scale_d)
         n_acc = int(state.k) - slots
         slots += p
         err = float(state.errs[slots - p])  # max residual before this block
@@ -173,84 +463,16 @@ def _rb_greedy_block_impl(
         res_now = jnp.max(jnp.maximum(state.norms_sq - state.acc, 0.0))
         err_now = float(jnp.sqrt(res_now))
         if refresh == "auto" and err_now ** 2 < refresh_safety * eps * ref_sq:
-            from repro.core.greedy import greedy_refresh
             state = greedy_refresh(S, state)
             ref_sq = max(float(jnp.max(state.norms_sq)), 1e-300)
+            # the post-refresh EXACT residual decides convergence (same
+            # check as rb_greedy_stepwise; the pre-PR-4 block driver
+            # missed it and appended one below-tau block after a refresh)
+            if ref_sq ** 0.5 < tau:
+                break
         if err_now < tau or n_acc == 0:
             break
 
-    # compact: drop zero columns from Q / matching rows of R
-    Qh = jnp.asarray(state.Q)
-    norms = jnp.linalg.norm(Qh, axis=0)
-    keep = jnp.where(norms > 0.5)[0]  # unit columns
-    k = keep.shape[0]
-    Qc = jnp.zeros_like(state.Q).at[:, :k].set(Qh[:, keep])
-    Rc = jnp.zeros_like(state.R).at[:k, :].set(state.R[keep, :])
-    piv = jnp.zeros_like(state.pivots).at[:k].set(state.pivots[keep])
-    return GreedyResult(
-        Q=Qc, R=Rc, pivots=piv, errs=state.errs,
-        k=jnp.asarray(k, jnp.int32),
-        n_ortho_passes=jnp.zeros_like(state.pivots),
-        rnorms=jnp.zeros_like(state.errs),
-    )
-
-
-# --------------------------------------------------------------- distributed
-def make_dist_block_greedy_step(mesh: Mesh, p: int, kappa: float = 2.0,
-                                max_passes: int = 3,
-                                backend: str | None = None):
-    """Distributed block step: one S sweep per p bases (flagship roofline)."""
-    from repro.core.distributed import DistGreedyState, state_specs, \
-        _axis_index
-
-    backend = _backend.resolve_backend(backend)  # pre-jit, concrete name
-
-    axes = tuple(mesh.axis_names)
-    specs = state_specs(mesh)
-    s_spec = P(None, axes)
-
-    def local_step(S_loc, state):
-        res_sq = jnp.maximum(state.norms_sq - state.acc, 0.0)
-        l_vals, l_idx = jax.lax.top_k(res_sq, p)     # local top-p
-        m_loc = res_sq.shape[0]
-        rank = _axis_index(axes)
-        g_idx = rank * m_loc + l_idx
-
-        vals = jax.lax.all_gather(l_vals, axes).reshape(-1)   # (P*p,)
-        idxs = jax.lax.all_gather(g_idx, axes).reshape(-1)
-        top_vals, top_pos = jax.lax.top_k(vals, p)            # global top-p
-        top_idx = idxs[top_pos]
-        err = jnp.sqrt(top_vals[0])
-
-        # fetch the p pivot columns: owner-masked psum of a (N, p) block
-        owned = top_idx // m_loc == rank
-        local_cols = jnp.where(
-            owned[None, :],
-            jnp.take(S_loc, top_idx % m_loc, axis=1),
-            jnp.zeros((S_loc.shape[0], p), S_loc.dtype),
-        )
-        V = jax.lax.psum(local_cols, axes)                    # (N, p)
-
-        Q = state.Q
-        k = state.k
-        new_qs = []
-        for i in range(p):
-            q, _, rnorm, _ = imgs_orthogonalize(V[:, i], Q, kappa,
-                                                max_passes, backend=backend)
-            Q = Q.at[:, k + i].set(q)
-            new_qs.append(q)
-        Qnew = jnp.stack(new_qs, axis=1)
-        # ONE pass over the local shard, through the dispatch layer
-        C, acc = _backend.block_sweep(Qnew, S_loc, state.acc,
-                                      backend=backend)
-        R = jax.lax.dynamic_update_slice_in_dim(state.R, C, k, axis=0)
-        pivots = jax.lax.dynamic_update_slice_in_dim(
-            state.pivots, top_idx.astype(jnp.int32), k, axis=0)
-        errs = jax.lax.dynamic_update_slice_in_dim(
-            state.errs, jnp.sqrt(jnp.maximum(top_vals, 0.0)), k, axis=0)
-        return state._replace(Q=Q, R=R, acc=acc, pivots=pivots, errs=errs,
-                              k=k + p)
-
-    sharded = shard_map(local_step, mesh=mesh, in_specs=(s_spec, specs),
-                        out_specs=specs, check_rep=False)
-    return jax.jit(sharded, donate_argnums=(1,))
+    # compact: drop zero columns from Q / matching rows of R, cap at the
+    # requested max_k (shared with the chunked driver)
+    return _compact_result(state, max_k_req)

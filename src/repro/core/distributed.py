@@ -35,7 +35,7 @@ gone.  ``chunk=1`` restores the seed cadence exactly.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional, Sequence
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -282,6 +282,153 @@ def _make_dist_greedy_chunk(mesh, chunk, kappa, max_passes, backend,
     return jax.jit(sharded, donate_argnums=(1,) if donate else ())
 
 
+# ------------------------------------------------- blocked (BLAS-3) sweep --
+
+
+def _make_local_block_chunk(axes, chunk, p, kappa, max_passes, backend,
+                            check_refresh):
+    """Per-device body of up to ``chunk`` BLOCKED greedy iterations (SPMD).
+
+    One iteration selects the global top-p residual columns (local top-p +
+    all-gather of the (value, column) pairs — the paper's
+    ``MPI_Allreduce(MAXLOC)`` generalized to p winners), fetches the p
+    pivot columns with one owner-masked psum, orthogonalizes them jointly
+    (in-block rank guard; rejected candidates leave zero "hole" columns),
+    and updates the LOCAL shard's residuals with ONE fused panel sweep
+    (:func:`repro.core.backend.block_sweep`) — one read of the shard per p
+    bases.
+
+    The tau gate is mask-based rather than branch-based so no collective
+    sits inside a ``lax.cond``: a converged iteration computes a zero
+    panel (exact no-ops everywhere) and reports STOP_TAU without
+    advancing ``k``.
+    """
+
+    def local_chunk(S_loc, state, tau, scale, ref_sq, refresh_safety):
+        max_slots = state.Q.shape[1]
+        eps = jnp.finfo(state.norms_sq.dtype).eps
+        rdt = state.norms_sq.dtype
+
+        def body(carry):
+            st, n, _ = carry
+            # ---- global top-p selection ----
+            res_sq = jnp.maximum(st.norms_sq - st.acc, 0.0)
+            l_vals, l_idx = jax.lax.top_k(res_sq, p)     # local top-p
+            m_loc = res_sq.shape[0]
+            rank = _axis_index(axes)
+            g_idx = rank * m_loc + l_idx
+            vals = jax.lax.all_gather(l_vals, axes).reshape(-1)  # (P*p,)
+            idxs = jax.lax.all_gather(g_idx, axes).reshape(-1)
+            top_vals, top_pos = jax.lax.top_k(vals, p)           # global
+            top_idx = idxs[top_pos]
+            err = jnp.sqrt(top_vals[0])
+            go = err >= tau
+
+            # ---- fetch the p pivot columns: one (N, p) masked psum ----
+            owned = (top_idx // m_loc == rank) & go
+            local_cols = jnp.where(
+                owned[None, :],
+                jnp.take(S_loc, top_idx % m_loc, axis=1),
+                jnp.zeros((S_loc.shape[0], p), S_loc.dtype),
+            )
+            V = jax.lax.psum(local_cols, axes)           # (N, p) replicated
+
+            # ---- joint IMGS with the in-block rank guard ----
+            slots = st.k
+            Q = st.Q
+            qs, oks = [], []
+            for i in range(p):
+                q, _, rnorm, _ = imgs_orthogonalize(
+                    V[:, i], Q, kappa=kappa, max_passes=max_passes,
+                    backend=backend,
+                )
+                ok = go & (rnorm > 50.0 * eps * scale)
+                q = jnp.where(ok, q, jnp.zeros_like(q))
+                Q = Q.at[:, slots + i].set(q)
+                qs.append(q)
+                oks.append(ok)
+            Qnew = jnp.stack(qs, axis=1)   # (N, p), rejected cols zero
+            # ---- ONE fused pass over the local shard ----
+            C, acc = _backend.block_sweep(Qnew, S_loc, st.acc,
+                                          backend=backend)
+            oks_arr = jnp.asarray(oks)
+            st = st._replace(
+                Q=Q,
+                R=jax.lax.dynamic_update_slice_in_dim(st.R, C, slots,
+                                                      axis=0),
+                acc=acc,
+                pivots=jax.lax.dynamic_update_slice_in_dim(
+                    st.pivots,
+                    jnp.where(oks_arr, top_idx, -1).astype(jnp.int32),
+                    slots, axis=0,
+                ),
+                errs=jax.lax.dynamic_update_slice_in_dim(
+                    st.errs,
+                    jnp.sqrt(jnp.maximum(top_vals, 0.0)).astype(rdt),
+                    slots, axis=0,
+                ),
+                k=jnp.where(go, slots + p, slots),
+            )
+            n_ok = jnp.sum(oks_arr.astype(jnp.int32))
+            res_loc = jnp.maximum(jnp.max(st.norms_sq - st.acc), 0.0)
+            res_after = jax.lax.pmax(res_loc, axes)
+            refresh_hit = check_refresh & (
+                res_after < refresh_safety * eps * ref_sq
+            )
+            stop = jnp.where(
+                ~go, STOP_TAU,
+                jnp.where(n_ok == 0, STOP_RANK,
+                          jnp.where(refresh_hit, STOP_REFRESH, STOP_NONE)),
+            ).astype(jnp.int32)
+            return (st, n + 1, stop)
+
+        def cond(carry):
+            st, n, stop = carry
+            return (stop == STOP_NONE) & (n < chunk) & (st.k + p <= max_slots)
+
+        state, n_done, stop = jax.lax.while_loop(
+            cond, body,
+            (state, jnp.asarray(0, jnp.int32),
+             jnp.asarray(STOP_NONE, jnp.int32)),
+        )
+        return state, n_done, stop
+
+    return local_chunk
+
+
+def make_dist_block_greedy_chunk(
+    mesh: Mesh, chunk: int, p: int, kappa: float = 2.0, max_passes: int = 3,
+    backend: str | None = None, check_refresh: bool = True,
+    donate: bool = True,
+):
+    """Build the jitted device-resident BLOCKED chunk for a mesh: up to
+    ``chunk`` blocked SPMD iterations (collectives included) per host
+    round-trip, p bases per shard read."""
+    return _make_dist_block_greedy_chunk(
+        mesh, chunk, p, kappa, max_passes,
+        _backend.resolve_backend(backend), check_refresh, donate,
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _make_dist_block_greedy_chunk(mesh, chunk, p, kappa, max_passes,
+                                  backend, check_refresh, donate):
+    axes = tuple(mesh.axis_names)
+    specs = state_specs(mesh)
+    s_spec = P(None, axes)
+
+    sharded = shard_map(
+        _make_local_block_chunk(axes, chunk, p, kappa, max_passes, backend,
+                                check_refresh),
+        mesh=mesh,
+        in_specs=(s_spec, specs, P(), P(), P(), P()),
+        out_specs=(specs, P(), P()),
+        check_rep=False,
+    )
+    # donate=False supports repeated application to one state (benchmarks)
+    return jax.jit(sharded, donate_argnums=(1,) if donate else ())
+
+
 @functools.lru_cache(maxsize=None)
 def make_dist_refresh(mesh: Mesh):
     """Exact residual recomputation (deep-tolerance mode), column-local."""
@@ -314,6 +461,7 @@ def distributed_greedy(
     max_passes: int = 3,
     chunk: int = 16,
     backend: str | None = None,
+    block_p: int = 1,
 ) -> GreedyResult:
     """Driver mirroring :func:`repro.core.greedy.rb_greedy` on a mesh.
 
@@ -328,6 +476,15 @@ def distributed_greedy(
     stay valid); see :func:`repro.core.greedy.rb_greedy` for that and for
     the on-device stop-threshold dtype caveat.
 
+    ``block_p > 1`` runs the BLOCKED sweep (the distributed sibling of
+    :mod:`repro.core.block_greedy`): global top-p pivot selection per
+    iteration (the paper's ``MPI_Allreduce(MAXLOC)`` generalized to p
+    winners) and one fused panel GEMM per shard read — each device reads
+    its S shard once per p bases instead of once per basis.  The usual
+    blocked trade-off applies (pivot staleness: a few extra bases on
+    fast-decaying families; rank-rejected in-block candidates are
+    compacted away, so ``k`` counts accepted bases).
+
     ``S`` may be anything :func:`repro.data.providers.as_provider`
     accepts; non-array sources are materialized before placement.
     """
@@ -339,6 +496,14 @@ def distributed_greedy(
         S = jax.device_put(S, s_sharding)
     if chunk < 1:
         raise ValueError(f"chunk must be >= 1, got {chunk}")
+    if block_p < 1:
+        raise ValueError(f"block_p must be >= 1, got {block_p}")
+    if block_p > 1:
+        return _distributed_block_greedy(
+            S, tau, max_k, mesh, block_p, callback=callback,
+            refresh=refresh, refresh_safety=refresh_safety, kappa=kappa,
+            max_passes=max_passes, chunk=chunk, backend=backend,
+        )
 
     chunk_fn = make_dist_greedy_chunk(
         mesh, chunk, kappa, max_passes, backend,
@@ -390,3 +555,68 @@ def distributed_greedy(
         k=state.k, n_ortho_passes=jnp.zeros_like(state.pivots),
         rnorms=jnp.zeros_like(state.errs),
     )
+
+
+def _distributed_block_greedy(
+    S,
+    tau: float,
+    max_k: int,
+    mesh: Mesh,
+    p: int,
+    callback=None,
+    refresh: str = "auto",
+    refresh_safety: float = 100.0,
+    kappa: float = 2.0,
+    max_passes: int = 3,
+    chunk: int = 4,
+    backend: str | None = None,
+) -> GreedyResult:
+    """Blocked distributed driver body (see :func:`distributed_greedy`,
+    ``block_p > 1``).  ``chunk`` counts BLOCKS per host round-trip;
+    ``callback(state)`` fires once per chunk (non-donating, as in the
+    stepwise driver)."""
+    N, M = S.shape
+    n_dev = int(mesh.devices.size)
+    m_loc = M // n_dev
+    p = min(p, min(N, M))
+    if p > m_loc:
+        raise ValueError(
+            f"block_p={p} exceeds the per-device column count {m_loc} "
+            f"(M={M} over {n_dev} devices) — the local top-p selection "
+            f"needs p candidates per shard"
+        )
+    max_k = min(max_k, N, M)  # the accepted-basis cap
+    max_slots = min(max_k + p, min(N, M) + p)  # + hole headroom
+    chunk_fn = make_dist_block_greedy_chunk(
+        mesh, chunk, p, kappa, max_passes, backend,
+        check_refresh=(refresh == "auto"), donate=(callback is None),
+    )
+    refresh_fn = make_dist_refresh(mesh)
+    state = dist_greedy_init(S, max_slots, mesh)
+
+    rdt = state.norms_sq.dtype
+    ref_sq = float(jnp.max(state.norms_sq))
+    scale = ref_sq ** 0.5  # fixed global column scale for the rank guard
+    tau_d = jnp.asarray(tau, rdt)
+    scale_d = jnp.asarray(scale, rdt)
+    safety_d = jnp.asarray(refresh_safety, rdt)
+    ref_sq_d = jnp.asarray(ref_sq, rdt)
+    while int(state.k) + p <= max_slots:
+        state, n_done, stop = chunk_fn(
+            S, state, tau_d, scale_d, ref_sq_d, safety_d,
+        )
+        if callback is not None:
+            callback(state)
+        stop = int(stop)
+        if stop == STOP_TAU or stop == STOP_RANK:
+            break
+        if stop == STOP_REFRESH:
+            state = refresh_fn(S, state)
+            ref_sq = max(float(jnp.max(state.norms_sq)), 1e-300)
+            ref_sq_d = jnp.asarray(ref_sq, rdt)
+            if ref_sq ** 0.5 < tau:
+                break
+    # compact holes + cap at max_k: shared with the resident blocked driver
+    from repro.core.block_greedy import _compact_result
+
+    return _compact_result(state, max_k)

@@ -17,22 +17,34 @@ through the SAME fused backend primitives as the resident drivers:
                 device-resident basis Q — bit-identical to the in-memory
                 drivers because Q and the pivot column are the same arrays.
 
+``block_p > 1`` enables the BLOCKED mode (the streamed sibling of
+:mod:`repro.core.block_greedy`): each sweep carries a PANEL of p pending
+basis vectors through :func:`repro.core.backend.block_sweep` and folds a
+top-p candidate list across tiles instead of a single max-loc, so every
+host->device tile transfer is amortized over p bases.  The stream is
+transfer-bound (BENCH_streaming.json), which makes this the single biggest
+lever on streamed-build overhead; the cost is the same pivot staleness as
+the resident blocked driver (picks 2..p of a block are selected against
+residuals that ignore picks 1..i-1 — a few extra bases on fast-decaying
+families, rank-guarded "holes" compacted away at the end).
+
 Tile traffic is double-buffered: while one tile's pass runs on device, the
 next tile's host read + ``jax.device_put`` is issued (jax dispatch is
 async), hiding the host<->device copies that otherwise dominate streamed
-builds.  Only Q (N x max_k) and two tiles (N x tile_m each, current +
-prefetched) are ever device-resident;
+builds.  Only Q (N x max_k), the p pending panel columns and two tiles
+(N x tile_m each, current + prefetched) are ever device-resident;
 the Eq.-(6.3) residual caches (``norms_sq``, ``acc``: M reals each) and
 the optional R factor live on host.  Peak device memory is
-O(N * (max_k + 2 * tile_m)) — independent of M.
+O(N * (max_k + block_p + 2 * tile_m)) — independent of M.
 
 Stop semantics (tau drop, rank guard, Eq.-(6.3) refresh) replicate
-:func:`repro.core.greedy.rb_greedy_stepwise` exactly; the parity suite
+:func:`repro.core.greedy.rb_greedy_stepwise` exactly at ``block_p=1`` and
+the chunked blocked driver's semantics at ``block_p>1``; the parity suite
 (tests/test_streaming.py) asserts pivot-for-pivot agreement across tile
 sizes, dtypes and providers.
 
 Mid-build checkpointing persists the full streaming state — tile cursor,
-pending pivot, residual caches — through :mod:`repro.checkpoint.io`; a
+pending panel, residual caches — through :mod:`repro.checkpoint.io`; a
 killed build resumes from the last completed tile, not the last basis.
 """
 
@@ -51,7 +63,10 @@ from repro.core import backend as _backend
 from repro.core.greedy import imgs_orthogonalize
 from repro.data.providers import SnapshotProvider, as_provider
 
-_STATE_VERSION = 1
+# v2: blocked streaming — the scalar pending/max-loc fields became
+# width-block_p arrays and block_p joined the tiling invariants.  v1
+# (stepwise) checkpoints are lifted on load (see _StreamState._lift_v1).
+_STATE_VERSION = 2
 
 
 class StreamedGreedyResult(NamedTuple):
@@ -70,6 +85,7 @@ class StreamedGreedyResult(NamedTuple):
       n_ortho_passes, rnorms: per-basis iterated-GS diagnostics, as in the
               in-memory drivers.
       tile_m: tile width the build used; n_tiles: ceil(M / tile_m).
+      block_p: pivots per sweep the build used (1 = stepwise streaming).
     """
 
     Q: jax.Array
@@ -81,30 +97,51 @@ class StreamedGreedyResult(NamedTuple):
     rnorms: np.ndarray
     tile_m: int
     n_tiles: int
+    block_p: int = 1
 
 
-@jax.jit
-def _tile_init(T: jax.Array):
-    """Column norms^2 of one tile + the tile's (max, argmax) — the init
-    pass's contribution to the first pivot's max-loc reduction."""
+@functools.partial(jax.jit, static_argnames=("kt",))
+def _tile_init(T: jax.Array, kt: int = 1):
+    """Column norms^2 of one tile + the tile's top-kt (values, cols) — the
+    init pass's contribution to the first block's top-p fold."""
     n = jnp.sum(jnp.abs(T) ** 2, axis=0)
-    return n, jnp.max(n), jnp.argmax(n).astype(jnp.int32)
+    tv, ti = jax.lax.top_k(n, kt)
+    return n, tv, ti.astype(jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("backend",))
 def _tile_sweep(q, T, acc_t, norms_t, backend: str):
-    """One tile's Eq.-(6.3) sweep through the fused backend primitive."""
+    """One tile's Eq.-(6.3) sweep through the fused backend primitive
+    (the block_p=1 hot path)."""
     return _backend.pivot_update(q, T, acc_t, norms_t, backend=backend)
 
 
-@jax.jit
-def _tile_refresh(Q: jax.Array, T: jax.Array):
+@functools.partial(jax.jit, static_argnames=("kt", "backend"))
+def _tile_block_sweep(P, T, acc_t, norms_t, kt: int, backend: str):
+    """One tile's blocked Eq.-(6.3) panel sweep + the tile's top-kt
+    residual candidates, through the fused backend primitive."""
+    C, acc_out = _backend.block_sweep(P, T, acc_t, backend=backend)
+    res = norms_t - acc_out
+    tv, ti = jax.lax.top_k(res, kt)
+    return C, acc_out, tv, ti.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("kt",))
+def _tile_refresh(Q: jax.Array, T: jax.Array, kt: int = 1):
     """Exact residual^2 of one tile against Q (zero columns are no-ops) —
-    the tile-local form of :func:`repro.core.greedy.greedy_refresh`."""
+    the tile-local form of :func:`repro.core.greedy.greedy_refresh`, plus
+    the tile's top-kt contribution to the next block's candidate fold."""
     C = Q.conj().T @ T
     E = T - Q @ C
     res = jnp.sum(jnp.abs(E) ** 2, axis=0)
-    return res, jnp.max(res), jnp.argmax(res).astype(jnp.int32)
+    tv, ti = jax.lax.top_k(res, kt)
+    return res, tv, ti.astype(jnp.int32)
+
+
+@jax.jit
+def _commit_panel(Q, P, slots):
+    """Write the pending panel's columns into the basis at ``slots``."""
+    return jax.lax.dynamic_update_slice(Q, P, (0, slots))
 
 
 _jit_ortho = jax.jit(
@@ -112,33 +149,54 @@ _jit_ortho = jax.jit(
 )
 
 
+def _merge_topk(vals, cols, new_vals, new_cols, p: int):
+    """Host-side fold of per-tile top-k candidates into the running top-p.
+
+    Sorts by (-value, column): exact value ties keep the EARLIEST column,
+    which matches both ``jax.lax.top_k``'s first-occurrence tie-break on
+    the full residual vector and the v1 strict-``>`` scalar fold.
+    """
+    v = np.concatenate([vals, np.asarray(new_vals, np.float64)])
+    c = np.concatenate([cols, np.asarray(new_cols, np.int64)])
+    order = np.lexsort((c, -v))[:p]
+    return v[order], c[order]
+
+
 class _StreamState:
     """Host-side streaming state: everything needed to resume mid-build.
 
-    ``pending == 1`` means a pivot has been selected and orthogonalized but
-    its Eq.-(6.3) sweep has only covered tiles [0, cursor) — resume
-    continues the sweep (acc/R for swept tiles are already updated; the
-    sweep is deterministic given the checkpointed acc, so replaying the
-    remaining tiles reproduces the uninterrupted build exactly).
+    ``pending == 1`` means a block of pivots has been selected and
+    orthogonalized but its Eq.-(6.3) sweep has only covered tiles
+    [0, cursor) — resume continues the sweep (acc/R for swept tiles are
+    already updated; the sweep is deterministic given the checkpointed acc,
+    so replaying the remaining tiles reproduces the uninterrupted build
+    exactly).
+
+    ``k`` counts occupied SLOTS (blocked builds can leave rank-rejected
+    zero "hole" columns inside a block); ``n_acc`` counts accepted bases.
+    At ``block_p == 1`` the two always agree (a rejected single candidate
+    stops the build before commit).
     """
 
     __slots__ = (
         "Q", "R", "norms_sq", "acc", "pivots", "errs", "rnorms", "n_passes",
-        "k", "ref_sq", "scale", "best_val", "best_col", "pending", "cursor",
-        "pending_q", "pending_col", "pending_err", "pending_rnorm",
-        "pending_npass", "sweep_val", "sweep_col", "seq", "tile_m",
-        "backend",
+        "k", "n_acc", "ref_sq", "scale", "best_vals", "best_cols",
+        "pending", "cursor", "pending_Q", "pending_cols", "pending_errs",
+        "pending_rnorms", "pending_npass", "pending_ok", "sweep_vals",
+        "sweep_cols", "seq", "tile_m", "block_p", "backend",
     )
 
     def to_tree(self) -> dict:
         """Flat numpy pytree for :func:`repro.checkpoint.io.save_checkpoint`."""
         tree = {
             "version": np.asarray(_STATE_VERSION, np.int64),
-            # cursor/pending are expressed in tile units, so a resume MUST
-            # use the same tiling — persisted for validation, as is the
+            # cursor/pending are expressed in tile units and the pending
+            # panel in block_p units, so a resume MUST use the same tiling
+            # AND block width — persisted for validation, as is the
             # backend (a mid-sweep resume under a different backend would
             # mix float summation orders within one acc update).
             "tile_m": np.asarray(self.tile_m, np.int64),
+            "block_p": np.asarray(self.block_p, np.int64),
             "backend": np.asarray(self.backend),
             "Q": np.asarray(jax.device_get(self.Q)),
             "norms_sq": self.norms_sq,
@@ -148,31 +206,64 @@ class _StreamState:
             "rnorms": self.rnorms,
             "n_passes": self.n_passes,
             "k": np.asarray(self.k, np.int64),
+            "n_acc": np.asarray(self.n_acc, np.int64),
             "ref_sq": np.asarray(self.ref_sq, np.float64),
             "scale": np.asarray(self.scale, np.float64),
-            "best_val": np.asarray(self.best_val, np.float64),
-            "best_col": np.asarray(self.best_col, np.int64),
+            "best_vals": np.asarray(self.best_vals, np.float64),
+            "best_cols": np.asarray(self.best_cols, np.int64),
             "pending": np.asarray(self.pending, np.int64),
             "cursor": np.asarray(self.cursor, np.int64),
-            "pending_q": np.asarray(jax.device_get(self.pending_q)),
-            "pending_col": np.asarray(self.pending_col, np.int64),
-            "pending_err": np.asarray(self.pending_err, np.float64),
-            "pending_rnorm": np.asarray(self.pending_rnorm, np.float64),
+            "pending_Q": np.asarray(jax.device_get(self.pending_Q)),
+            "pending_cols": np.asarray(self.pending_cols, np.int64),
+            "pending_errs": np.asarray(self.pending_errs, np.float64),
+            "pending_rnorms": np.asarray(self.pending_rnorms, np.float64),
             "pending_npass": np.asarray(self.pending_npass, np.int64),
-            "sweep_val": np.asarray(self.sweep_val, np.float64),
-            "sweep_col": np.asarray(self.sweep_col, np.int64),
+            "pending_ok": np.asarray(self.pending_ok, np.int64),
+            "sweep_vals": np.asarray(self.sweep_vals, np.float64),
+            "sweep_cols": np.asarray(self.sweep_cols, np.int64),
             "seq": np.asarray(self.seq, np.int64),
         }
         if self.R is not None:
-            # Only the rows written so far (committed bases + the pending
-            # sweep's partial row): checkpoint traffic scales with k*M, not
-            # max_k*M.  keep_R=False avoids R checkpoint traffic entirely.
-            tree["R"] = self.R[:self.k + self.pending]
+            # Only the rows written so far (committed slots + the pending
+            # sweep's partial rows): checkpoint traffic scales with k*M,
+            # not max_k*M.  keep_R=False avoids R checkpoint traffic
+            # entirely.
+            tree["R"] = self.R[:self.k + self.pending * self.block_p]
         return tree
+
+    @staticmethod
+    def _lift_v1(tree: dict) -> dict:
+        """Lift a v1 (stepwise-only) checkpoint to the v2 layout: the
+        scalar pending/max-loc fields map 1:1 onto the width-1 arrays, so
+        a long-running pre-blocked build resumes losslessly."""
+        out = dict(tree)
+        out["version"] = np.asarray(_STATE_VERSION, np.int64)
+        out["block_p"] = np.asarray(1, np.int64)
+        out["n_acc"] = tree["k"]  # p=1 never leaves holes
+        out["best_vals"] = np.asarray([tree["best_val"]], np.float64)
+        out["best_cols"] = np.asarray([tree["best_col"]], np.int64)
+        out["pending_Q"] = np.asarray(tree["pending_q"])[:, None]
+        out["pending_cols"] = np.asarray([tree["pending_col"]], np.int64)
+        out["pending_errs"] = np.asarray([tree["pending_err"]], np.float64)
+        out["pending_rnorms"] = np.asarray([tree["pending_rnorm"]],
+                                           np.float64)
+        out["pending_npass"] = np.asarray([tree["pending_npass"]], np.int64)
+        # v1 only set `pending` after the rank guard passed
+        out["pending_ok"] = np.asarray([tree["pending"]], np.int64)
+        out["sweep_vals"] = np.asarray([tree["sweep_val"]], np.float64)
+        out["sweep_cols"] = np.asarray([tree["sweep_col"]], np.int64)
+        for old in ("best_val", "best_col", "pending_q", "pending_col",
+                    "pending_err", "pending_rnorm", "sweep_val",
+                    "sweep_col"):
+            out.pop(old, None)
+        return out
 
     @classmethod
     def from_tree(cls, tree: dict) -> "_StreamState":
         version = int(tree["version"])
+        if version == 1:
+            tree = cls._lift_v1(tree)
+            version = _STATE_VERSION
         if version != _STATE_VERSION:
             raise ValueError(
                 f"streaming checkpoint version {version} != supported "
@@ -180,6 +271,7 @@ class _StreamState:
             )
         st = cls()
         st.tile_m = int(tree["tile_m"])
+        st.block_p = int(tree["block_p"])
         st.backend = str(tree["backend"])
         st.Q = jnp.asarray(tree["Q"])
         max_k = st.Q.shape[1]
@@ -197,46 +289,51 @@ class _StreamState:
         st.rnorms = tree["rnorms"]
         st.n_passes = tree["n_passes"]
         st.k = int(tree["k"])
+        st.n_acc = int(tree["n_acc"])
         st.ref_sq = float(tree["ref_sq"])
         st.scale = float(tree["scale"])
-        st.best_val = float(tree["best_val"])
-        st.best_col = int(tree["best_col"])
+        st.best_vals = np.asarray(tree["best_vals"], np.float64)
+        st.best_cols = np.asarray(tree["best_cols"], np.int64)
         st.pending = int(tree["pending"])
         st.cursor = int(tree["cursor"])
-        st.pending_q = jnp.asarray(tree["pending_q"])
-        st.pending_col = int(tree["pending_col"])
-        st.pending_err = float(tree["pending_err"])
-        st.pending_rnorm = float(tree["pending_rnorm"])
-        st.pending_npass = int(tree["pending_npass"])
-        st.sweep_val = float(tree["sweep_val"])
-        st.sweep_col = int(tree["sweep_col"])
+        st.pending_Q = jnp.asarray(tree["pending_Q"])
+        st.pending_cols = np.asarray(tree["pending_cols"], np.int64)
+        st.pending_errs = np.asarray(tree["pending_errs"], np.float64)
+        st.pending_rnorms = np.asarray(tree["pending_rnorms"], np.float64)
+        st.pending_npass = np.asarray(tree["pending_npass"], np.int64)
+        st.pending_ok = np.asarray(tree["pending_ok"], np.int64)
+        st.sweep_vals = np.asarray(tree["sweep_vals"], np.float64)
+        st.sweep_cols = np.asarray(tree["sweep_cols"], np.int64)
         st.seq = int(tree["seq"])
         return st
 
 
 def _fresh_state(prov: SnapshotProvider, max_k: int, tiles, tile_m: int,
-                 keep_R: bool, rdt, backend: str) -> _StreamState:
-    """Init pass: stream all tiles once for column norms^2 + first max-loc."""
+                 block_p: int, keep_R: bool, rdt,
+                 backend: str) -> _StreamState:
+    """Init pass: stream all tiles once for column norms^2 + first top-p."""
     N, M = prov.shape
+    p = block_p
     dtype = jnp.dtype(prov.dtype)
     st = _StreamState()
     st.tile_m = tile_m
+    st.block_p = p
     st.backend = backend
     st.norms_sq = np.empty((M,), rdt)
-    best_val, best_col = -math.inf, -1
+    best_vals = np.full((p,), -math.inf, np.float64)
+    best_cols = np.full((p,), -1, np.int64)
     nxt = prov.tile(*tiles[0]) if tiles else None
     for i, (lo, hi) in enumerate(tiles):
         T, nxt = nxt, None
-        out = _tile_init(T)  # async dispatch
+        out = _tile_init(T, kt=min(p, hi - lo))  # async dispatch
         if i + 1 < len(tiles):
             # Prefetch the next tile (host read + async device_put) while
             # the dispatched init pass runs — see the sweep loop.
             nxt = prov.tile(*tiles[i + 1])
-        n, mx, am = out
+        n, tv, ti = out
         st.norms_sq[lo:hi] = np.asarray(n, rdt)
-        val = float(mx)
-        if val > best_val:
-            best_val, best_col = val, lo + int(am)
+        best_vals, best_cols = _merge_topk(
+            best_vals, best_cols, tv, lo + np.asarray(ti, np.int64), p)
     st.acc = np.zeros((M,), rdt)
     st.Q = jnp.zeros((N, max_k), dtype)
     st.R = np.zeros((max_k, M), np.dtype(dtype)) if keep_R else None
@@ -245,19 +342,23 @@ def _fresh_state(prov: SnapshotProvider, max_k: int, tiles, tile_m: int,
     st.rnorms = np.zeros((max_k,), rdt)
     st.n_passes = np.zeros((max_k,), np.int32)
     st.k = 0
+    st.n_acc = 0
     # Same reference scale the in-memory drivers fix at init: ref_sq is the
     # refresh trigger's reference, scale the rank guard's global scale.
-    st.ref_sq = best_val
-    st.scale = max(best_val, 0.0) ** 0.5
-    st.best_val, st.best_col = best_val, best_col
+    top = float(best_vals[0]) if best_cols[0] >= 0 else 0.0
+    st.ref_sq = top
+    st.scale = max(top, 0.0) ** 0.5
+    st.best_vals, st.best_cols = best_vals, best_cols
     st.pending = 0
     st.cursor = 0
-    st.pending_q = jnp.zeros((N,), dtype)
-    st.pending_col = -1
-    st.pending_err = 0.0
-    st.pending_rnorm = 0.0
-    st.pending_npass = 0
-    st.sweep_val, st.sweep_col = -math.inf, -1
+    st.pending_Q = jnp.zeros((N, p), dtype)
+    st.pending_cols = np.full((p,), -1, np.int64)
+    st.pending_errs = np.zeros((p,), np.float64)
+    st.pending_rnorms = np.zeros((p,), np.float64)
+    st.pending_npass = np.zeros((p,), np.int64)
+    st.pending_ok = np.zeros((p,), np.int64)
+    st.sweep_vals = np.full((p,), -math.inf, np.float64)
+    st.sweep_cols = np.full((p,), -1, np.int64)
     st.seq = 0
     return st
 
@@ -295,6 +396,7 @@ def rb_greedy_streamed(
     max_k: int | None = None,
     *,
     tile_m: int = 8192,
+    block_p: int = 1,
     kappa: float = 2.0,
     max_passes: int = 3,
     refresh: str = "auto",
@@ -310,26 +412,34 @@ def rb_greedy_streamed(
 
     ``source`` may be a provider, a resident array, or a path to a ``.npy``
     snapshot file (coerced via :func:`repro.data.providers.as_provider`).
-    Selects the same pivots and builds the same basis as
-    :func:`repro.core.greedy.rb_greedy` on the materialized matrix
+    At ``block_p=1`` it selects the same pivots and builds the same basis
+    as :func:`repro.core.greedy.rb_greedy` on the materialized matrix
     (tests/test_streaming.py), while holding only Q and one N x ``tile_m``
     tile on device.
 
     Args beyond the in-memory drivers':
       tile_m: columns per streamed tile.  Device peak is
-        O(N * (max_k + 2 * tile_m)) — current tile plus the prefetched
-        next one; throughput prefers the largest tile that fits (every
-        greedy iteration re-streams all of S through the Eq.-(6.3) sweep
-        either way).
+        O(N * (max_k + block_p + 2 * tile_m)) — current tile plus the
+        prefetched next one; throughput prefers the largest tile that fits
+        (every greedy iteration re-streams all of S through the Eq.-(6.3)
+        sweep either way).
+      block_p: pivots selected per sweep.  ``1`` is the exact stepwise
+        stream; ``> 1`` amortizes every tile transfer over ``block_p``
+        bases (a top-p candidate fold across tiles + one fused panel sweep
+        per tile), trading the blocked drivers' pivot staleness — the
+        right trade whenever the stream is transfer-bound (see
+        BENCH_streaming.json and the README "Choosing a strategy" guide).
       keep_R: accumulate the (max_k, M) R factor on host.  Disable for
         M so large that even one host row set is unwanted.
       checkpoint_dir: if set, persist streaming state via
-        :mod:`repro.checkpoint.io` after every accepted basis (and refresh).
+        :mod:`repro.checkpoint.io` after every accepted block (and
+        refresh).
       checkpoint_every_tiles: additionally checkpoint mid-sweep every this
-        many tiles (0 = per-basis only).  With T tiles per sweep a crash
+        many tiles (0 = per-block only).  With T tiles per sweep a crash
         loses at most ``checkpoint_every_tiles`` tile sweeps of work.
       resume: load the latest checkpoint from ``checkpoint_dir`` and
-        continue (fresh build if the directory has none).
+        continue (fresh build if the directory has none).  The tiling,
+        ``block_p`` and dtype must match the checkpoint.
       callback: called once per accepted basis with a dict
         ``{k, pivot, err, rnorm, n_passes}``.
     """
@@ -340,6 +450,9 @@ def rb_greedy_streamed(
     max_k = min(max_k, N, M)
     if tile_m < 1:
         raise ValueError(f"tile_m must be >= 1, got {tile_m}")
+    if block_p < 1:
+        raise ValueError(f"block_p must be >= 1, got {block_p}")
+    p = min(block_p, min(N, M))
     if checkpoint_every_tiles < 0:
         raise ValueError("checkpoint_every_tiles must be >= 0")
     if resume and checkpoint_dir is None:
@@ -348,6 +461,11 @@ def rb_greedy_streamed(
     ckpt_dir = os.fspath(checkpoint_dir) if checkpoint_dir is not None \
         else None
 
+    # Slot budget: blocked builds get +p headroom for rank-rejected holes
+    # (compacted away at the end), exactly like the resident blocked
+    # driver; the stepwise stream keeps the v1 sizing.
+    max_slots = max_k if p == 1 else min(max_k + p, min(N, M) + p)
+
     tiles = list(prov.tiles(tile_m))
     dtype = jnp.dtype(prov.dtype)
     rdt = np.zeros((), dtype).real.dtype
@@ -355,11 +473,6 @@ def rb_greedy_streamed(
 
     st = _load_state(ckpt_dir) if (resume and ckpt_dir) else None
     if st is not None:
-        if st.Q.shape != (N, max_k) or st.norms_sq.shape != (M,):
-            raise ValueError(
-                f"checkpoint shape mismatch: Q {st.Q.shape} / M "
-                f"{st.norms_sq.shape[0]} vs requested ({N}, {max_k}) / {M}"
-            )
         if st.tile_m != tile_m:
             # The persisted cursor/pending-sweep fields are in tile units:
             # resuming under a different tiling would re-apply part of the
@@ -367,6 +480,20 @@ def rb_greedy_streamed(
             raise ValueError(
                 f"checkpoint tile_m mismatch: saved {st.tile_m}, "
                 f"requested {tile_m}"
+            )
+        if st.block_p != p:
+            # The pending panel and candidate folds are width-block_p:
+            # a different width cannot continue the same build (checked
+            # before the shape: the blocked slot headroom depends on p).
+            raise ValueError(
+                f"checkpoint block_p mismatch: saved {st.block_p}, "
+                f"requested {p}"
+            )
+        if st.Q.shape != (N, max_slots) or st.norms_sq.shape != (M,):
+            raise ValueError(
+                f"checkpoint shape mismatch: Q {st.Q.shape} / M "
+                f"{st.norms_sq.shape[0]} vs requested ({N}, {max_slots}) / "
+                f"{M}"
             )
         if st.Q.dtype != dtype:
             raise ValueError(
@@ -385,7 +512,8 @@ def rb_greedy_streamed(
         if (st.R is not None) != keep_R:
             raise ValueError("checkpoint keep_R setting differs from call")
     else:
-        st = _fresh_state(prov, max_k, tiles, tile_m, keep_R, rdt, backend)
+        st = _fresh_state(prov, max_slots, tiles, tile_m, p, keep_R, rdt,
+                          backend)
         if ckpt_dir:
             # A fresh build may target a directory holding an older run's
             # steps: continue the step numbering past them so the new
@@ -399,34 +527,67 @@ def rb_greedy_streamed(
 
     while True:
         if not st.pending:
-            if st.k >= max_k:
+            if st.k + p > max_slots:
                 break
-            # Pivot from the running max-loc reduction (folded across tiles
+            # Pivot block from the running top-p fold (folded across tiles
             # during the previous sweep / init / refresh pass).  err is the
             # same clipped sqrt the in-memory drivers compute, evaluated in
             # the residual dtype.
-            err = float(np.sqrt(np.maximum(np.asarray(st.best_val, rdt),
-                                           rzero)))
-            if err < tau:
+            err = float(np.sqrt(np.maximum(
+                np.asarray(st.best_vals[0], rdt), rzero)))
+            if err < tau or st.best_cols[0] < 0:
                 break
-            j = st.best_col
-            v = prov.column(j)
-            q, _, rnorm_d, npass_d = _jit_ortho(
-                v, st.Q, kappa=kappa, max_passes=max_passes, backend=backend
-            )
-            rnorm = float(rnorm_d)
-            if rnorm < 50.0 * eps * st.scale:
-                # Numerical-rank exhaustion (same guard as the in-memory
-                # drivers): the pivot's true residual is rounding noise.
+            # --- joint IMGS of the block (in-block rank guard) ---------
+            Qwork = st.Q
+            cols = np.asarray(st.best_cols)
+            qs, oks = [], []
+            errs_blk = np.zeros((p,), np.float64)
+            rnorms_blk = np.zeros((p,), np.float64)
+            npass_blk = np.zeros((p,), np.int64)
+            for i in range(p):
+                j = int(cols[i])
+                if j < 0:  # fewer than p candidates exist (tiny M)
+                    qs.append(jnp.zeros((N,), dtype))
+                    oks.append(0)
+                    continue
+                v = prov.column(j)
+                q, _, rnorm_d, npass_d = _jit_ortho(
+                    v, Qwork, kappa=kappa, max_passes=max_passes,
+                    backend=backend,
+                )
+                rnorm = float(rnorm_d)
+                # p=1 keeps the stepwise drivers' guard boundary (reject
+                # strictly below); p>1 the resident blocked driver's
+                # (accept strictly above) — they differ only at exact
+                # float equality, but each parity suite is bitwise.
+                thr = 50.0 * eps * st.scale
+                ok = (rnorm >= thr) if p == 1 else (rnorm > thr)
+                if not ok:
+                    # Numerical-rank rejection (same guard as the
+                    # in-memory drivers): a zero "hole" column.
+                    q = jnp.zeros((N,), dtype)
+                Qwork = Qwork.at[:, st.k + i].set(q)
+                qs.append(q)
+                oks.append(int(ok))
+                errs_blk[i] = float(np.sqrt(np.maximum(
+                    np.asarray(st.best_vals[i], rdt), rzero)))
+                rnorms_blk[i] = rnorm
+                npass_blk[i] = int(npass_d)
+            if not any(oks):
+                # Whole block rank-rejected: numerical-rank exhaustion,
+                # stop WITHOUT committing (at block_p=1 this is exactly
+                # the stepwise drivers' rank-guard break).
                 break
             st.pending = 1
             st.cursor = 0
-            st.pending_q = q
-            st.pending_col = j
-            st.pending_err = err
-            st.pending_rnorm = rnorm
-            st.pending_npass = int(npass_d)
-            st.sweep_val, st.sweep_col = -math.inf, -1
+            st.pending_Q = jnp.stack(qs, axis=1)
+            st.pending_cols = cols.astype(np.int64)
+            st.pending_errs = errs_blk
+            st.pending_rnorms = rnorms_blk
+            st.pending_npass = npass_blk
+            st.pending_ok = np.asarray(oks, np.int64)
+            st.sweep_vals = np.full((p,), -math.inf, np.float64)
+            st.sweep_cols = np.full((p,), -1, np.int64)
 
         # --- Eq.-(6.3) sweep over tiles (resumable at tile granularity) ---
         # The next tile is prefetched while the current tile's sweep runs:
@@ -435,71 +596,101 @@ def rb_greedy_streamed(
         # overlaps the host<->device tile traffic with device compute —
         # this copy overhead dominated the streamed build before
         # (BENCH_streaming.json: 3.58x vs resident on the CPU smoke shape).
-        q = st.pending_q
+        # At block_p>1 every transferred tile additionally serves p bases.
+        P_blk = st.pending_Q
+        q1 = P_blk[:, 0] if p == 1 else None
         nxt = prov.tile(*tiles[st.cursor]) if st.cursor < len(tiles) \
             else None
         while st.cursor < len(tiles):
             lo, hi = tiles[st.cursor]
             T, nxt = nxt, None
-            c, acc_out, mx, am = _tile_sweep(
-                q, T, jnp.asarray(st.acc[lo:hi]),
-                jnp.asarray(st.norms_sq[lo:hi]), backend
-            )
+            if p == 1:
+                # stepwise hot path: the fused scalar sweep (bitwise v1)
+                c, acc_out, mx, am = _tile_sweep(
+                    q1, T, jnp.asarray(st.acc[lo:hi]),
+                    jnp.asarray(st.norms_sq[lo:hi]), backend
+                )
+                C = c[None, :]
+                tv, ti = mx[None], am[None]
+            else:
+                C, acc_out, tv, ti = _tile_block_sweep(
+                    P_blk, T, jnp.asarray(st.acc[lo:hi]),
+                    jnp.asarray(st.norms_sq[lo:hi]),
+                    min(p, hi - lo), backend
+                )
             if st.cursor + 1 < len(tiles):
                 nxt = prov.tile(*tiles[st.cursor + 1])  # overlaps the sweep
             st.acc[lo:hi] = np.asarray(acc_out, rdt)
             if st.R is not None:
-                st.R[st.k, lo:hi] = np.asarray(c)
-            # Running MAXLOC fold: strict > keeps the earliest tile on
-            # ties, matching jnp.argmax's first-max tie-break on the full
-            # residual vector.
-            val = float(mx)
-            if val > st.sweep_val:
-                st.sweep_val, st.sweep_col = val, lo + int(am)
+                st.R[st.k:st.k + p, lo:hi] = np.asarray(C)
+            # Running top-p fold (the paper's MPI_Allreduce(MAXLOC)
+            # generalized to p winners): exact ties keep the earliest
+            # column, matching jnp.argmax/top_k's first-occurrence
+            # tie-break on the full residual vector.
+            st.sweep_vals, st.sweep_cols = _merge_topk(
+                st.sweep_vals, st.sweep_cols, tv,
+                lo + np.asarray(ti, np.int64), p)
             st.cursor += 1
             if (ckpt_dir and checkpoint_every_tiles
                     and st.cursor < len(tiles)
                     and st.cursor % checkpoint_every_tiles == 0):
                 _save_state(st, ckpt_dir)
 
-        # --- commit the basis -------------------------------------------
-        k = st.k
-        st.Q = st.Q.at[:, k].set(q)
-        st.pivots[k] = st.pending_col
-        st.errs[k] = st.pending_err
-        st.rnorms[k] = st.pending_rnorm
-        st.n_passes[k] = st.pending_npass
-        st.k = k + 1
-        st.best_val, st.best_col = st.sweep_val, st.sweep_col
-        err = st.pending_err
+        # --- commit the block -------------------------------------------
+        slots = st.k
+        st.Q = _commit_panel(st.Q, st.pending_Q, slots)
+        for i in range(p):
+            if st.pending_cols[i] < 0:
+                continue
+            ok = bool(st.pending_ok[i])
+            st.pivots[slots + i] = st.pending_cols[i] if ok else -1
+            st.errs[slots + i] = st.pending_errs[i]
+            st.rnorms[slots + i] = st.pending_rnorms[i]
+            st.n_passes[slots + i] = st.pending_npass[i]
+            if ok:
+                st.n_acc += 1
+                if callback is not None:
+                    callback({"k": st.n_acc,
+                              "pivot": int(st.pending_cols[i]),
+                              "err": float(st.errs[slots + i]),
+                              "rnorm": float(st.rnorms[slots + i]),
+                              "n_passes": int(st.n_passes[slots + i])})
+        st.k = slots + p
+        st.best_vals = st.sweep_vals.copy()
+        st.best_cols = st.sweep_cols.copy()
+        err = float(st.pending_errs[0])
         st.pending = 0
         st.cursor = 0
-        st.pending_q = jnp.zeros_like(st.pending_q)
-        if callback is not None:
-            callback({"k": st.k, "pivot": int(st.pivots[k]),
-                      "err": float(err), "rnorm": float(st.rnorms[k]),
-                      "n_passes": int(st.n_passes[k])})
+        st.pending_Q = jnp.zeros_like(st.pending_Q)
 
         # --- Eq.-(6.3) refresh near the cancellation floor ---------------
+        # block_p=1 replicates rb_greedy_stepwise (trigger on the committed
+        # pivot's pre-add err); block_p>1 the chunked blocked driver
+        # (trigger on the post-block max residual — the fold's top value).
+        if p == 1:
+            floor_sq = err * err
+        else:
+            floor_sq = max(float(st.best_vals[0]), 0.0)
         stop_after_refresh = False
-        if refresh == "auto" and err * err < refresh_safety * eps * st.ref_sq:
+        if refresh == "auto" and floor_sq < refresh_safety * eps * st.ref_sq:
             new_norms = np.empty_like(st.norms_sq)
-            best_val, best_col = -math.inf, -1
+            best_vals = np.full((p,), -math.inf, np.float64)
+            best_cols = np.full((p,), -1, np.int64)
             nxt = prov.tile(*tiles[0]) if tiles else None
             for i, (lo, hi) in enumerate(tiles):
                 T, nxt = nxt, None
-                out = _tile_refresh(st.Q, T)  # async dispatch
+                out = _tile_refresh(st.Q, T, kt=min(p, hi - lo))
                 if i + 1 < len(tiles):
                     nxt = prov.tile(*tiles[i + 1])  # overlaps the refresh
-                res, mx, am = out
+                res, tv, ti = out
                 new_norms[lo:hi] = np.asarray(res, rdt)
-                val = float(mx)
-                if val > best_val:
-                    best_val, best_col = val, lo + int(am)
+                best_vals, best_cols = _merge_topk(
+                    best_vals, best_cols, tv,
+                    lo + np.asarray(ti, np.int64), p)
             st.norms_sq = new_norms
             st.acc[:] = 0
-            st.best_val, st.best_col = best_val, best_col
-            st.ref_sq = max(best_val, 1e-300)
+            st.best_vals, st.best_cols = best_vals, best_cols
+            st.ref_sq = max(float(best_vals[0]), 1e-300)
             if st.ref_sq ** 0.5 < tau:
                 stop_after_refresh = True
 
@@ -510,8 +701,37 @@ def rb_greedy_streamed(
 
     # (no final save: every state mutation above is followed by a save —
     # the pivot-selection / tau / rank-guard exits mutate nothing)
+    if p == 1:
+        Q_out, R_out = st.Q, st.R
+        pivots, errs = st.pivots, st.errs
+        rnorms, n_passes = st.rnorms, st.n_passes
+        k = st.k
+    else:
+        # compact: drop hole columns (rank-rejected in-block candidates)
+        # and cap at max_k — the slot buffer carries +p overrun headroom
+        # and the final block may push the accepted count past the cap
+        # (the basis is nested, so truncation is exact)
+        keep = np.where(st.pivots[:st.k] >= 0)[0][:max_k]
+        k = len(keep)
+        Q_host = np.asarray(jax.device_get(st.Q))
+        Q_c = np.zeros_like(Q_host)
+        Q_c[:, :k] = Q_host[:, keep]
+        Q_out = jnp.asarray(Q_c)
+        if st.R is not None:
+            R_out = np.zeros_like(st.R)
+            R_out[:k] = st.R[keep]
+        else:
+            R_out = None
+        pivots = np.full_like(st.pivots, -1)
+        pivots[:k] = st.pivots[keep]
+        errs = np.zeros_like(st.errs)
+        errs[:k] = st.errs[keep]
+        rnorms = np.zeros_like(st.rnorms)
+        rnorms[:k] = st.rnorms[keep]
+        n_passes = np.zeros_like(st.n_passes)
+        n_passes[:k] = st.n_passes[keep]
     return StreamedGreedyResult(
-        Q=st.Q, R=st.R, pivots=st.pivots, errs=st.errs, k=st.k,
-        n_ortho_passes=st.n_passes, rnorms=st.rnorms,
-        tile_m=tile_m, n_tiles=len(tiles),
+        Q=Q_out, R=R_out, pivots=pivots, errs=errs, k=k,
+        n_ortho_passes=n_passes, rnorms=rnorms,
+        tile_m=tile_m, n_tiles=len(tiles), block_p=p,
     )

@@ -12,7 +12,7 @@ one Pallas kernel so the shard of S is read from HBM exactly once:
 The sweep is memory-bound (arithmetic intensity ~2 FLOP per 4 bytes for f32,
 ~8 FLOP per 16 bytes for c64), so minimizing HBM traffic is the entire game
 — the fusion is worth ~1.5x on the roofline (S is by far the dominant
-stream; see EXPERIMENTS.md §Perf).
+stream; see the ``perf_greedy_fusion`` row in BENCH_greedy.json).
 
 Complex snapshots (the GW production case) are handled as split re/im planes
 (TPU MXUs are real): ``c = q^H S`` becomes four real matvecs evaluated in the

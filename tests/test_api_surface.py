@@ -51,7 +51,10 @@ def test_reduction_spec_fields_pinned():
         ("chunk", 16),
         ("tile_m", 8192),
         ("mesh", None),
-        ("block_p", 4),
+        # PR 4: block_p default 1 = stepwise everywhere; > 1 opts every
+        # blocked execution path (block_greedy / streamed / distributed)
+        # into p pivots per sweep ("auto" may raise it, logged)
+        ("block_p", 1),
         ("kappa", 2.0),
         ("max_passes", 3),
         ("refresh", "auto"),
@@ -62,6 +65,10 @@ def test_reduction_spec_fields_pinned():
         ("resume", False),
         ("callback", None),
         ("memory_budget_bytes", None),
+        # PR 4: the auto DRAM-roofline machine model's knobs
+        ("bandwidth_gbps", None),
+        ("peak_gflops", None),
+        ("cache_bytes", None),
     ]
 
 

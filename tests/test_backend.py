@@ -313,6 +313,76 @@ def test_block_sweep_matches_manual(rng):
     )
 
 
+def _block_args(rng, dtype, N, M, p):
+    cplx = np.issubdtype(dtype, np.complexfloating)
+    S = rng.standard_normal((N, M))
+    Qn = rng.standard_normal((N, p))
+    if cplx:
+        S = S + 1j * rng.standard_normal((N, M))
+        Qn = Qn + 1j * rng.standard_normal((N, p))
+    rdt = np.float64 if dtype in (np.complex128, np.float64) else np.float32
+    acc = np.abs(rng.standard_normal(M)).astype(rdt)
+    return (jnp.asarray(Qn.astype(dtype)), jnp.asarray(S.astype(dtype)),
+            jnp.asarray(acc))
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.complex64])
+@pytest.mark.parametrize("shape", [(100, 70, 3), (256, 384, 8), (17, 33, 5)])
+def test_block_sweep_backend_parity(rng, dtype, shape):
+    """pallas (interpret), xla (plane-split for complex) and xla_ref agree
+    on the panel C and the acc update, including non-tile-multiple
+    (padded) shapes and non-sublane-multiple panel widths."""
+    N, M, p = shape
+    args = _block_args(rng, dtype, N, M, p)
+    C_r, a_r = B.block_sweep(*args, backend="xla_ref")
+    scale = float(jnp.max(jnp.abs(C_r))) + 1e-6
+    for bk in ("xla", "pallas"):
+        C_b, a_b = B.block_sweep(*args, backend=bk)
+        np.testing.assert_allclose(np.asarray(C_b), np.asarray(C_r),
+                                   rtol=1e-4, atol=1e-4 * scale)
+        np.testing.assert_allclose(np.asarray(a_b), np.asarray(a_r),
+                                   rtol=1e-3, atol=1e-3 * scale ** 2)
+
+
+def test_block_sweep_dispatch_routes_to_plane_split(rng, monkeypatch):
+    """Complex inputs under the xla backend must take the 4-GEMM
+    plane-split branch; real inputs must not."""
+    calls = []
+    real_split = B._plane_split_block_sweep
+    monkeypatch.setattr(
+        B, "_plane_split_block_sweep",
+        lambda *a, **k: (calls.append("split"), real_split(*a, **k))[1],
+    )
+    B.block_sweep(*_block_args(rng, np.complex64, 16, 12, 2), backend="xla")
+    assert calls == ["split"]
+    B.block_sweep(*_block_args(rng, np.float32, 16, 12, 2), backend="xla")
+    assert calls == ["split"]  # real input must NOT take the split path
+
+
+@pytest.mark.parametrize("dtype", [np.complex64, np.complex128])
+def test_complex_block_sweep_lowers_to_real_gemms(rng, dtype):
+    """Extension of the PR-2 plane-split regression pin to the blocked
+    panel sweep: under the xla backend a complex blocked sweep must lower
+    to REAL dot ops only (the 4-GEMM plan) — a complex-dtype dot means the
+    c64 panel GEMM would hit XLA CPU's scalar complex loop.  Structural,
+    not wall-clock: cannot flake on a noisy box."""
+    args = _block_args(rng, dtype, 64, 96, 4)
+
+    def lower(bk):
+        return jax.jit(
+            lambda *a: B.block_sweep(*a, backend=bk)
+        ).lower(*args).as_text()
+
+    dots = _dot_lines(lower("xla"))
+    assert dots, "expected the blocked sweep to contain dot ops"
+    assert not any("complex" in l for l in dots), (
+        "xla-backend complex blocked sweep emitted a complex-dtype dot — "
+        "the plane-split 4-GEMM path regressed")
+    # control: the reference path DOES emit a complex dot, so the
+    # detection above is actually discriminating.
+    assert any("complex" in l for l in _dot_lines(lower("xla_ref")))
+
+
 # --------------------------------------------------- ops-level validation
 def test_tile_validation_rejects_non_lane_multiples(rng):
     from repro.kernels.greedy_update.ops import greedy_update

@@ -13,7 +13,11 @@ import pytest
 from conftest import make_smooth_matrix
 from repro.api import build_basis
 from repro.core import rb_greedy
-from repro.core.block_greedy import block_greedy_step
+from repro.core.block_greedy import (
+    _rb_greedy_block_impl,
+    block_greedy_step,
+    rb_greedy_block_stepwise,
+)
 from repro.core.errors import orthogonality_defect, proj_error_max
 from repro.core.greedy import greedy_init
 
@@ -59,6 +63,113 @@ def test_block_p1_matches_plain():
     k = min(kp, kb)
     assert np.array_equal(np.asarray(plain.pivots[:k]),
                           np.asarray(blk.pivots[:k]))
+
+
+# ------------------------------------- chunked driver vs stepwise oracle ----
+# Parity is asserted above the Eq.-(6.3) cancellation floor: below it the
+# near-degenerate candidates inside a block are separated by less than the
+# f32 tracking noise and acceptance order legitimately depends on float
+# summation details (the same caveat every parity suite documents).
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.complex64])
+@pytest.mark.parametrize("p", [1, 2, 4, 8])
+def test_chunked_driver_matches_stepwise_oracle(dtype, p):
+    """The jitted while_loop driver (top-p + joint IMGS + fused panel
+    sweep in-trace) is pivot-for-pivot identical to the eager per-block
+    oracle, holes and all."""
+    S = jnp.asarray(make_smooth_matrix(dtype=dtype))
+    a = _rb_greedy_block_impl(S, tau=1e-3, p=p)
+    b = rb_greedy_block_stepwise(S, tau=1e-3, p=p)
+    k = int(a.k)
+    assert int(b.k) == k
+    assert k >= 4
+    assert np.array_equal(np.asarray(a.pivots), np.asarray(b.pivots))
+    np.testing.assert_array_equal(np.asarray(a.Q), np.asarray(b.Q))
+    np.testing.assert_array_equal(np.asarray(a.R), np.asarray(b.R))
+
+
+@pytest.mark.parametrize("p", [2, 4])
+def test_chunked_driver_matches_oracle_deep_tolerance(p):
+    """Deep-tolerance (refresh-exercising) parity in c128, where the
+    Eq.-(6.3) floor sits far below the taus tested."""
+    S = jnp.asarray(make_smooth_matrix(dtype=np.complex128))
+    for tau in (1e-5, 1e-8):
+        a = _rb_greedy_block_impl(S, tau=tau, p=p)
+        b = rb_greedy_block_stepwise(S, tau=tau, p=p)
+        assert int(a.k) == int(b.k)
+        assert np.array_equal(np.asarray(a.pivots), np.asarray(b.pivots))
+
+
+@pytest.mark.parametrize("chunk", [1, 3])
+def test_chunk_size_invariance(chunk):
+    """The chunk boundary is an execution detail: any chunk size yields
+    the same build."""
+    S = jnp.asarray(make_smooth_matrix(dtype=np.complex64))
+    ref = _rb_greedy_block_impl(S, tau=1e-3, p=3)
+    got = _rb_greedy_block_impl(S, tau=1e-3, p=3, chunk=chunk)
+    assert int(got.k) == int(ref.k)
+    assert np.array_equal(np.asarray(got.pivots), np.asarray(ref.pivots))
+    np.testing.assert_array_equal(np.asarray(got.Q), np.asarray(ref.Q))
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.complex64])
+def test_blocked_tau_and_extra_bases_property(dtype):
+    """Acceptance property: the blocked driver reaches the same tau as
+    stepwise greedy with at most a few extra bases (pivot staleness),
+    across block widths."""
+    S = jnp.asarray(make_smooth_matrix(dtype=dtype))
+    tau = 1e-3
+    k_plain = int(rb_greedy(S, tau=tau).k)
+    for p in (2, 4, 8):
+        res = _rb_greedy_block_impl(S, tau=tau, p=p)
+        k = int(res.k)
+        assert float(proj_error_max(S, res.Q[:, :k])) < tau
+        assert k <= k_plain + p  # a few extra bases, never more than p
+        assert float(orthogonality_defect(res.Q[:, :k])) < 1e-5
+
+
+@pytest.mark.parametrize("p", [1, 4])
+def test_blocked_respects_max_k(p):
+    """max_k caps ACCEPTED bases even when the final block would overrun
+    it — across the chunked driver, the stepwise oracle and the front
+    door (the contract 'auto' relies on when it swaps greedy for
+    block_greedy)."""
+    S = jnp.asarray(make_smooth_matrix(dtype=np.float32))
+    for res in (
+        _rb_greedy_block_impl(S, tau=1e-12, p=p, max_k=6),
+        rb_greedy_block_stepwise(S, tau=1e-12, p=p, max_k=6),
+        build_basis(source=S, strategy="block_greedy", tau=1e-12,
+                    block_p=p, max_k=6),
+    ):
+        assert int(res.k) <= 6
+
+
+def test_front_door_blocked_forwards_callback():
+    """spec.callback reaches the blocked driver (chunk cadence), so
+    progress hooks don't go dark when 'auto' picks block_greedy."""
+    S = jnp.asarray(make_smooth_matrix(dtype=np.float32))
+    seen = []
+    basis = build_basis(source=S, strategy="block_greedy", tau=1e-3,
+                        block_p=2, callback=seen.append)
+    assert basis.k >= 4
+    assert len(seen) >= 1  # fired at least once per chunk
+    assert int(seen[-1].k) >= basis.k  # slot counter covers accepted
+
+
+def test_blocked_rejected_candidates_leave_no_holes():
+    """Rank-rejected in-block candidates are compacted away: every column
+    of the returned Q up to k is a unit vector and pivots[:k] >= 0."""
+    rng = np.random.default_rng(0)
+    A = rng.standard_normal((60, 6)) @ rng.standard_normal((6, 40))
+    res = _rb_greedy_block_impl(jnp.asarray(A), tau=1e-12, p=4)
+    k = int(res.k)
+    assert k <= 7  # numerical rank, not the slot budget
+    norms = np.linalg.norm(np.asarray(res.Q), axis=0)
+    np.testing.assert_allclose(norms[:k], 1.0, rtol=1e-6)
+    assert np.all(norms[k:] == 0.0)
+    assert np.all(np.asarray(res.pivots[:k]) >= 0)
+    assert np.all(np.asarray(res.pivots[k:]) == 0)
 
 
 def test_block_step_single_sweep_flops():

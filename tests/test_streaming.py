@@ -299,6 +299,226 @@ def test_write_snapshot_npy_without_suffix(tmp_path):
         np.asarray(MemmapProvider(path).materialize()), S)
 
 
+# ------------------------------------------------ blocked (block_p > 1)
+# The blocked stream must be (a) bitwise-invariant to the tiling, (b)
+# provider-independent, and (c) the streamed twin of the resident chunked
+# blocked driver.  Exact pivot parity vs the resident driver is asserted
+# at f64/c128 (deterministic selection); f32/c64 families cluster
+# near-degenerate candidates inside a block, so there the assertions are
+# set/quality-level (the same caveat as every other parity suite).
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.complex64])
+@pytest.mark.parametrize("p", [2, 4])
+def test_blocked_stream_tile_size_invariant(dtype, p):
+    """{single-tile, divisible, ragged, 1-column} tilings produce the same
+    blocked build: identical selection (pivots, Q — bitwise) everywhere;
+    the tracked VALUES (errs, R) are bitwise too except at degenerate
+    1-column tiles, where XLA reduces the (p,N)x(N,1) panel GEMM in a
+    different summation order than wide tiles (ulp-level, dtype-tol).
+
+    Pinned to the production ``xla`` backend: the bitwise claim is a
+    property of its deterministic real/plane-split GEMMs — ``xla_ref``'s
+    complex GEMM reassociates with the tile width (oracle, not a
+    reproducibility contract)."""
+    S = jnp.asarray(make_smooth_matrix(dtype=dtype))
+    base = rb_greedy_streamed(ArrayProvider(S), tau=1e-3,
+                              tile_m=M_COLS, block_p=p, backend="xla")
+    assert base.block_p == p
+    tol = dtype_tol(dtype, S.shape[0])
+    scale = float(np.max(base.errs))
+    for tile_m in TILES[1:]:
+        got = rb_greedy_streamed(ArrayProvider(S), tau=1e-3,
+                                 tile_m=tile_m, block_p=p, backend="xla")
+        assert got.k == base.k
+        np.testing.assert_array_equal(got.pivots, base.pivots)
+        np.testing.assert_array_equal(np.asarray(got.Q),
+                                      np.asarray(base.Q))
+        if tile_m > 1:
+            np.testing.assert_array_equal(got.errs, base.errs)
+            np.testing.assert_array_equal(got.R, base.R)
+        else:
+            np.testing.assert_allclose(got.errs, base.errs,
+                                       rtol=tol, atol=tol * scale)
+            np.testing.assert_allclose(got.R, base.R, rtol=tol,
+                                       atol=tol * float(np.max(np.abs(
+                                           base.R))))
+
+
+@pytest.mark.parametrize("dtype", [np.float64, np.complex128])
+@pytest.mark.parametrize("p", [2, 4])
+def test_blocked_stream_matches_resident_blocked(dtype, p):
+    """Deep-precision exact parity: the blocked stream selects the same
+    pivots and builds the same basis as the resident chunked blocked
+    driver."""
+    from repro.core.block_greedy import _rb_greedy_block_impl
+
+    S = jnp.asarray(make_smooth_matrix(dtype=dtype))
+    ref = _rb_greedy_block_impl(S, tau=1e-6, p=p)
+    kr = int(ref.k)
+    got = rb_greedy_streamed(ArrayProvider(S), tau=1e-6, tile_m=33,
+                             block_p=p)
+    assert got.k == kr
+    np.testing.assert_array_equal(got.pivots[:kr],
+                                  np.asarray(ref.pivots[:kr]))
+    etol = dtype_tol(dtype, S.shape[0], factor=1e6)
+    np.testing.assert_allclose(got.errs[:kr], np.asarray(ref.errs[:kr]),
+                               rtol=etol,
+                               atol=etol * float(np.max(ref.errs)))
+    # Deep pivots' basis VECTORS are only comparable up to cancellation
+    # amplification (orthogonalizing a column whose residual is ~6 decades
+    # below its norm loses those digits to whatever summation order the
+    # backend compiled) — so Q is checked by its algorithmic contract:
+    # orthonormal and approximating to the tau the resident build reached.
+    from repro.core.errors import orthogonality_defect, proj_error_max
+
+    assert float(orthogonality_defect(got.Q[:, :kr])) < 1e-10
+    ref_err = float(proj_error_max(S, ref.Q[:, :kr]))
+    assert float(proj_error_max(S, got.Q[:, :kr])) < max(1e-6, 2 * ref_err)
+
+
+@pytest.mark.parametrize("p", [2, 3])
+def test_blocked_stream_provider_invariant(tmp_path, p):
+    """Array, memmap and on-the-fly waveform providers stream to the same
+    blocked build."""
+    from repro.gw import chirp_grid, frequency_grid
+
+    f = frequency_grid(20.0, 256.0, 200)
+    m1, m2 = chirp_grid(n_mc=11, n_eta=7)  # M = 77 (ragged at tile 20)
+    prov = WaveformProvider(f, m1, m2, dtype=jnp.complex64,
+                            normalize=False)
+    S = prov.materialize()
+    tau = 1e-3 * float(jnp.max(jnp.linalg.norm(S, axis=0)))
+    path = write_snapshot_npy(tmp_path / "S.npy", np.asarray(S))
+
+    base = rb_greedy_streamed(ArrayProvider(S), tau=tau, tile_m=20,
+                              block_p=p)
+    for source in (MemmapProvider(path), prov):
+        got = rb_greedy_streamed(source, tau=tau, tile_m=20, block_p=p)
+        assert got.k == base.k
+        np.testing.assert_array_equal(got.pivots, base.pivots)
+        np.testing.assert_array_equal(np.asarray(got.Q),
+                                      np.asarray(base.Q))
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.complex64])
+def test_blocked_stream_quality(dtype):
+    """Blocked streams meet the same tau as the stepwise stream with at
+    most a few (<= p) extra bases — the staleness property, out of core."""
+    S = jnp.asarray(make_smooth_matrix(dtype=dtype))
+    tau = 1e-3
+    k_plain = rb_greedy_streamed(ArrayProvider(S), tau=tau, tile_m=40).k
+    for p in (2, 4):
+        got = rb_greedy_streamed(ArrayProvider(S), tau=tau, tile_m=40,
+                                 block_p=p)
+        from repro.core.errors import proj_error_max
+        assert float(proj_error_max(S, got.Q[:, :got.k])) < tau
+        assert got.k <= k_plain + p
+
+
+# budget 9: init consumes 4 tile fetches, block 1's sweep 4 more — the
+# crash lands on tile 2 of block 2's sweep, after >= 1 checkpoint.
+@pytest.mark.parametrize("dtype", [np.float32, np.complex64])
+def test_blocked_crash_resume_identical(tmp_path, dtype):
+    """Acceptance: checkpoint/resume of a blocked streamed build lands
+    bit-identical to an uninterrupted run (pending panel + candidate
+    folds + tile cursor all round-trip)."""
+    S = jnp.asarray(make_smooth_matrix(dtype=dtype))
+    tau, tile_m, p = 1e-3, 33, 3
+    ref = rb_greedy_streamed(ArrayProvider(S), tau=tau, tile_m=tile_m,
+                             block_p=p)
+    ck = tmp_path / "ck"
+    crashing = _CrashingProvider(S, 9)
+    with pytest.raises(IOError, match="injected crash"):
+        rb_greedy_streamed(crashing, tau=tau, tile_m=tile_m, block_p=p,
+                           checkpoint_dir=ck, checkpoint_every_tiles=1)
+    assert latest_step(str(ck)) is not None
+    got = rb_greedy_streamed(ArrayProvider(S), tau=tau, tile_m=tile_m,
+                             block_p=p, checkpoint_dir=ck, resume=True)
+    assert got.k == ref.k
+    np.testing.assert_array_equal(got.pivots, ref.pivots)
+    np.testing.assert_array_equal(np.asarray(got.Q), np.asarray(ref.Q))
+    np.testing.assert_array_equal(got.R, ref.R)
+    np.testing.assert_array_equal(got.errs, ref.errs)
+
+
+def test_blocked_resume_block_p_mismatch_rejected(tmp_path):
+    """The checkpointed pending panel and candidate folds are
+    width-block_p: resuming under another width must be refused."""
+    S = jnp.asarray(make_smooth_matrix(dtype=np.float64))
+    ck = tmp_path / "ck"
+    rb_greedy_streamed(ArrayProvider(S), tau=1e-4, tile_m=40, block_p=2,
+                       checkpoint_dir=ck)
+    with pytest.raises(ValueError, match="block_p mismatch"):
+        rb_greedy_streamed(ArrayProvider(S), tau=1e-4, tile_m=40,
+                           block_p=3, checkpoint_dir=ck, resume=True)
+
+
+@pytest.mark.parametrize("p", [1, 3])
+def test_blocked_stream_respects_max_k(p):
+    """max_k is a hard cap on ACCEPTED bases even when the final block
+    would overrun it (the slot buffer's +p headroom is for holes)."""
+    S = jnp.asarray(make_smooth_matrix(dtype=np.float64))
+    got = rb_greedy_streamed(ArrayProvider(S), tau=1e-12, max_k=5,
+                             tile_m=40, block_p=p)
+    assert got.k <= 5
+    assert np.all(got.pivots[got.k:] == -1)
+
+
+def test_v1_checkpoint_lifts_and_resumes(tmp_path):
+    """A v1 (pre-blocked, scalar-field) checkpoint must lift to v2 and
+    resume losslessly — long-running out-of-core builds survive the
+    upgrade."""
+    from repro.checkpoint.io import save_checkpoint
+    from repro.core.streaming import _StreamState
+
+    S = jnp.asarray(make_smooth_matrix(dtype=np.complex64))
+    ck = tmp_path / "ck"
+    # run a partial stepwise build to get a genuine mid-build state...
+    crashing = _CrashingProvider(S, 7)
+    with pytest.raises(IOError, match="injected crash"):
+        rb_greedy_streamed(crashing, tau=1e-3, tile_m=33,
+                           checkpoint_dir=ck, checkpoint_every_tiles=1)
+    # ...then rewrite its newest checkpoint in the v1 field layout
+    from repro.checkpoint.io import load_checkpoint_raw, latest_step
+
+    tree = load_checkpoint_raw(str(ck))
+    v1 = {k: v for k, v in tree.items()}
+    v1["version"] = np.asarray(1, np.int64)
+    v1["best_val"] = v1.pop("best_vals")[0]
+    v1["best_col"] = v1.pop("best_cols")[0]
+    v1["pending_q"] = v1.pop("pending_Q")[:, 0]
+    v1["pending_col"] = v1.pop("pending_cols")[0]
+    v1["pending_err"] = v1.pop("pending_errs")[0]
+    v1["pending_rnorm"] = v1.pop("pending_rnorms")[0]
+    v1["pending_npass"] = v1["pending_npass"][0]
+    v1["sweep_val"] = v1.pop("sweep_vals")[0]
+    v1["sweep_col"] = v1.pop("sweep_cols")[0]
+    for v2_only in ("block_p", "n_acc", "pending_ok"):
+        v1.pop(v2_only, None)
+    seq = latest_step(str(ck)) + 1
+    save_checkpoint(v1, str(ck), seq)
+
+    ref = rb_greedy_streamed(ArrayProvider(S), tau=1e-3, tile_m=33)
+    got = rb_greedy_streamed(ArrayProvider(S), tau=1e-3, tile_m=33,
+                             checkpoint_dir=ck, resume=True)
+    assert got.k == ref.k
+    np.testing.assert_array_equal(got.pivots, ref.pivots)
+    np.testing.assert_array_equal(np.asarray(got.Q), np.asarray(ref.Q))
+    np.testing.assert_array_equal(got.errs, ref.errs)
+
+
+def test_blocked_stream_callback_counts_accepted():
+    S = jnp.asarray(make_smooth_matrix(dtype=np.float64))
+    seen = []
+    got = rb_greedy_streamed(ArrayProvider(S), tau=1e-4, tile_m=40,
+                             block_p=4, keep_R=False,
+                             callback=lambda info: seen.append(info))
+    assert got.R is None
+    assert [info["k"] for info in seen] == list(range(1, got.k + 1))
+    assert [info["pivot"] for info in seen] == list(got.pivots[:got.k])
+
+
 def test_checkpoints_are_pruned(tmp_path):
     """Per-tile checkpointing must not accumulate one full state copy per
     tile on disk — only the newest couple of steps survive."""
