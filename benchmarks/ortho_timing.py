@@ -1,8 +1,13 @@
 """Paper Fig. 6.1(b): orthogonalization time vs iteration index j, plus the
-seed-vs-chunked IMGS hot-path comparison.
+seed-vs-chunked IMGS hot-path comparison and the panel-ortho rows.
 
 IMGS cost is O(nu_j * j * N): linear growth with the basis size j.  We
 measure T_j^IMGS/N and fit the slope.
+
+All rows time with ``benchmarks.common.steady_min`` (best-of-N from a
+steady state — single-shot wall clock swings ±40% on the shared box; the
+pre-PR-5 fig6.1b_imgs rows were single-shot medians and meaningless at
+that noise level).
 
 The hot-path rows compare, at N=4096:
 
@@ -12,20 +17,40 @@ The hot-path rows compare, at N=4096:
                            device-resident inside one jitted ``lax.scan``
                            chunk (the chunked driver's cadence), amortizing
                            dispatch + host sync over the chunk.
+
+The panel-ortho rows time the blocked drivers' per-block orthogonalization
+(N=4096, k=64 resident bases, p=8 candidates — the production blocked
+shape) through the two `_ortho_block` paths:
+
+  fig6.1b_panelortho_seq    — p sequential :func:`imgs_orthogonalize`
+                              calls with fixed-slot writes (the pre-PR-5
+                              blocked path: p separate k*N GEMV chains),
+  fig6.1b_panelortho_panel  — the fused BLAS-3 panel path
+                              (:func:`repro.core.greedy.
+                              panel_imgs_orthogonalize`: iterated
+                              (k,N)x(N,p) panel projection + within-panel
+                              sweep + BCGS2 re-ortho cycle).
+
+Both are timed PER BASIS (total block time / p) in f32 and c64 (the GW
+production dtype; plane-split GEMMs under the xla backend).
 """
 
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, steady_min
+from repro.core.block_greedy import _ortho_block
 from repro.core.greedy import imgs_orthogonalize
 
 
 def run(csv: bool = True):
     hotpath = run_hotpath(csv=csv)
+    panel = run_panel(csv=csv)
     results = []
     for N in (1024, 4096):
         rng = np.random.default_rng(0)
@@ -35,7 +60,10 @@ def run(csv: bool = True):
             Q, _ = np.linalg.qr(rng.standard_normal((N, j)))
             v = jnp.asarray(rng.standard_normal(N), jnp.float32)
             Qj = jnp.asarray(Q, jnp.float32)
-            t = time_fn(fn, v, Qj, warmup=2, iters=5)
+            t = steady_min(
+                lambda: jax.block_until_ready(fn(v, Qj)),
+                per=1, repeats=7, warmup=2,
+            )
             js.append(j)
             ts.append(t)
         slope = np.polyfit(js, ts, 1)[0]
@@ -48,6 +76,7 @@ def run(csv: bool = True):
                 f"linear_fit_slope={slope*1e6:.3f}us/basis;corr={r:.4f}",
             )
     results.append(hotpath)
+    results.append(panel)
     return results
 
 
@@ -64,7 +93,7 @@ def run_hotpath(csv: bool = True, N: int = 4096, j: int = 64,
            complex), amortizing dispatch + host sync over the chunk.
 
     Each candidate is timed best-of-``repeats`` in its own steady state
-    (see benchmarks.pivot_timing._steady_min for the rationale).
+    (``benchmarks.common.steady_min``).
     """
     out = {}
     for dtype, suffix in ((jnp.complex64, ""), (jnp.float32, "_f32")):
@@ -75,8 +104,6 @@ def run_hotpath(csv: bool = True, N: int = 4096, j: int = 64,
 
 
 def _hotpath_one_dtype(csv, N, j, chunk, repeats, dtype, suffix):
-    from benchmarks.pivot_timing import _steady_min
-
     rng = np.random.default_rng(0)
     cplx = jnp.issubdtype(dtype, jnp.complexfloating)
     A = rng.standard_normal((N, j))
@@ -108,8 +135,8 @@ def _hotpath_one_dtype(csv, N, j, chunk, repeats, dtype, suffix):
     def chunked():
         jax.block_until_ready(scanned(V, Qj))
 
-    t_seed = _steady_min(percall, chunk, repeats=repeats, warmup=2)
-    t_fused = _steady_min(chunked, chunk, repeats=repeats, warmup=2)
+    t_seed = steady_min(percall, chunk, repeats=repeats, warmup=2)
+    t_fused = steady_min(chunked, chunk, repeats=repeats, warmup=2)
 
     speedup = t_seed / max(t_fused, 1e-12)
     dt_name = str(jnp.dtype(dtype))
@@ -120,6 +147,69 @@ def _hotpath_one_dtype(csv, N, j, chunk, repeats, dtype, suffix):
              f"dtype={dt_name};device-resident scan chunk C={chunk};"
              f"speedup_vs_seed={speedup:.2f}x")
     return {"t_seed_us": t_seed * 1e6, "t_fused_us": t_fused * 1e6,
+            "speedup": speedup}
+
+
+def run_panel(csv: bool = True, N: int = 4096, k: int = 64, p: int = 8,
+              repeats: int = 9):
+    """Blocked-ortho comparison: p sequential project_pass chains vs the
+    fused BLAS-3 panel, per basis, through the actual driver helper
+    (:func:`repro.core.block_greedy._ortho_block`), f32 and c64."""
+    out = {}
+    for dtype, suffix in ((jnp.complex64, ""), (jnp.float32, "_f32")):
+        out[str(jnp.dtype(dtype))] = _panel_one_dtype(
+            csv, N, k, p, repeats, dtype, suffix
+        )
+    return out
+
+
+def _panel_one_dtype(csv, N, k, p, repeats, dtype, suffix):
+    rng = np.random.default_rng(0)
+    cplx = jnp.issubdtype(dtype, jnp.complexfloating)
+    A = rng.standard_normal((N, k))
+    V = rng.standard_normal((N, p))
+    if cplx:
+        A = A + 1j * rng.standard_normal((N, k))
+        V = V + 1j * rng.standard_normal((N, p))
+    Qk = np.linalg.qr(A)[0]
+    # the driver's slot layout: k resident bases + p free slots
+    Qbuf = np.zeros((N, k + p), np.dtype(dtype))
+    Qbuf[:, :k] = Qk
+    Qbuf = jnp.asarray(Qbuf)
+    S = jnp.asarray(V.astype(dtype))   # the p candidate columns
+    idx = jnp.arange(p, dtype=jnp.int32)
+    eps = float(jnp.finfo(jnp.zeros((), dtype).real.dtype).eps)
+    scale = float(np.max(np.linalg.norm(V, axis=0)))
+
+    @functools.partial(jax.jit, static_argnames=("panel",))
+    def block_ortho(S_, Q_, panel: bool):
+        Qout, Qnew, oks, _, _ = _ortho_block(
+            S_, Q_, idx, jnp.asarray(k, jnp.int32), p, 2.0, 3, eps,
+            scale, None, panel,
+        )
+        return Qout, Qnew, oks
+
+    def timed(panel):
+        return steady_min(
+            lambda: jax.block_until_ready(block_ortho(S, Qbuf,
+                                                      panel=panel)),
+            per=p, repeats=repeats, warmup=2,
+        )
+
+    t_seq = timed(False)
+    t_panel = timed(True)
+    speedup = t_seq / max(t_panel, 1e-12)
+    dt_name = str(jnp.dtype(dtype))
+    if csv:
+        emit(f"fig6.1b_panelortho_seq_N{N}_k{k}_p{p}{suffix}",
+             t_seq * 1e6,
+             f"dtype={dt_name};p sequential project_pass chains, per "
+             f"basis")
+        emit(f"fig6.1b_panelortho_panel_N{N}_k{k}_p{p}{suffix}",
+             t_panel * 1e6,
+             f"dtype={dt_name};fused BLAS-3 panel IMGS, per basis;"
+             f"speedup_vs_seq={speedup:.2f}x")
+    return {"t_seq_us": t_seq * 1e6, "t_panel_us": t_panel * 1e6,
             "speedup": speedup}
 
 

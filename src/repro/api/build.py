@@ -108,23 +108,46 @@ def machine_roofline(spec: Optional[ReductionSpec] = None):
     """(bandwidth GB/s, peak GFLOP/s, cache bytes) the ``"auto"`` roofline
     model plans against.  Precedence per knob: spec field >
     ``REPRO_DRAM_BW_GBPS`` / ``REPRO_PEAK_GFLOPS`` / ``REPRO_LLC_BYTES``
-    env var > per-platform default."""
+    env var > one-time on-device measurement
+    (:func:`repro.api.roofline.measured_roofline`; bandwidth and FLOPs
+    only, skipped under ``REPRO_ROOFLINE_MEASURE=0``) > per-platform
+    default."""
+    from repro.api.roofline import (
+        measured_roofline,
+        roofline_measurement_enabled,
+    )
+
     defaults = _PLATFORM_ROOFS.get(jax.default_backend(),
                                    _PLATFORM_ROOFS["cpu"])
 
-    def pick(field, env, default, cast):
+    def pinned(field, env):
         if field is not None:
-            return cast(field)
+            return float(field)
         raw = os.environ.get(env)
-        return cast(float(raw)) if raw else default
+        return float(raw) if raw else None
+
+    bw = pinned(getattr(spec, "bandwidth_gbps", None), _ENV_BW)
+    gf = pinned(getattr(spec, "peak_gflops", None), _ENV_FLOPS)
+    if (bw is None or gf is None) and roofline_measurement_enabled():
+        # only knobs nobody pinned are filled from the measurement (a
+        # failed calibration reports 0.0 and falls through to defaults)
+        m_bw, m_gf = measured_roofline()
+        if bw is None and m_bw > 0:
+            bw = m_bw
+        if gf is None and m_gf > 0:
+            gf = m_gf
+
+    cache_field = getattr(spec, "cache_bytes", None)
+    if cache_field is not None:
+        cache = int(cache_field)
+    else:
+        raw = os.environ.get(_ENV_CACHE)
+        cache = int(float(raw)) if raw else defaults[2]
 
     return (
-        pick(getattr(spec, "bandwidth_gbps", None), _ENV_BW, defaults[0],
-             float),
-        pick(getattr(spec, "peak_gflops", None), _ENV_FLOPS, defaults[1],
-             float),
-        pick(getattr(spec, "cache_bytes", None), _ENV_CACHE, defaults[2],
-             int),
+        defaults[0] if bw is None else bw,
+        defaults[1] if gf is None else gf,
+        cache,
     )
 
 
@@ -184,15 +207,18 @@ def _auto_strategy(spec: ReductionSpec, shape, dtype):
 
 
 # ------------------------------------------------------- strategy bodies ----
-# Each returns (Q, pivots, errs, R, k) TRIMMED to the accepted rank, with
-# values bit-identical to the corresponding legacy driver's (sliced) output.
+# Each returns (Q, pivots, errs, R, k, extras) with the arrays TRIMMED to
+# the accepted rank and bit-identical to the corresponding legacy driver's
+# (sliced) output; ``extras`` is a JSON-serializable dict merged into the
+# artifact provenance (e.g. the adaptive driver's panel-width trajectory).
 
 
-def _trim_greedy(res):
+def _trim_greedy(res, extras=None):
     k = int(res.k)
     return (res.Q[:, :k], np.asarray(res.pivots[:k]),
             np.asarray(res.errs[:k]),
-            None if res.R is None else np.asarray(res.R[:k]), k)
+            None if res.R is None else np.asarray(res.R[:k]), k,
+            extras or {})
 
 
 def _build_greedy(spec, S):
@@ -212,13 +238,16 @@ def _build_block_greedy(spec, S):
     # spec.chunk counts greedy ITERATIONS per device-resident chunk; the
     # blocked driver's chunk counts BLOCKS of block_p, so divide to keep
     # the host-sync cadence the user configured.
-    return _trim_greedy(_rb_greedy_block_impl(
+    diag = {} if spec.adaptive_block else None
+    res = _rb_greedy_block_impl(
         S, tau=spec.tau, p=spec.block_p, max_k=spec.max_k,
         kappa=spec.kappa, max_passes=spec.max_passes, refresh=spec.refresh,
         refresh_safety=spec.refresh_safety, backend=spec.backend,
         chunk=max(1, spec.chunk // max(spec.block_p, 1)),
-        callback=spec.callback,
-    ))
+        callback=spec.callback, panel=spec.panel_ortho,
+        adaptive=spec.adaptive_block, diagnostics=diag,
+    )
+    return _trim_greedy(res, diag)
 
 
 def _build_distributed(spec, S):
@@ -233,7 +262,7 @@ def _build_distributed(spec, S):
         callback=spec.callback, refresh=spec.refresh,
         refresh_safety=spec.refresh_safety, kappa=spec.kappa,
         max_passes=spec.max_passes, chunk=spec.chunk, backend=spec.backend,
-        block_p=spec.block_p,
+        block_p=spec.block_p, panel_ortho=spec.panel_ortho,
     ))
 
 
@@ -245,6 +274,7 @@ def _build_streamed(spec, _S_unused=None):
         block_p=spec.block_p, kappa=spec.kappa,
         max_passes=spec.max_passes, refresh=spec.refresh,
         refresh_safety=spec.refresh_safety, backend=spec.backend,
+        panel_ortho=spec.panel_ortho,
         keep_R=spec.keep_R, checkpoint_dir=spec.checkpoint_dir,
         checkpoint_every_tiles=spec.checkpoint_every_tiles,
         resume=spec.resume, callback=spec.callback,
@@ -252,7 +282,7 @@ def _build_streamed(spec, _S_unused=None):
     k = int(res.k)
     return (res.Q[:, :k], np.asarray(res.pivots[:k]),
             np.asarray(res.errs[:k]),
-            None if res.R is None else np.asarray(res.R[:k]), k)
+            None if res.R is None else np.asarray(res.R[:k]), k, {})
 
 
 def _build_mgs(spec, S):
@@ -260,7 +290,7 @@ def _build_mgs(spec, S):
 
     res = _mgs_pivoted_qr_impl(S, tau=spec.tau, max_k=spec.max_k)
     return (res.Q, np.asarray(res.pivots), np.asarray(res.r_diag),
-            np.asarray(res.R), int(res.k))
+            np.asarray(res.R), int(res.k), {})
 
 
 def _build_pod(spec, S):
@@ -271,7 +301,7 @@ def _build_pod(spec, S):
     if spec.max_k is not None:
         k = min(k, spec.max_k)
     return (res.basis[:, :k], np.zeros((0,), np.int32),
-            np.asarray(res.sigmas[:k]), None, k)
+            np.asarray(res.sigmas[:k]), None, k, {})
 
 
 _BUILDERS = {
@@ -336,7 +366,7 @@ def build_basis(spec: ReductionSpec | None = None,
 
     build = _BUILDERS[strategy]
     t0 = time.perf_counter()
-    Q, pivots, errs, R, k = build(spec, S)
+    Q, pivots, errs, R, k, extras = build(spec, S)
     jax.block_until_ready(Q)
     wall = time.perf_counter() - t0
 
@@ -353,6 +383,7 @@ def build_basis(spec: ReductionSpec | None = None,
         "wall_time_s": wall,
         "spec": spec.describe(),
         "repro_version": _repro_version(),
+        **extras,
     }
     return ReducedBasis(Q=Q, pivots=pivots, errs=errs, k=k, R=R,
                         provenance=provenance)

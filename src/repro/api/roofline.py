@@ -1,0 +1,127 @@
+"""One-time on-device roofline measurement for the ``"auto"`` strategy.
+
+The PR-4 DRAM-roofline model classified the Eq.-(6.3) pivot sweep with
+per-platform DEFAULT bandwidth/FLOP roofs — fine for the ratio test on
+typical hardware, but the block/stepwise cutover really wants the numbers
+of THIS box.  :func:`measured_roofline` spends ~100 ms once per process to
+get them:
+
+  bandwidth   one fused f32 Eq.-(6.3) sweep over a snapshot matrix sized
+              well past any last-level cache (one read of S per call), so
+              ``bytes / seconds`` is the streaming DRAM rate the real
+              sweep will see — the same access pattern, not a synthetic
+              triad,
+  peak FLOPs  one square f32 GEMM (the compute the blocked panel path is
+              made of), ``2 n^3 / seconds``.
+
+Both are timed best-of-N from a steady state (mirroring
+``benchmarks/common.steady_min``: consecutive repeats, minimum taken —
+single-shot wall clock swings ±40% on shared boxes) and cached for the
+process lifetime.
+
+Knob precedence stays exactly as documented on
+:func:`repro.api.build.machine_roofline`: an explicit spec field or
+``REPRO_DRAM_BW_GBPS`` / ``REPRO_PEAK_GFLOPS`` env var always wins;
+measurement only fills knobs nobody pinned.  ``REPRO_ROOFLINE_MEASURE=0``
+opts out entirely (falling back to the per-platform defaults) — CI's test
+matrix sets it to keep auto-strategy decisions deterministic on noisy
+runners.  The measured numbers are logged once on logger ``repro.api``.
+"""
+
+from __future__ import annotations
+
+import functools
+import logging
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+logger = logging.getLogger("repro.api")
+
+_ENV_MEASURE = "REPRO_ROOFLINE_MEASURE"
+
+# Sweep operand sized to defeat any plausible LLC (256 MB f32) while
+# keeping the whole calibration ~100 ms at laptop-class bandwidth; the
+# GEMM is large enough to reach steady MXU/FMA throughput but small next
+# to the sweep.
+_SWEEP_SHAPE = (2048, 16384)     # 128 MB f32 + re-read per call
+_GEMM_N = 512                    # 2 * 512^3 = 268 MFLOP per call
+_REPEATS = 5
+_WARMUP = 2
+
+
+def roofline_measurement_enabled() -> bool:
+    """Whether ``"auto"`` may spend ~100 ms measuring the machine roofs.
+
+    ``REPRO_ROOFLINE_MEASURE=0`` (or empty/false-y) disables; default on.
+    """
+    raw = os.environ.get(_ENV_MEASURE, "1").strip().lower()
+    return raw not in ("0", "false", "no", "off", "")
+
+
+def _steady_min(fn, repeats: int = _REPEATS, warmup: int = _WARMUP) -> float:
+    """Best-of-``repeats`` seconds per call, timed consecutively from a
+    steady state (the committed-bench method; see
+    ``benchmarks/common.steady_min`` — not importable from the installed
+    package, so the ~5-line method is restated here)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+@functools.lru_cache(maxsize=None)
+def measured_roofline() -> tuple[float, float]:
+    """Measure (DRAM bandwidth GB/s, peak GFLOP/s) on the default device.
+
+    Cached per process (the platform cannot change after JAX initializes).
+    Call :func:`roofline_measurement_enabled` first — this function always
+    measures.  On any failure (e.g. a backend without timers) it falls
+    back to ``(0.0, 0.0)``; callers must treat non-positive values as
+    "not measured".
+    """
+    try:
+        from repro.core.backend import pivot_update
+
+        N, M = _SWEEP_SHAPE
+        key = jax.random.PRNGKey(0)
+        S = jax.random.normal(key, (N, M), jnp.float32)
+        q = jax.random.normal(key, (N,), jnp.float32)
+        q = q / jnp.linalg.norm(q)
+        norms = jnp.sum(S * S, axis=0)
+        acc = jnp.zeros((M,), jnp.float32)
+        # operands are ARGUMENTS, not closure captures: a captured S is an
+        # XLA constant and the whole sweep constant-folds at compile time
+        # (timing a no-op at "1 TB/s")
+        sweep_fn = jax.jit(
+            lambda q_, S_, a_, n_: pivot_update(q_, S_, a_, n_,
+                                                backend=None)
+        )
+        t_sweep = _steady_min(lambda: sweep_fn(q, S, acc, norms))
+        # one read of S dominates the sweep's traffic (q, acc, norms are
+        # O(N + M) next to N*M)
+        bw_gbps = (N * M * 4) / t_sweep / 1e9
+
+        A = jax.random.normal(key, (_GEMM_N, _GEMM_N), jnp.float32)
+        B = jax.random.normal(key, (_GEMM_N, _GEMM_N), jnp.float32)
+        gemm_fn = jax.jit(lambda a, b: a @ b)
+        t_gemm = _steady_min(lambda: gemm_fn(A, B))
+        gflops = (2.0 * _GEMM_N ** 3) / t_gemm / 1e9
+
+        logger.info(
+            "measured roofline: %.1f GB/s DRAM, %.1f GFLOP/s peak "
+            "(one-time ~100 ms calibration; REPRO_ROOFLINE_MEASURE=0 or "
+            "REPRO_DRAM_BW_GBPS/REPRO_PEAK_GFLOPS override to skip)",
+            bw_gbps, gflops,
+        )
+        return (float(bw_gbps), float(gflops))
+    except Exception as e:  # never let calibration break a build
+        logger.warning("roofline measurement failed (%s); falling back to "
+                       "platform defaults", e)
+        return (0.0, 0.0)

@@ -61,6 +61,18 @@ class ReductionSpec:
         each read/transfer of S over block_p bases at the cost of pivot
         staleness (a few extra bases on fast-decaying families).
         ``"auto"`` may raise it on roof-bound shapes (logged).
+      panel_ortho: orthogonalize each block of pivots through the BLAS-3
+        panel path (:func:`repro.core.greedy.panel_imgs_orthogonalize`:
+        one iterated (k, N) x (N, p) panel projection + within-panel
+        sweep) instead of p sequential GEMV chains.  Consulted by every
+        blocked execution path at ``block_p > 1``; both settings span the
+        same space (float summation order differs).
+      adaptive_block: treat ``block_p`` as a CEILING and let the resident
+        blocked driver retune the live panel width between chunks from
+        the in-block rank guard's rejection rate (the stale-pivot
+        signal): halve on a >25%-rejected chunk, double back on a clean
+        one.  The width trajectory lands in the artifact provenance
+        (``p_trajectory``).  Consumed by ``block_greedy`` only.
       kappa, max_passes: Hoffmann iterated-GS controls (greedy family).
       refresh, refresh_safety: Eq.-(6.3) exact-refresh policy
         (greedy family; ``"never"`` is the paper-faithful mode).
@@ -78,8 +90,11 @@ class ReductionSpec:
         model ``"auto"`` uses to detect roof-bound Eq.-(6.3) sweeps (and
         pick a blocked strategy).  ``None`` falls back to the
         ``REPRO_DRAM_BW_GBPS`` / ``REPRO_PEAK_GFLOPS`` /
-        ``REPRO_LLC_BYTES`` env vars, then to conservative per-platform
-        defaults (see :func:`repro.api.build.machine_roofline`).
+        ``REPRO_LLC_BYTES`` env vars, then (for bandwidth/FLOPs) to a
+        one-time ~100 ms on-device measurement
+        (:mod:`repro.api.roofline`; ``REPRO_ROOFLINE_MEASURE=0`` opts
+        out), then to conservative per-platform defaults (see
+        :func:`repro.api.build.machine_roofline`).
     """
 
     source: Any = None
@@ -91,6 +106,8 @@ class ReductionSpec:
     tile_m: int = 8192
     mesh: Any = None
     block_p: int = 1
+    panel_ortho: bool = True
+    adaptive_block: bool = False
     kappa: float = 2.0
     max_passes: int = 3
     refresh: str = "auto"

@@ -40,10 +40,13 @@ Dispatch contract
 * Both implementations satisfy the same numerical contract (identical
   signatures and semantics, see ``kernels/*/ref.py``); pivot-for-pivot
   parity of whole drivers is asserted in ``tests/test_backend.py``.
-* Three primitives are dispatched: ``pivot_update`` and ``project_pass``
-  (above), plus the blocked ``block_sweep`` panel GEMM (the BLAS-3 form of
-  the Eq.-(6.3) sweep; :mod:`repro.kernels.block_sweep`) used by the
-  block-pivoted drivers — one read of S per p bases instead of per basis.
+* Four primitives are dispatched: ``pivot_update`` and ``project_pass``
+  (above), plus the two blocked panel forms used by the block-pivoted
+  drivers: ``block_sweep`` (the BLAS-3 Eq.-(6.3) sweep;
+  :mod:`repro.kernels.block_sweep` — one read of S per p bases) and
+  ``panel_project`` (the BLAS-3 classical-GS projection of a whole (N, p)
+  candidate panel; :mod:`repro.kernels.imgs_panel` — one read of Q per
+  panel instead of per candidate).
 """
 
 from __future__ import annotations
@@ -57,6 +60,8 @@ from repro.kernels.block_sweep.ops import block_sweep as _pallas_block
 from repro.kernels.block_sweep.ref import block_sweep_ref as _xla_block
 from repro.kernels.greedy_update.ops import greedy_update as _pallas_pivot
 from repro.kernels.greedy_update.ref import greedy_update_ref as _xla_pivot
+from repro.kernels.imgs_panel.ops import imgs_panel as _pallas_panel
+from repro.kernels.imgs_panel.ref import imgs_panel_ref as _xla_panel
 from repro.kernels.imgs_project.ops import imgs_project as _pallas_project
 from repro.kernels.imgs_project.ref import imgs_project_ref as _xla_project
 
@@ -172,6 +177,53 @@ def project_pass(
     if resolved == "xla" and jnp.iscomplexobj(Q):
         return _plane_split_project(v, Q)
     return _xla_project(v, Q)
+
+
+def _plane_split_panel_project(V, Q):
+    """Complex classical-GS PANEL projection on split re/im planes (see
+    :func:`_plane_split_pivot` for why: XLA lowers complex matmuls on CPU
+    to scalar loops an order of magnitude slower than their real
+    counterparts).  Same math as ``(V - Q (Q^H V), Q^H V)`` up to float
+    summation order — four real GEMMs per half instead of two complex
+    GEMMs."""
+    Qr, Qi = Q.real, Q.imag
+    Vr, Vi = V.real, V.imag
+    # C = Q^H V = (Qr - i Qi)^T (Vr + i Vi)
+    Cr = Qr.T @ Vr + Qi.T @ Vi
+    Ci = Qr.T @ Vi - Qi.T @ Vr
+    # V' = V - Q C
+    Vr_out = Vr - (Qr @ Cr - Qi @ Ci)
+    Vi_out = Vi - (Qr @ Ci + Qi @ Cr)
+    return (
+        jax.lax.complex(Vr_out, Vi_out).astype(V.dtype),
+        jax.lax.complex(Cr, Ci).astype(Q.dtype),
+    )
+
+
+def panel_project(
+    V: jax.Array,
+    Q: jax.Array,
+    backend: str | None = None,
+):
+    """One classical-GS PANEL pass: returns ``(V - Q Q^H V, Q^H V)``.
+
+    The BLAS-3 form of :func:`project_pass` applied to a whole (N, p)
+    candidate panel at once — one read of Q per panel instead of per
+    candidate, so k*p*N GEMM work replaces p separate k*N GEMV chains
+    (the panel-factorization idea of the blocked-QR literature; see
+    :mod:`repro.kernels.imgs_panel`).  ``pallas`` routes to the fused
+    panel kernel; ``xla`` runs the ``jnp`` GEMM form with complex inputs
+    on split re/im planes (mirroring :func:`project_pass`); ``xla_ref``
+    is the literal reference
+    (:func:`repro.kernels.imgs_panel.ref.imgs_panel_ref`, complex GEMM
+    included).
+    """
+    resolved = resolve_backend(backend)
+    if resolved == "pallas":
+        return _pallas_panel(V, Q)
+    if resolved == "xla" and jnp.iscomplexobj(Q):
+        return _plane_split_panel_project(V, Q)
+    return _xla_panel(V, Q)
 
 
 def _plane_split_block_sweep(Qnew, S, acc):

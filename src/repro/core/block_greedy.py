@@ -42,6 +42,7 @@ import warnings
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import backend as _backend
 from repro.core.greedy import (
@@ -54,21 +55,76 @@ from repro.core.greedy import (
     greedy_init,
     greedy_refresh,
     imgs_orthogonalize,
+    panel_imgs_orthogonalize,
 )
+
+
+def _ortho_block(S, Q, top_idx, slots, p, kappa, max_passes, eps, scale,
+                 backend, panel):
+    """Orthogonalize one block of p pivot candidates against ``Q`` (and
+    against each other), with the in-block rank guard.
+
+    ``panel=True`` (the default) runs the BLAS-3 panel path
+    (:func:`repro.core.greedy.panel_imgs_orthogonalize`): one iterated
+    (k, N) x (N, p) panel projection for the whole block plus a
+    within-panel sequential sweep — k*p*N GEMM work instead of p separate
+    k*N GEMV chains.  ``panel=False`` keeps the pre-panel path (p
+    sequential :func:`imgs_orthogonalize` calls with fixed-slot writes);
+    both span the same space and differ only in float summation order.
+
+    Returns ``(Q, Qnew, oks, rnorms, n_passes)`` with the block written
+    into ``Q`` at ``slots..slots+p-1`` (rejected candidates leave zero
+    "hole" columns).
+    """
+    thresh = 50.0 * eps * scale
+    if panel and p > 1:
+        V = jnp.take(S, top_idx, axis=1)            # (N, p)
+        Qnew, oks, rnorms, npasses = panel_imgs_orthogonalize(
+            V, Q, kappa, max_passes, thresh=thresh, backend=backend
+        )
+        slots_i = jnp.asarray(slots, jnp.int32)
+        Q = jax.lax.dynamic_update_slice(
+            Q, Qnew, (jnp.zeros((), jnp.int32), slots_i)
+        )
+        return Q, Qnew, oks, rnorms, npasses
+    qs, oks, rnorms, npasses = [], [], [], []
+    for i in range(p):  # p is small and static
+        v = jnp.take(S, top_idx[i], axis=1)
+        q, _, rnorm, n_pass = imgs_orthogonalize(
+            v, Q, kappa, max_passes, backend=backend
+        )
+        ok = rnorm > thresh
+        q = jnp.where(ok, q, jnp.zeros_like(q))
+        # fixed-slot write at slots+i; rejected candidates leave zero
+        # columns ("holes") that the driver compacts at the end
+        Q = Q.at[:, slots + i].set(q)
+        qs.append(q)
+        oks.append(ok)
+        rnorms.append(rnorm)
+        npasses.append(n_pass)
+    return (
+        Q,
+        jnp.stack(qs, axis=1),                      # rejected cols zero
+        jnp.asarray(oks),
+        jnp.stack([jnp.asarray(r) for r in rnorms]),
+        jnp.asarray(npasses, jnp.int32),
+    )
 
 
 def block_greedy_step(S, state: GreedyState, p: int, kappa: float = 2.0,
                       max_passes: int = 3,
                       backend: str | None = None,
-                      scale=None) -> GreedyState:
+                      scale=None, panel: bool = True) -> GreedyState:
     """Add up to p bases with a single Eq.-6.3 sweep over S.
 
-    Per-candidate orthogonalization and the blocked sweep route through
+    Block orthogonalization and the blocked sweep route through
     :mod:`repro.core.backend` (the sweep's fused kernel is
-    :func:`repro.core.backend.block_sweep`).  This is the eager per-block
-    step used by :func:`rb_greedy_block_stepwise`; the chunked driver runs
-    the same math inside a ``lax.while_loop`` (see
-    :func:`_block_chunk_impl`).
+    :func:`repro.core.backend.block_sweep`; ``panel=True`` additionally
+    runs the block's orthogonalization through the BLAS-3
+    :func:`repro.core.backend.panel_project` panel — see
+    :func:`_ortho_block`).  This is the eager per-block step used by
+    :func:`rb_greedy_block_stepwise`; the chunked driver runs the same
+    math inside a ``lax.while_loop`` (see :func:`_block_chunk_impl`).
 
     ``scale`` is the rank guard's reference column scale.  The greedy
     family fixes it at init (``sqrt(max |s_i|^2)``) so the guard measures
@@ -78,55 +134,42 @@ def block_greedy_step(S, state: GreedyState, p: int, kappa: float = 2.0,
     """
     res_sq = jnp.maximum(state.norms_sq - state.acc, 0.0)
     top_vals, top_idx = jax.lax.top_k(res_sq, p)
-    err = jnp.sqrt(top_vals[0])
 
     eps = jnp.finfo(state.norms_sq.dtype).eps
     if scale is None:
         scale = jnp.sqrt(jnp.max(state.norms_sq))
 
-    Q = state.Q
     k = state.k
-    new_qs = []
-    accepted = []
-    for i in range(p):  # p is small and static
-        v = jnp.take(S, top_idx[i], axis=1)
-        q, _, rnorm, _ = imgs_orthogonalize(v, Q, kappa, max_passes,
-                                            backend=backend)
-        ok = rnorm > 50.0 * eps * scale
-        q = jnp.where(ok, q, jnp.zeros_like(q))
-        # fixed-slot write at k+i; rejected candidates leave zero columns
-        # ("holes") that the driver compacts at the end
-        Q = Q.at[:, k + i].set(q)
-        new_qs.append(q)
-        accepted.append(ok)
-
-    Qnew = jnp.stack(new_qs, axis=1)           # (N, p), rejected cols zero
+    Q, Qnew, accepted, _, _ = _ortho_block(
+        S, state.Q, top_idx, k, p, kappa, max_passes, eps, scale,
+        backend, panel,
+    )
     # ONE pass over S: (p, M) block sweep through the dispatch layer
     C, acc = _backend.block_sweep(Qnew, S, state.acc, backend=backend)
 
     R = jax.lax.dynamic_update_slice_in_dim(state.R, C, k, axis=0)
     pivots = jax.lax.dynamic_update_slice_in_dim(
         state.pivots,
-        jnp.where(jnp.asarray(accepted), top_idx, -1).astype(jnp.int32),
+        jnp.where(accepted, top_idx, -1).astype(jnp.int32),
         k, axis=0,
     )
     errs = jax.lax.dynamic_update_slice_in_dim(
         state.errs, jnp.sqrt(jnp.maximum(top_vals, 0.0)), k, axis=0
     )
-    n_acc = jnp.sum(jnp.asarray(accepted, jnp.int32))
+    n_acc = jnp.sum(accepted.astype(jnp.int32))
     return state._replace(
         Q=Q, R=R, acc=acc, pivots=pivots, errs=errs, k=k + n_acc,
     )
 
 
 @functools.partial(
-    jax.jit, static_argnames=("p", "kappa", "max_passes", "backend")
+    jax.jit, static_argnames=("p", "kappa", "max_passes", "backend", "panel")
 )
 def _jitted_block_step(S, state, p: int, kappa: float = 2.0,
                        max_passes: int = 3, backend: str | None = None,
-                       scale=None):
+                       scale=None, panel: bool = True):
     return block_greedy_step(S, state, p, kappa, max_passes,
-                             backend=backend, scale=scale)
+                             backend=backend, scale=scale, panel=panel)
 
 
 def rb_greedy_block(
@@ -177,14 +220,17 @@ def _block_chunk_impl(
     max_passes: int = 3,
     backend: str | None = None,
     check_refresh: bool = True,
+    panel: bool = True,
 ):
     """Run up to ``chunk`` blocked greedy iterations device-resident.
 
     Each ``lax.while_loop`` round is one block: top-p residual selection,
-    joint IMGS of the p pivot columns against Q *including* the earlier
-    in-block picks (fixed-slot writes at ``k..k+p-1``), the in-block rank
-    guard (a candidate whose orthogonalization residual is rounding noise
-    becomes a zero "hole" column), and ONE fused panel sweep over S
+    joint IMGS of the p pivot columns against Q and against the earlier
+    in-block picks (by default through the BLAS-3 panel path — see
+    :func:`_ortho_block`; ``panel=False`` keeps the p-sequential
+    fixed-slot form), the in-block rank guard (a candidate whose
+    orthogonalization residual is rounding noise becomes a zero "hole"
+    column), and ONE fused panel sweep over S
     (:func:`repro.core.backend.block_sweep`).  ``state.k`` counts occupied
     SLOTS (holes included); the driver compacts at the end.
 
@@ -207,23 +253,11 @@ def _block_chunk_impl(
 
     def add_block(st, top_vals, top_idx):
         slots = st.k
-        Q = st.Q
-        qs, oks, rnorms, npasses = [], [], [], []
-        for i in range(p):  # p is small and static
-            v = jnp.take(S, top_idx[i], axis=1)
-            q, _, rnorm, n_pass = imgs_orthogonalize(
-                v, Q, kappa, max_passes, backend=backend
-            )
-            ok = rnorm > 50.0 * eps * scale
-            q = jnp.where(ok, q, jnp.zeros_like(q))
-            Q = Q.at[:, slots + i].set(q)
-            qs.append(q)
-            oks.append(ok)
-            rnorms.append(rnorm)
-            npasses.append(n_pass)
-        Qnew = jnp.stack(qs, axis=1)          # (N, p), rejected cols zero
+        Q, Qnew, oks_arr, rnorms, npasses = _ortho_block(
+            S, st.Q, top_idx, slots, p, kappa, max_passes, eps, scale,
+            backend, panel,
+        )
         C, acc = _backend.block_sweep(Qnew, S, st.acc, backend=backend)
-        oks_arr = jnp.asarray(oks)
         st = st._replace(
             Q=Q,
             R=jax.lax.dynamic_update_slice_in_dim(st.R, C, slots, axis=0),
@@ -239,21 +273,29 @@ def _block_chunk_impl(
                 slots, axis=0,
             ),
             rnorms=jax.lax.dynamic_update_slice_in_dim(
-                st.rnorms, jnp.asarray(rnorms).astype(rdt), slots, axis=0,
+                st.rnorms, rnorms.astype(rdt), slots, axis=0,
             ),
             n_passes=jax.lax.dynamic_update_slice_in_dim(
-                st.n_passes, jnp.asarray(npasses).astype(jnp.int32),
-                slots, axis=0,
+                st.n_passes, npasses.astype(jnp.int32), slots, axis=0,
             ),
             k=slots + p,
         )
         n_ok = jnp.sum(oks_arr.astype(jnp.int32))
         res_after = jnp.maximum(jnp.max(st.norms_sq - st.acc), 0.0)
+        # Post-block tau stop BEFORE the refresh trigger (the rb_greedy
+        # family's precedence: a tracked residual below tau means
+        # converged, even when it sits at the Eq.-(6.3) floor — matching
+        # the stepwise oracle's `err_now < tau` break.  Without it a
+        # floored-but-unconverged f32 build refreshes forever, each
+        # refresh reviving a residual the orthogonalization noise floor
+        # cannot actually reduce).
+        tau_hit = res_after < tau * tau
         refresh_hit = check_refresh & (res_after
                                        < refresh_safety * eps * ref_sq)
         stop = jnp.where(
             n_ok == 0, STOP_RANK,
-            jnp.where(refresh_hit, STOP_REFRESH, STOP_NONE),
+            jnp.where(tau_hit, STOP_TAU,
+                      jnp.where(refresh_hit, STOP_REFRESH, STOP_NONE)),
         ).astype(jnp.int32)
         return st, stop
 
@@ -279,6 +321,7 @@ def _block_chunk_impl(
 
 _BLOCK_CHUNK_STATICS = (
     "chunk", "p", "kappa", "max_passes", "backend", "check_refresh",
+    "panel",
 )
 
 # Non-donating variant: supports repeated application to one state
@@ -342,6 +385,9 @@ def _rb_greedy_block_impl(
     backend: str | None = None,
     chunk: int = 4,
     callback=None,
+    panel: bool = True,
+    adaptive: bool = False,
+    diagnostics: dict | None = None,
 ) -> GreedyResult:
     """Chunked device-resident blocked driver (the front door's
     ``strategy="block_greedy"``).
@@ -351,6 +397,21 @@ def _rb_greedy_block_impl(
     chunk boundaries.  Selects the same pivots as
     :func:`rb_greedy_block_stepwise` (asserted in
     tests/test_block_greedy.py) at ~chunk x fewer dispatches.
+
+    ``panel`` (default True) routes each block's orthogonalization through
+    the BLAS-3 panel path (:func:`_ortho_block`); ``panel=False`` keeps
+    the pre-panel p-sequential form (same span, different float summation
+    order).
+
+    ``adaptive`` treats ``p`` as a CEILING and retunes the live panel
+    width between chunks from the in-block rank guard's rejection rate —
+    the stale-pivot signal: rejections mean picks 2..p were made against
+    residuals that ignored picks 1..i-1 and collapsed once they arrived,
+    so the width halves; a clean chunk grows it back (doubling, capped at
+    ``p``).  The width trajectory is recorded in ``diagnostics`` (key
+    ``"p_trajectory"``: one ``{slots, p, rejected}`` entry per chunk)
+    when a dict is passed — the front door forwards it into the artifact
+    provenance.
 
     ``callback(state)`` fires once per chunk (the slot arrays carry the
     per-slot history up to ``state.k``, holes included); with a callback
@@ -374,7 +435,7 @@ def _rb_greedy_block_impl(
     if max_k is None:
         max_k = min(N, M)
     max_k = min(max_k, N, M)  # the accepted-basis cap
-    max_slots = min(max_k + p, min(N, M) + p)  # + hole headroom
+    max_slots = min(max_k + p, min(N, M) + p)  # + hole headroom (max p)
     # resolve pre-jit so the cache keys on the concrete backend name
     backend = _backend.resolve_backend(backend)
     state = greedy_init(S, max_slots)
@@ -389,15 +450,37 @@ def _rb_greedy_block_impl(
     # invalidate those retained buffers on accelerators
     chunk_fn = _block_chunk if callback is not None else \
         _block_chunk_donated
-    while int(state.k) + p <= max_slots:
+    p_live = p  # adaptive: current width, halved/regrown between chunks
+    trajectory = [] if diagnostics is not None else None
+    while int(state.k) + p_live <= max_slots:
+        slots_before = int(state.k)
         state, n_done, stop = chunk_fn(
             S, state, tau_d, scale_d, ref_sq_d, safety_d,
-            chunk=chunk, p=p, kappa=kappa, max_passes=max_passes,
+            chunk=chunk, p=p_live, kappa=kappa, max_passes=max_passes,
             backend=backend, check_refresh=(refresh == "auto"),
+            panel=panel,
         )
         if callback is not None:
             callback(state)
         stop = int(stop)
+        if adaptive or trajectory is not None:
+            slots_added = int(state.k) - slots_before
+            rejected = (
+                int(np.count_nonzero(np.asarray(
+                    state.pivots[slots_before:slots_before + slots_added]
+                ) < 0)) if slots_added else 0
+            )
+            if trajectory is not None:
+                trajectory.append({"slots": slots_before, "p": p_live,
+                                   "rejected": rejected})
+            if adaptive and slots_added:
+                rate = rejected / slots_added
+                if rate > 0.25 and p_live > 1:
+                    # staleness bites: most in-block picks collapse once
+                    # the earlier ones land — narrow the panel
+                    p_live = max(1, p_live // 2)
+                elif rejected == 0 and p_live < p:
+                    p_live = min(p, p_live * 2)
         if stop == STOP_TAU or stop == STOP_RANK:
             break
         if stop == STOP_REFRESH:
@@ -406,6 +489,8 @@ def _rb_greedy_block_impl(
             ref_sq_d = jnp.asarray(ref_sq, rdt)
             if ref_sq ** 0.5 < tau:
                 break
+    if diagnostics is not None:
+        diagnostics["p_trajectory"] = trajectory
     return _compact_result(state, max_k)
 
 
@@ -422,6 +507,7 @@ def rb_greedy_block_stepwise(
     refresh: str = "auto",
     refresh_safety: float = 100.0,
     backend: str | None = None,
+    panel: bool = True,
 ) -> GreedyResult:
     """The eager per-block driver: one jitted block step + host syncs per
     block.  Kept verbatim as the parity oracle for the chunked driver
@@ -453,7 +539,7 @@ def rb_greedy_block_stepwise(
         state = state._replace(k=jnp.asarray(slots, jnp.int32))
         state = _jitted_block_step(S, state, p=p, kappa=kappa,
                                    max_passes=max_passes, backend=backend,
-                                   scale=scale_d)
+                                   scale=scale_d, panel=panel)
         n_acc = int(state.k) - slots
         slots += p
         err = float(state.errs[slots - p])  # max residual before this block

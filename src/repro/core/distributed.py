@@ -51,6 +51,7 @@ from repro.core.greedy import (
     STOP_REFRESH,
     STOP_TAU,
     imgs_orthogonalize,
+    panel_imgs_orthogonalize,
 )
 
 
@@ -286,14 +287,17 @@ def _make_dist_greedy_chunk(mesh, chunk, kappa, max_passes, backend,
 
 
 def _make_local_block_chunk(axes, chunk, p, kappa, max_passes, backend,
-                            check_refresh):
+                            check_refresh, panel=True):
     """Per-device body of up to ``chunk`` BLOCKED greedy iterations (SPMD).
 
     One iteration selects the global top-p residual columns (local top-p +
     all-gather of the (value, column) pairs — the paper's
     ``MPI_Allreduce(MAXLOC)`` generalized to p winners), fetches the p
     pivot columns with one owner-masked psum, orthogonalizes them jointly
-    (in-block rank guard; rejected candidates leave zero "hole" columns),
+    (by default through the BLAS-3 panel path
+    :func:`repro.core.greedy.panel_imgs_orthogonalize`, replicated on
+    every device exactly like the stepwise driver's redundant IMGS;
+    in-block rank guard — rejected candidates leave zero "hole" columns),
     and updates the LOCAL shard's residuals with ONE fused panel sweep
     (:func:`repro.core.backend.block_sweep`) — one read of the shard per p
     bases.
@@ -336,22 +340,37 @@ def _make_local_block_chunk(axes, chunk, p, kappa, max_passes, backend,
             # ---- joint IMGS with the in-block rank guard ----
             slots = st.k
             Q = st.Q
-            qs, oks = [], []
-            for i in range(p):
-                q, _, rnorm, _ = imgs_orthogonalize(
-                    V[:, i], Q, kappa=kappa, max_passes=max_passes,
-                    backend=backend,
+            if panel:
+                Qnew, oks_p, _, _ = panel_imgs_orthogonalize(
+                    V, Q, kappa=kappa, max_passes=max_passes,
+                    thresh=50.0 * eps * scale, backend=backend,
                 )
-                ok = go & (rnorm > 50.0 * eps * scale)
-                q = jnp.where(ok, q, jnp.zeros_like(q))
-                Q = Q.at[:, slots + i].set(q)
-                qs.append(q)
-                oks.append(ok)
-            Qnew = jnp.stack(qs, axis=1)   # (N, p), rejected cols zero
+                # converged iterations (~go) compute a zero panel: V is
+                # all-zero (the owner mask includes go), so every rnorm
+                # is 0 and the guard already rejected — the explicit
+                # mask keeps the no-op invariant obvious
+                oks_arr = oks_p & go
+                Qnew = jnp.where(go, Qnew, jnp.zeros_like(Qnew))
+                Q = jax.lax.dynamic_update_slice(
+                    Q, Qnew, (jnp.zeros((), slots.dtype), slots)
+                )
+            else:
+                qs, oks = [], []
+                for i in range(p):
+                    q, _, rnorm, _ = imgs_orthogonalize(
+                        V[:, i], Q, kappa=kappa, max_passes=max_passes,
+                        backend=backend,
+                    )
+                    ok = go & (rnorm > 50.0 * eps * scale)
+                    q = jnp.where(ok, q, jnp.zeros_like(q))
+                    Q = Q.at[:, slots + i].set(q)
+                    qs.append(q)
+                    oks.append(ok)
+                Qnew = jnp.stack(qs, axis=1)  # (N, p), rejected cols zero
+                oks_arr = jnp.asarray(oks)
             # ---- ONE fused pass over the local shard ----
             C, acc = _backend.block_sweep(Qnew, S_loc, st.acc,
                                           backend=backend)
-            oks_arr = jnp.asarray(oks)
             st = st._replace(
                 Q=Q,
                 R=jax.lax.dynamic_update_slice_in_dim(st.R, C, slots,
@@ -372,13 +391,20 @@ def _make_local_block_chunk(axes, chunk, p, kappa, max_passes, backend,
             n_ok = jnp.sum(oks_arr.astype(jnp.int32))
             res_loc = jnp.maximum(jnp.max(st.norms_sq - st.acc), 0.0)
             res_after = jax.lax.pmax(res_loc, axes)
+            # post-block tau stop BEFORE the refresh trigger — the
+            # rb_greedy family precedence (see the resident blocked
+            # chunk): a floored-but-unconverged build must not refresh
+            # forever
+            tau_hit = res_after < tau * tau
             refresh_hit = check_refresh & (
                 res_after < refresh_safety * eps * ref_sq
             )
             stop = jnp.where(
                 ~go, STOP_TAU,
                 jnp.where(n_ok == 0, STOP_RANK,
-                          jnp.where(refresh_hit, STOP_REFRESH, STOP_NONE)),
+                          jnp.where(tau_hit, STOP_TAU,
+                                    jnp.where(refresh_hit, STOP_REFRESH,
+                                              STOP_NONE))),
             ).astype(jnp.int32)
             return (st, n + 1, stop)
 
@@ -399,27 +425,27 @@ def _make_local_block_chunk(axes, chunk, p, kappa, max_passes, backend,
 def make_dist_block_greedy_chunk(
     mesh: Mesh, chunk: int, p: int, kappa: float = 2.0, max_passes: int = 3,
     backend: str | None = None, check_refresh: bool = True,
-    donate: bool = True,
+    donate: bool = True, panel: bool = True,
 ):
     """Build the jitted device-resident BLOCKED chunk for a mesh: up to
     ``chunk`` blocked SPMD iterations (collectives included) per host
     round-trip, p bases per shard read."""
     return _make_dist_block_greedy_chunk(
         mesh, chunk, p, kappa, max_passes,
-        _backend.resolve_backend(backend), check_refresh, donate,
+        _backend.resolve_backend(backend), check_refresh, donate, panel,
     )
 
 
 @functools.lru_cache(maxsize=None)
 def _make_dist_block_greedy_chunk(mesh, chunk, p, kappa, max_passes,
-                                  backend, check_refresh, donate):
+                                  backend, check_refresh, donate, panel):
     axes = tuple(mesh.axis_names)
     specs = state_specs(mesh)
     s_spec = P(None, axes)
 
     sharded = shard_map(
         _make_local_block_chunk(axes, chunk, p, kappa, max_passes, backend,
-                                check_refresh),
+                                check_refresh, panel),
         mesh=mesh,
         in_specs=(s_spec, specs, P(), P(), P(), P()),
         out_specs=(specs, P(), P()),
@@ -462,6 +488,7 @@ def distributed_greedy(
     chunk: int = 16,
     backend: str | None = None,
     block_p: int = 1,
+    panel_ortho: bool = True,
 ) -> GreedyResult:
     """Driver mirroring :func:`repro.core.greedy.rb_greedy` on a mesh.
 
@@ -483,7 +510,9 @@ def distributed_greedy(
     its S shard once per p bases instead of once per basis.  The usual
     blocked trade-off applies (pivot staleness: a few extra bases on
     fast-decaying families; rank-rejected in-block candidates are
-    compacted away, so ``k`` counts accepted bases).
+    compacted away, so ``k`` counts accepted bases).  ``panel_ortho``
+    (default True) runs each block's replicated orthogonalization through
+    the BLAS-3 panel path (see :mod:`repro.core.block_greedy`).
 
     ``S`` may be anything :func:`repro.data.providers.as_provider`
     accepts; non-array sources are materialized before placement.
@@ -503,6 +532,7 @@ def distributed_greedy(
             S, tau, max_k, mesh, block_p, callback=callback,
             refresh=refresh, refresh_safety=refresh_safety, kappa=kappa,
             max_passes=max_passes, chunk=chunk, backend=backend,
+            panel=panel_ortho,
         )
 
     chunk_fn = make_dist_greedy_chunk(
@@ -570,6 +600,7 @@ def _distributed_block_greedy(
     max_passes: int = 3,
     chunk: int = 4,
     backend: str | None = None,
+    panel: bool = True,
 ) -> GreedyResult:
     """Blocked distributed driver body (see :func:`distributed_greedy`,
     ``block_p > 1``).  ``chunk`` counts BLOCKS per host round-trip;
@@ -590,6 +621,7 @@ def _distributed_block_greedy(
     chunk_fn = make_dist_block_greedy_chunk(
         mesh, chunk, p, kappa, max_passes, backend,
         check_refresh=(refresh == "auto"), donate=(callback is None),
+        panel=panel,
     )
     refresh_fn = make_dist_refresh(mesh)
     state = dist_greedy_init(S, max_slots, mesh)

@@ -121,6 +121,146 @@ def imgs_orthogonalize(
     return q, coeffs, rnorm, n_passes
 
 
+def panel_imgs_orthogonalize(
+    V: jax.Array,
+    Q: jax.Array,
+    kappa: float = 2.0,
+    max_passes: int = 3,
+    thresh=0.0,
+    backend: str | None = None,
+):
+    """BLAS-3 panel orthogonalization: p candidates against Q in one pass.
+
+    The blocked drivers' panel ortho hot path (classical panel
+    factorization, cf. Quintana-Orti's BLAS-3 QR / Demmel et al. CA-RRQR):
+
+    1. iterated classical-GS projection of the WHOLE (N, p) panel against
+       ``Q`` through :func:`repro.core.backend.panel_project` — one
+       (k, N) x (N, p) GEMM pair per pass instead of p GEMV chains — with
+       Hoffmann's kappa re-run test evaluated PER COLUMN on the panel's
+       post-update norms (converged columns are masked out of later
+       passes),
+    2. a within-panel sequential orthogonalization among the p candidates
+       themselves (candidate i against the finalized panel columns < i,
+       each via :func:`imgs_orthogonalize`'s iterated passes — O(p^2 N)
+       work, negligible next to step 1's O(k p N)),
+    3. the rank guard: a candidate whose final residual norm is not
+       strictly above ``thresh`` becomes a zero "hole" column, so later
+       candidates never orthogonalize against junk directions (zero
+       columns are exact no-ops in every projection),
+    4. a re-orthogonalization cycle (a second vs-Q panel pass + one
+       within-panel sweep) on the NORMALIZED panel — the BCGS2 "twice is
+       enough" pass, gated by Hoffmann's criterion applied to the
+       within-panel drop: it runs exactly when some accepted candidate
+       lost more than a ``kappa`` factor in step 2.  Step 2's large
+       within-panel subtractions reintroduce O(eps * |c|) components
+       along Q that step 1 cannot see, and normalizing a
+       marginally-accepted candidate amplifies them by ``|v| / rnorm``
+       (measured: percent-level defect on near-degenerate blocks);
+       re-projecting the unit columns removes them at O(k p N) extra —
+       the sequential path gets this for free because its iterated loop
+       projects against Q and the earlier picks jointly.  Well-separated
+       blocks (no within-panel cancellation) skip the cycle.
+
+    Returns ``(P, oks, rnorms, n_passes)``:
+      P:        (N, p) panel, orthonormal against Q and within itself;
+                rejected candidates are zero columns.
+      oks:      (p,) bool rank-guard verdicts (``rnorm > thresh``).
+      rnorms:   (p,) real residual norms after steps 1-3 (recorded even
+                when rejected, matching the stepwise drivers'
+                diagnostics; the step-4 renormalization is an O(eps)
+                correction on accepted columns).
+      n_passes: (p,) int32 — vs-Q panel passes (incl. the re-ortho cycle)
+                plus within-panel re-runs beyond the first (the
+                per-candidate nu_j analogue).
+
+    Spans the same space as p sequential :func:`imgs_orthogonalize` calls
+    with fixed-slot writes (the pre-panel blocked path): candidate i is
+    projected off Q and off the earlier in-block picks either way; only
+    the float summation order differs (parity asserted in
+    tests/test_block_greedy.py).
+    """
+    p = V.shape[1]
+    norms0 = jnp.linalg.norm(V, axis=0)                       # (p,) real
+
+    # First panel pass is unconditional (as in imgs_orthogonalize).
+    V1, _ = _backend.panel_project(V, Q, backend=backend)
+    norms1 = jnp.linalg.norm(V1, axis=0)
+
+    def rerun_mask(norm_prev, norm_cur, n_col):
+        return (norm_cur < norm_prev / kappa) & (n_col < max_passes)
+
+    def cond(state):
+        _, norm_prev, norm_cur, n_col = state
+        return jnp.any(rerun_mask(norm_prev, norm_cur, n_col))
+
+    def body(state):
+        V_cur, norm_prev, norm_cur, n_col = state
+        rerun = rerun_mask(norm_prev, norm_cur, n_col)
+        # Full panel re-projection; converged columns keep their value
+        # (the masked where below), so the per-column semantics match the
+        # scalar driver's — the extra FLOPs on converged columns are free
+        # next to the panel GEMM itself.
+        V_next, _ = _backend.panel_project(V_cur, Q, backend=backend)
+        norm_next = jnp.linalg.norm(V_next, axis=0)
+        return (
+            jnp.where(rerun[None, :], V_next, V_cur),
+            jnp.where(rerun, norm_cur, norm_prev),
+            jnp.where(rerun, norm_next, norm_cur),
+            n_col + rerun.astype(n_col.dtype),
+        )
+
+    V_fin, _, norms_q, n_col = jax.lax.while_loop(
+        cond, body, (V1, norms0, norms1, jnp.ones((p,), jnp.int32))
+    )
+
+    # Within-panel sequential orthogonalization (p is small and static):
+    # candidate i against the finalized panel columns < i.  Zero columns
+    # (later slots, rejected candidates) are exact no-ops.
+    P = jnp.zeros_like(V)
+    oks, rnorms, extra = [], [], []
+    for i in range(p):
+        q, _, rnorm, n_pass = imgs_orthogonalize(
+            V_fin[:, i], P, kappa, max_passes, backend=backend
+        )
+        ok = rnorm > thresh
+        q = jnp.where(ok, q, jnp.zeros_like(q))
+        P = P.at[:, i].set(q)
+        oks.append(ok)
+        rnorms.append(rnorm)
+        extra.append(n_pass - 1)  # re-runs beyond the unconditional pass
+    oks = jnp.asarray(oks)
+    rnorms = jnp.stack(rnorms)
+
+    # Re-orthogonalization cycle (step 4), gated per block: some accepted
+    # candidate dropped by more than kappa through the within-panel sweep
+    # — its normalization amplified rounding noise along Q/panel by the
+    # same factor.  Rejected (zero) columns project to zero and stay zero.
+    need_reortho = jnp.any(oks & (rnorms * kappa < norms_q))
+
+    def reortho(P_in):
+        P2, _ = _backend.panel_project(P_in, Q, backend=backend)
+        P_out = jnp.zeros_like(P_in)
+        for i in range(p):
+            v, _ = _backend.project_pass(P2[:, i], P_out, backend=backend)
+            nrm = jnp.linalg.norm(v)
+            safe = jnp.maximum(nrm, jnp.finfo(nrm.dtype).tiny)
+            q = jnp.where(oks[i], v / safe.astype(v.dtype),
+                          jnp.zeros_like(v))
+            P_out = P_out.at[:, i].set(q)
+        return P_out
+
+    P = jax.lax.cond(need_reortho, reortho, lambda P_in: P_in, P)
+
+    return (
+        P,
+        oks,
+        rnorms,
+        n_col + need_reortho.astype(jnp.int32) + jnp.asarray(extra,
+                                                             jnp.int32),
+    )
+
+
 class GreedyState(NamedTuple):
     """Carried state of the greedy iteration (checkpointable pytree).
 

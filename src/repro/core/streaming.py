@@ -60,7 +60,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import backend as _backend
-from repro.core.greedy import imgs_orthogonalize
+from repro.core.greedy import imgs_orthogonalize, panel_imgs_orthogonalize
 from repro.data.providers import SnapshotProvider, as_provider
 
 # v2: blocked streaming — the scalar pending/max-loc fields became
@@ -146,6 +146,11 @@ def _commit_panel(Q, P, slots):
 
 _jit_ortho = jax.jit(
     imgs_orthogonalize, static_argnames=("kappa", "max_passes", "backend")
+)
+
+_jit_panel_ortho = jax.jit(
+    panel_imgs_orthogonalize,
+    static_argnames=("kappa", "max_passes", "backend"),
 )
 
 
@@ -402,6 +407,7 @@ def rb_greedy_streamed(
     refresh: str = "auto",
     refresh_safety: float = 100.0,
     backend: str | None = None,
+    panel_ortho: bool = True,
     keep_R: bool = True,
     checkpoint_dir: str | os.PathLike | None = None,
     checkpoint_every_tiles: int = 0,
@@ -429,6 +435,12 @@ def rb_greedy_streamed(
         per tile), trading the blocked drivers' pivot staleness — the
         right trade whenever the stream is transfer-bound (see
         BENCH_streaming.json and the README "Choosing a strategy" guide).
+      panel_ortho: orthogonalize each pending block through the BLAS-3
+        panel path (:func:`repro.core.greedy.panel_imgs_orthogonalize`,
+        the resident blocked drivers' default) instead of p sequential
+        :func:`~repro.core.greedy.imgs_orthogonalize` calls.  Only
+        consulted at ``block_p > 1``; both span the same space (float
+        summation order differs).
       keep_R: accumulate the (max_k, M) R factor on host.  Disable for
         M so large that even one host row set is unwanted.
       checkpoint_dir: if set, persist streaming state via
@@ -538,41 +550,64 @@ def rb_greedy_streamed(
             if err < tau or st.best_cols[0] < 0:
                 break
             # --- joint IMGS of the block (in-block rank guard) ---------
-            Qwork = st.Q
             cols = np.asarray(st.best_cols)
-            qs, oks = [], []
             errs_blk = np.zeros((p,), np.float64)
             rnorms_blk = np.zeros((p,), np.float64)
             npass_blk = np.zeros((p,), np.int64)
-            for i in range(p):
-                j = int(cols[i])
-                if j < 0:  # fewer than p candidates exist (tiny M)
-                    qs.append(jnp.zeros((N,), dtype))
-                    oks.append(0)
-                    continue
-                v = prov.column(j)
-                q, _, rnorm_d, npass_d = _jit_ortho(
-                    v, Qwork, kappa=kappa, max_passes=max_passes,
-                    backend=backend,
+            thr = 50.0 * eps * st.scale
+            if p > 1 and panel_ortho:
+                # BLAS-3 panel path: one fused panel orthogonalization of
+                # all p candidate columns against Q (and each other) —
+                # the same primitive the resident blocked driver runs
+                # in-trace, so pivots/bases stay in lockstep with it.
+                vs = [prov.column(int(cols[i])) if cols[i] >= 0
+                      else jnp.zeros((N,), dtype) for i in range(p)]
+                V = jnp.stack([jnp.asarray(v, dtype) for v in vs], axis=1)
+                P_blk, oks_d, rnorms_d, npass_d = _jit_panel_ortho(
+                    V, st.Q, kappa=kappa, max_passes=max_passes,
+                    thresh=jnp.asarray(thr, rdt), backend=backend,
                 )
-                rnorm = float(rnorm_d)
-                # p=1 keeps the stepwise drivers' guard boundary (reject
-                # strictly below); p>1 the resident blocked driver's
-                # (accept strictly above) — they differ only at exact
-                # float equality, but each parity suite is bitwise.
-                thr = 50.0 * eps * st.scale
-                ok = (rnorm >= thr) if p == 1 else (rnorm > thr)
-                if not ok:
-                    # Numerical-rank rejection (same guard as the
-                    # in-memory drivers): a zero "hole" column.
-                    q = jnp.zeros((N,), dtype)
-                Qwork = Qwork.at[:, st.k + i].set(q)
-                qs.append(q)
-                oks.append(int(ok))
-                errs_blk[i] = float(np.sqrt(np.maximum(
-                    np.asarray(st.best_vals[i], rdt), rzero)))
-                rnorms_blk[i] = rnorm
-                npass_blk[i] = int(npass_d)
+                oks = [int(o) and int(cols[i]) >= 0
+                       for i, o in enumerate(np.asarray(oks_d))]
+                rnorms_blk[:] = np.asarray(rnorms_d, np.float64)
+                npass_blk[:] = np.asarray(npass_d, np.int64)
+                for i in range(p):
+                    if cols[i] >= 0:
+                        errs_blk[i] = float(np.sqrt(np.maximum(
+                            np.asarray(st.best_vals[i], rdt), rzero)))
+                qs = [P_blk[:, i] for i in range(p)]
+            else:
+                Qwork = st.Q
+                qs, oks = [], []
+                for i in range(p):
+                    j = int(cols[i])
+                    if j < 0:  # fewer than p candidates exist (tiny M)
+                        qs.append(jnp.zeros((N,), dtype))
+                        oks.append(0)
+                        continue
+                    v = prov.column(j)
+                    q, _, rnorm_d, npass_d = _jit_ortho(
+                        v, Qwork, kappa=kappa, max_passes=max_passes,
+                        backend=backend,
+                    )
+                    rnorm = float(rnorm_d)
+                    # p=1 keeps the stepwise drivers' guard boundary
+                    # (reject strictly below); p>1 the resident blocked
+                    # driver's (accept strictly above) — they differ only
+                    # at exact float equality, but each parity suite is
+                    # bitwise.
+                    ok = (rnorm >= thr) if p == 1 else (rnorm > thr)
+                    if not ok:
+                        # Numerical-rank rejection (same guard as the
+                        # in-memory drivers): a zero "hole" column.
+                        q = jnp.zeros((N,), dtype)
+                    Qwork = Qwork.at[:, st.k + i].set(q)
+                    qs.append(q)
+                    oks.append(int(ok))
+                    errs_blk[i] = float(np.sqrt(np.maximum(
+                        np.asarray(st.best_vals[i], rdt), rzero)))
+                    rnorms_blk[i] = rnorm
+                    npass_blk[i] = int(npass_d)
             if not any(oks):
                 # Whole block rank-rejected: numerical-rank exhaustion,
                 # stop WITHOUT committing (at block_p=1 this is exactly
@@ -666,13 +701,21 @@ def rb_greedy_streamed(
         # --- Eq.-(6.3) refresh near the cancellation floor ---------------
         # block_p=1 replicates rb_greedy_stepwise (trigger on the committed
         # pivot's pre-add err); block_p>1 the chunked blocked driver
-        # (trigger on the post-block max residual — the fold's top value).
+        # (trigger on the post-block max residual — the fold's top value,
+        # with the family's tau-stop precedence: a post-block residual
+        # already below tau means converged, so no refresh fires — the
+        # top-of-loop check breaks the build next round, matching the
+        # resident chunk's post-block STOP_TAU).
         if p == 1:
             floor_sq = err * err
+            tau_converged = False
         else:
             floor_sq = max(float(st.best_vals[0]), 0.0)
+            tau_converged = float(np.sqrt(np.maximum(
+                np.asarray(floor_sq, rdt), rzero))) < tau
         stop_after_refresh = False
-        if refresh == "auto" and floor_sq < refresh_safety * eps * st.ref_sq:
+        if (refresh == "auto" and not tau_converged
+                and floor_sq < refresh_safety * eps * st.ref_sq):
             new_norms = np.empty_like(st.norms_sq)
             best_vals = np.full((p,), -math.inf, np.float64)
             best_cols = np.full((p,), -1, np.int64)

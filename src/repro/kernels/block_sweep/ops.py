@@ -5,6 +5,12 @@ CPU interpret fallback.  The panel row count p is padded to a sublane
 multiple with zero rows (no-ops in the GEMMs and in the acc column sums);
 padded snapshot rows/columns are zero too, so C and acc are exact on the
 un-padded region.
+
+Precision note: the kernel accumulates C and acc in f32 (TPU MXU native),
+so f64/c128 inputs are reduced at f32 accuracy on this path — for builds
+whose tau sits below ~1e-7 use the ``xla``/``xla_ref`` backends, which
+keep full working precision (same caveat as
+:mod:`repro.kernels.imgs_project` / :mod:`repro.kernels.imgs_panel`).
 """
 
 from __future__ import annotations

@@ -1,0 +1,74 @@
+"""Public jit'd wrapper for the classical-GS panel projection pass.
+
+Complex panels are handled via the real embedding  z = x + iy  ↦  [x; y],
+A ↦ [[Ar, -Ai], [Ai, Ar]]  (a ring isomorphism, exactly as in
+:mod:`repro.kernels.imgs_project.ops`), under which ``C = Q^H V`` and
+``V' = V - Q C`` become the real kernel applied to the embedded operands:
+``embed(Q)^T stack(V) = stack(Q^H V)``.  This keeps one kernel for both
+dtypes; the production TPU path for the GW (complex) case feeds the planes
+directly.  For c64/f32 the kernel accumulates in f32 (TPU MXU native); use
+the ref path when f64-level precision is required on CPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.imgs_panel import kernel as _k
+from repro.kernels.common import (
+    LANES,
+    default_interpret,
+    validate_tiles,
+)
+from repro.kernels.common import pad_to as _pad_to
+from repro.kernels.common import round_up as _round_up
+
+_SUBLANES = 8  # f32 sublane count: the panel's row-padding quantum
+
+
+def imgs_panel(
+    V: jax.Array,
+    Q: jax.Array,
+    nt: int = 1024,
+    kt: int = 512,
+    interpret: bool | None = None,
+):
+    """One classical-GS panel pass: returns (V - Q Q^H V, Q^H V).
+
+    Args:
+      V: (N, p) candidate panel (zero columns are exact no-ops).
+      Q: (N, K) basis (zero columns are no-ops).
+      nt, kt: VMEM tile sizes (rows of Q, columns of Q).
+      interpret: force Pallas interpret mode; default: interpret unless the
+        backend is TPU.
+
+    Matches :func:`repro.kernels.imgs_panel.ref.imgs_panel_ref`.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    validate_tiles("imgs_panel", nt=nt, kt=kt)
+
+    N, K = Q.shape
+    p = V.shape[1]
+    if jnp.iscomplexobj(Q):
+        plane = jnp.float32 if Q.dtype == jnp.complex64 else jnp.float64
+        Ve = jnp.concatenate(
+            [V.real.astype(plane), V.imag.astype(plane)], axis=0
+        )  # (2N, p) stacked planes
+        Qr = Q.real.astype(plane)
+        Qi = Q.imag.astype(plane)
+        Qe = jnp.block([[Qr, -Qi], [Qi, Qr]])  # (2N, 2K) real embedding
+        Ve_out, Ce = imgs_panel(Ve, Qe, nt=nt, kt=kt, interpret=interpret)
+        V_out = (Ve_out[:N] + 1j * Ve_out[N:]).astype(Q.dtype)
+        C = (Ce[:K] + 1j * Ce[K:]).astype(Q.dtype)
+        return V_out, C
+
+    pp = _round_up(max(p, 1), _SUBLANES)
+    nt = min(nt, _round_up(N, LANES))
+    kt = min(kt, _round_up(K, LANES))
+    Np, Kp = _round_up(N, nt), _round_up(K, kt)
+    vt = _pad_to(_pad_to(V.T.astype(Q.dtype), pp, 0), Np, 1)
+    Qp = _pad_to(_pad_to(Q, Np, 0), Kp, 1)
+    vt_out, ct = _k.imgs_panel_real(vt, Qp, nt, kt, interpret)
+    return vt_out[:p, :N].T, ct[:p, :K].T

@@ -3,6 +3,11 @@ import os
 # Tests must see exactly ONE device (the dry-run forces 512 in its own
 # subprocess); also keep kernels in interpret mode on CPU.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+# Auto-strategy decisions must be deterministic under test: the one-time
+# roofline calibration would otherwise feed MEASURED (noisy-box) roofs into
+# the PR-4 decision table.  Tests that exercise the measurement itself
+# monkeypatch this back on.
+os.environ.setdefault("REPRO_ROOFLINE_MEASURE", "0")
 
 import jax  # noqa: E402
 

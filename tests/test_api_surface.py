@@ -55,6 +55,12 @@ def test_reduction_spec_fields_pinned():
         # blocked execution path (block_greedy / streamed / distributed)
         # into p pivots per sweep ("auto" may raise it, logged)
         ("block_p", 1),
+        # PR 5: blocked ortho goes BLAS-3 by default (panel_ortho); the
+        # resident blocked driver can retune the live panel width from
+        # the rank guard's rejection rate (adaptive_block, p-trajectory
+        # recorded in provenance)
+        ("panel_ortho", True),
+        ("adaptive_block", False),
         ("kappa", 2.0),
         ("max_passes", 3),
         ("refresh", "auto"),

@@ -442,6 +442,42 @@ def test_blocked_crash_resume_identical(tmp_path, dtype):
     np.testing.assert_array_equal(got.errs, ref.errs)
 
 
+def test_blocked_crash_resume_mid_panel(tmp_path):
+    """A checkpoint taken MID-PANEL — the pending block already
+    orthogonalized through the BLAS-3 panel path, its Eq.-(6.3) sweep only
+    partially applied — resumes to the bit-identical build.  Asserts the
+    restored state really was mid-panel (pending sweep, non-zero tile
+    cursor), so the test cannot silently degrade into a block-boundary
+    resume."""
+    from repro.checkpoint.io import load_checkpoint_raw
+    from repro.core.errors import orthogonality_defect
+
+    S = jnp.asarray(make_smooth_matrix(dtype=np.complex64))
+    tau, tile_m, p = 1e-3, 33, 4
+    ref = rb_greedy_streamed(ArrayProvider(S), tau=tau, tile_m=tile_m,
+                             block_p=p, panel_ortho=True)
+    ck = tmp_path / "ck"
+    # init = 4 tile fetches, block 1's sweep = 4 more: budget 10 dies on
+    # tile 2 of block 2's sweep, after the mid-sweep checkpoint of tile 1.
+    crashing = _CrashingProvider(S, 10)
+    with pytest.raises(IOError, match="injected crash"):
+        rb_greedy_streamed(crashing, tau=tau, tile_m=tile_m, block_p=p,
+                           panel_ortho=True, checkpoint_dir=ck,
+                           checkpoint_every_tiles=1)
+    tree = load_checkpoint_raw(str(ck))
+    assert int(tree["pending"]) == 1  # a panel sweep was in flight
+    assert int(tree["cursor"]) > 0   # ... and had covered >= 1 tile
+    assert np.any(np.asarray(tree["pending_Q"]) != 0)
+    got = rb_greedy_streamed(ArrayProvider(S), tau=tau, tile_m=tile_m,
+                             block_p=p, panel_ortho=True,
+                             checkpoint_dir=ck, resume=True)
+    assert got.k == ref.k
+    np.testing.assert_array_equal(got.pivots, ref.pivots)
+    np.testing.assert_array_equal(np.asarray(got.Q), np.asarray(ref.Q))
+    np.testing.assert_array_equal(got.R, ref.R)
+    assert float(orthogonality_defect(got.Q[:, :got.k])) < 1e-5
+
+
 def test_blocked_resume_block_p_mismatch_rejected(tmp_path):
     """The checkpointed pending panel and candidate folds are
     width-block_p: resuming under another width must be refused."""
