@@ -97,7 +97,10 @@ class ReducedBasis:
         writes a NEW step directory numbered past any existing steps
         (:meth:`load` reads the newest), so saving into a reused directory
         never shadows the fresh artifact behind stale higher-numbered
-        steps.  Returns the written step directory.
+        steps.  The step's manifest carries a ``final`` commit marker: it
+        only exists once the atomic rename lands, so a crash mid-save
+        leaves nothing :meth:`load` would ever observe.  Returns the
+        written step directory.
         """
         from repro.checkpoint.io import latest_step, save_checkpoint
 
@@ -114,22 +117,54 @@ class ReducedBasis:
         if self.R is not None:
             tree["R"] = np.asarray(self.R)
         last = latest_step(directory)
-        return save_checkpoint(tree, directory,
-                               0 if last is None else last + 1)
+        out = save_checkpoint(tree, directory,
+                              0 if last is None else last + 1,
+                              meta={"final": True})
+        object.__setattr__(self, "_directory", directory)
+        return out
+
+    @property
+    def directory(self) -> Optional[str]:
+        """Where this basis was last saved/loaded from (None if neither)."""
+        return getattr(self, "_directory", None)
 
     @classmethod
     def load(cls, directory: str) -> "ReducedBasis":
-        """Load a basis saved by :meth:`save` (bit-identical arrays)."""
-        from repro.checkpoint.io import load_checkpoint_raw
+        """Load a basis saved by :meth:`save` (bit-identical arrays).
 
-        tree = load_checkpoint_raw(directory)
+        Scans step directories newest-first and returns the newest INTACT
+        artifact step: corrupt steps (CRC mismatch, truncated manifest)
+        and non-artifact steps (e.g. a raw driver checkpoint written into
+        the same directory by mistake) are skipped with the next-newest
+        tried, so one damaged save never strands the artifact.
+        """
+        from repro.checkpoint.io import list_steps, load_checkpoint_raw
+
+        steps = list_steps(directory)
+        if not steps:
+            raise FileNotFoundError(f"no artifact steps in {directory}")
+        errors = []
+        for s in reversed(steps):
+            try:
+                tree = load_checkpoint_raw(directory, s)
+                if "artifact_version" not in tree:
+                    raise KeyError(
+                        f"step {s} has no artifact_version leaf "
+                        f"(not a ReducedBasis artifact)")
+                break
+            except (IOError, KeyError) as e:
+                errors.append(str(e))
+        else:
+            raise IOError(
+                f"no intact ReducedBasis artifact in {directory}; tried "
+                f"steps {list(reversed(steps))}: " + "; ".join(errors))
         version = int(tree["artifact_version"])
         if version != _ARTIFACT_VERSION:
             raise ValueError(
                 f"ReducedBasis artifact version {version} != supported "
                 f"{_ARTIFACT_VERSION}"
             )
-        return cls(
+        basis = cls(
             Q=jnp.asarray(tree["Q"]),
             pivots=tree["pivots"],
             errs=tree["errs"],
@@ -137,6 +172,62 @@ class ReducedBasis:
             R=tree.get("R"),
             provenance=json.loads(str(tree["provenance_json"])),
         )
+        object.__setattr__(basis, "_directory", directory)
+        return basis
+
+    # ------------------------------------------------------- enrichment ----
+    def enrich(self, source, tau: Optional[float] = None,
+               max_k: Optional[int] = None, tile_m: int = 8192,
+               save: bool = True, **stream_kwargs) -> "ReducedBasis":
+        """Extend this basis with new snapshots; returns the grown basis.
+
+        Streams the columns of ``source`` (anything
+        :func:`repro.data.providers.as_provider` accepts) through the
+        greedy driver warm-started from this basis's Q: existing bases are
+        kept verbatim (bit-identical leading columns), and new bases are
+        appended only where ``source`` has residual above ``tau``
+        (default: the original build's tau, else 1e-6).  Pivot indices
+        ``< self.k`` refer to the ORIGINAL build's source; new pivots
+        index ``source``.
+
+        When this basis is directory-backed (:attr:`directory` set by
+        :meth:`save`/:meth:`load`) and ``save=True``, the enriched basis
+        is saved there as a NEW artifact step — the old artifact remains
+        on disk one step back, and the save is atomic like any other.
+        """
+        from repro.core.greedy import STOP_NAMES
+        from repro.core.streaming import rb_greedy_streamed
+
+        if tau is None:
+            tau = float(self.provenance.get("tau", 1e-6))
+        warm = {
+            "Q": self.Q,
+            "pivots": np.asarray(self.pivots),
+            "errs": np.asarray(self.errs),
+        }
+        res = rb_greedy_streamed(
+            source, tau=tau, max_k=max_k, tile_m=tile_m,
+            warm_start=warm, **stream_kwargs,
+        )
+        k = int(res.k)
+        provenance = {
+            **self.provenance,
+            "enriched_from_k": int(self.k),
+            "enrich_tau": tau,
+            "stop": STOP_NAMES.get(int(res.stop), str(int(res.stop))),
+        }
+        basis = ReducedBasis(
+            Q=res.Q[:, :k],
+            pivots=np.asarray(res.pivots[:k]),
+            errs=np.asarray(res.errs[:k]),
+            k=k,
+            R=None if res.R is None else np.asarray(res.R[:k]),
+            provenance=provenance,
+        )
+        directory = self.directory
+        if save and directory is not None:
+            basis.save(directory)
+        return basis
 
     def __repr__(self) -> str:  # compact, log-friendly
         p = self.provenance

@@ -210,18 +210,28 @@ def _auto_strategy(spec: ReductionSpec, shape, dtype):
 # Each returns (Q, pivots, errs, R, k, extras) with the arrays TRIMMED to
 # the accepted rank and bit-identical to the corresponding legacy driver's
 # (sliced) output; ``extras`` is a JSON-serializable dict merged into the
-# artifact provenance (e.g. the adaptive driver's panel-width trajectory).
+# artifact provenance (e.g. the adaptive driver's panel-width trajectory,
+# the greedy family's terminal stop code).  ``ckpt_dir`` is the resolved
+# mid-build checkpoint directory (the workdir's ``build/`` scratch, or
+# ``spec.checkpoint_dir``); ``pod``/``mgs`` are single-shot factorizations
+# with nothing to checkpoint and ignore it.
 
 
 def _trim_greedy(res, extras=None):
+    from repro.core.greedy import STOP_NAMES
+
     k = int(res.k)
+    extras = dict(extras or {})
+    stop = getattr(res, "stop", None)
+    if stop is not None:
+        extras["stop"] = STOP_NAMES.get(int(stop), str(int(stop)))
     return (res.Q[:, :k], np.asarray(res.pivots[:k]),
             np.asarray(res.errs[:k]),
             None if res.R is None else np.asarray(res.R[:k]), k,
-            extras or {})
+            extras)
 
 
-def _build_greedy(spec, S):
+def _build_greedy(spec, S, ckpt_dir=None):
     from repro.core.greedy import rb_greedy
 
     return _trim_greedy(rb_greedy(
@@ -229,10 +239,11 @@ def _build_greedy(spec, S):
         max_passes=spec.max_passes, callback=spec.callback,
         refresh=spec.refresh, refresh_safety=spec.refresh_safety,
         chunk=spec.chunk, backend=spec.backend,
+        checkpoint_dir=ckpt_dir, resume=spec.resume,
     ))
 
 
-def _build_block_greedy(spec, S):
+def _build_block_greedy(spec, S, ckpt_dir=None):
     from repro.core.block_greedy import _rb_greedy_block_impl
 
     # spec.chunk counts greedy ITERATIONS per device-resident chunk; the
@@ -246,11 +257,12 @@ def _build_block_greedy(spec, S):
         chunk=max(1, spec.chunk // max(spec.block_p, 1)),
         callback=spec.callback, panel=spec.panel_ortho,
         adaptive=spec.adaptive_block, diagnostics=diag,
+        checkpoint_dir=ckpt_dir, resume=spec.resume,
     )
     return _trim_greedy(res, diag)
 
 
-def _build_distributed(spec, S):
+def _build_distributed(spec, S, ckpt_dir=None):
     from repro.core.distributed import distributed_greedy
 
     if spec.mesh is None:
@@ -263,10 +275,11 @@ def _build_distributed(spec, S):
         refresh_safety=spec.refresh_safety, kappa=spec.kappa,
         max_passes=spec.max_passes, chunk=spec.chunk, backend=spec.backend,
         block_p=spec.block_p, panel_ortho=spec.panel_ortho,
+        checkpoint_dir=ckpt_dir, resume=spec.resume,
     ))
 
 
-def _build_streamed(spec, _S_unused=None):
+def _build_streamed(spec, _S_unused=None, ckpt_dir=None):
     from repro.core.streaming import rb_greedy_streamed
 
     res = rb_greedy_streamed(
@@ -275,17 +288,14 @@ def _build_streamed(spec, _S_unused=None):
         max_passes=spec.max_passes, refresh=spec.refresh,
         refresh_safety=spec.refresh_safety, backend=spec.backend,
         panel_ortho=spec.panel_ortho,
-        keep_R=spec.keep_R, checkpoint_dir=spec.checkpoint_dir,
+        keep_R=spec.keep_R, checkpoint_dir=ckpt_dir,
         checkpoint_every_tiles=spec.checkpoint_every_tiles,
         resume=spec.resume, callback=spec.callback,
     )
-    k = int(res.k)
-    return (res.Q[:, :k], np.asarray(res.pivots[:k]),
-            np.asarray(res.errs[:k]),
-            None if res.R is None else np.asarray(res.R[:k]), k, {})
+    return _trim_greedy(res)
 
 
-def _build_mgs(spec, S):
+def _build_mgs(spec, S, ckpt_dir=None):
     from repro.core.mgs import _mgs_pivoted_qr_impl
 
     res = _mgs_pivoted_qr_impl(S, tau=spec.tau, max_k=spec.max_k)
@@ -293,7 +303,7 @@ def _build_mgs(spec, S):
             np.asarray(res.R), int(res.k), {})
 
 
-def _build_pod(spec, S):
+def _build_pod(spec, S, ckpt_dir=None):
     from repro.core.pod import pod
 
     res = pod(S, tau=spec.tau)
@@ -342,6 +352,36 @@ def build_basis(spec: ReductionSpec | None = None,
     from repro.core.backend import resolve_backend
     from repro.data.providers import as_provider, materialize_source
 
+    # ------------------------------------------- workdir build lifecycle --
+    # A workdir owns the whole build: mid-build checkpoints in
+    # <workdir>/build/, the finished basis finalized atomically into
+    # <workdir> itself, scratch removed on success.  Crash anywhere +
+    # relaunch with resume=True lands on the identical artifact.
+    build_dir = None
+    if spec.workdir is not None:
+        build_dir = os.path.join(spec.workdir, "build")
+        if spec.resume:
+            try:
+                basis = ReducedBasis.load(spec.workdir)
+            except (FileNotFoundError, IOError):
+                pass  # nothing finalized yet: (re)build below
+            else:
+                # Already finalized (e.g. the previous run died between
+                # finalize and scratch cleanup): return it, finish the GC.
+                import shutil
+
+                shutil.rmtree(build_dir, ignore_errors=True)
+                logger.info("workdir %s already holds a finalized basis; "
+                            "returning it", spec.workdir)
+                return basis
+        else:
+            # A fresh (non-resume) build must not splice onto a previous
+            # run's checkpoints.
+            import shutil
+
+            shutil.rmtree(build_dir, ignore_errors=True)
+    ckpt_dir = build_dir if build_dir is not None else spec.checkpoint_dir
+
     strategy = spec.strategy
     if strategy == "streamed":
         shape, dtype = (p := as_provider(spec.source)).shape, p.dtype
@@ -366,7 +406,7 @@ def build_basis(spec: ReductionSpec | None = None,
 
     build = _BUILDERS[strategy]
     t0 = time.perf_counter()
-    Q, pivots, errs, R, k, extras = build(spec, S)
+    Q, pivots, errs, R, k, extras = build(spec, S, ckpt_dir)
     jax.block_until_ready(Q)
     wall = time.perf_counter() - t0
 
@@ -385,8 +425,18 @@ def build_basis(spec: ReductionSpec | None = None,
         "repro_version": _repro_version(),
         **extras,
     }
-    return ReducedBasis(Q=Q, pivots=pivots, errs=errs, k=k, R=R,
-                        provenance=provenance)
+    basis = ReducedBasis(Q=Q, pivots=pivots, errs=errs, k=k, R=R,
+                         provenance=provenance)
+    if spec.workdir is not None:
+        # Finalize: atomic save into the workdir, THEN drop the build
+        # scratch.  A crash between the two leaves a finalized artifact
+        # plus orphan scratch, which the resume path above garbage-collects
+        # on the next launch.
+        import shutil
+
+        basis.save(spec.workdir)
+        shutil.rmtree(build_dir, ignore_errors=True)
+    return basis
 
 
 def _repro_version() -> str:

@@ -78,8 +78,20 @@ class ReductionSpec:
         (greedy family; ``"never"`` is the paper-faithful mode).
       keep_R: accumulate the (k, M) R factor (``streamed``; the one result
         piece that scales with M).
+      workdir: directory owning the build's full lifecycle (any greedy
+        strategy).  Mid-build checkpoints go to ``<workdir>/build/`` and
+        on completion the finished basis is finalized atomically into
+        ``<workdir>`` itself (a ``final``-tagged artifact step) and the
+        build scratch is removed — a crash at ANY point (including
+        mid-finalize) plus a relaunch with ``resume=True`` lands on the
+        identical artifact, and :meth:`repro.api.ReducedBasis.load` never
+        observes a partial one.  Mutually exclusive with
+        ``checkpoint_dir`` (which is the raw driver-level knob).
       checkpoint_dir / checkpoint_every_tiles / resume: mid-build
-        checkpointing (``streamed``).
+        checkpointing (greedy strategies; ``checkpoint_every_tiles`` is
+        ``streamed``-only).  ``resume`` also governs :attr:`workdir`
+        (resume the build, or return the finished artifact if one is
+        already finalized there).
       callback: per-progress callback, forwarded verbatim to the driver
         (chunk-cadence for ``greedy``/``distributed``, per-basis dict for
         ``streamed``).
@@ -113,6 +125,7 @@ class ReductionSpec:
     refresh: str = "auto"
     refresh_safety: float = 100.0
     keep_R: bool = True
+    workdir: Optional[str] = None
     checkpoint_dir: Optional[str] = None
     checkpoint_every_tiles: int = 0
     resume: bool = False
@@ -129,6 +142,11 @@ class ReductionSpec:
             )
         if self.source is None:
             raise ValueError("ReductionSpec requires a source")
+        if self.workdir is not None and self.checkpoint_dir is not None:
+            raise ValueError(
+                "workdir and checkpoint_dir are mutually exclusive: "
+                "workdir manages its own build/ checkpoint directory"
+            )
 
     @classmethod
     def waveform(cls, f, m1s, m2s, dtype=None, normalize: bool = True,

@@ -1,9 +1,10 @@
 from repro.checkpoint.io import (
     save_checkpoint, restore_checkpoint, load_checkpoint_raw, latest_step,
-    AsyncCheckpointer,
+    list_steps, load_manifest, prune_steps, AsyncCheckpointer,
 )
 
 __all__ = [
     "save_checkpoint", "restore_checkpoint", "load_checkpoint_raw",
-    "latest_step", "AsyncCheckpointer",
+    "latest_step", "list_steps", "load_manifest", "prune_steps",
+    "AsyncCheckpointer",
 ]

@@ -22,11 +22,82 @@ import os
 import re
 import shutil
 import threading
+import time
 import zlib
 from typing import Any, Optional
 
 import jax
 import numpy as np
+
+
+def _fault_once(kind: str) -> bool:
+    """True if the env-keyed fault ``kind`` should fire now.
+
+    ``REPRO_FAULT_ONCE=<path>`` arms at-most-once semantics across process
+    restarts: the first firing creates ``<path>.<kind>`` and later calls see
+    it and stay quiet — so a supervised relaunch is not re-injured by the
+    same fault.  Without the marker the fault fires on every save.
+    """
+    marker = os.environ.get("REPRO_FAULT_ONCE")
+    if not marker:
+        return True
+    marker = f"{marker}.{kind}"
+    if os.path.exists(marker):
+        return False
+    with open(marker, "w") as f:
+        f.write(kind)
+    return True
+
+
+def _inject_post_save_faults(final: str, manifest: dict) -> None:
+    """Env-keyed corruption faults, applied AFTER the atomic rename.
+
+    These simulate silent disk corruption of an already-committed step (bit
+    rot, torn write on a non-atomic filesystem):
+
+      REPRO_FAULT_CORRUPT_LEAF=<name|any>  flip a byte in that leaf's .npy
+      REPRO_FAULT_TRUNCATE_MANIFEST=1      cut manifest.json in half
+
+    Both honor REPRO_FAULT_ONCE (see :func:`_fault_once`).  Test-only.
+    """
+    leaf = os.environ.get("REPRO_FAULT_CORRUPT_LEAF")
+    if leaf and _fault_once("corrupt_leaf"):
+        names = [m["name"] for m in manifest["leaves"]]
+        victim = names[0] if leaf == "any" else leaf
+        if victim in names:
+            p = os.path.join(final, victim + ".npy")
+            with open(p, "r+b") as f:
+                f.seek(max(os.path.getsize(p) - 1, 0))
+                b = f.read(1)
+                f.seek(max(os.path.getsize(p) - 1, 0))
+                f.write(bytes([b[0] ^ 0xFF]) if b else b"\xff")
+    if os.environ.get("REPRO_FAULT_TRUNCATE_MANIFEST") and \
+            _fault_once("truncate_manifest"):
+        p = os.path.join(final, "manifest.json")
+        with open(p, "r+b") as f:
+            f.truncate(max(os.path.getsize(p) // 2, 1))
+
+
+def _gc_orphan_tmps(directory: str, min_age_s: float = 0.0) -> None:
+    """Remove ``step_*.tmp`` dirs left behind by a crash mid-save.
+
+    ``min_age_s`` guards the scan-time path (:func:`latest_step`) against
+    racing a concurrent in-flight save from another process: only tmps
+    whose mtime is older than the threshold are collected.
+    """
+    if not os.path.isdir(directory):
+        return
+    now = time.time()
+    for d in os.listdir(directory):
+        if not re.fullmatch(r"step_\d+\.tmp", d):
+            continue
+        p = os.path.join(directory, d)
+        try:
+            if min_age_s and now - os.path.getmtime(p) < min_age_s:
+                continue
+            shutil.rmtree(p)
+        except OSError:
+            pass
 
 
 def _leaf_name(path) -> str:
@@ -43,8 +114,16 @@ def _leaf_name(path) -> str:
     return "__".join(parts) if parts else "leaf"
 
 
-def save_checkpoint(tree: Any, directory: str, step: int) -> str:
-    """Atomic synchronous save; returns the final directory."""
+def save_checkpoint(tree: Any, directory: str, step: int,
+                    meta: Optional[dict] = None) -> str:
+    """Atomic synchronous save; returns the final directory.
+
+    ``meta`` (JSON-serializable dict) is merged into the manifest under the
+    ``"meta"`` key — callers use it to tag a step (e.g. the artifact layer's
+    ``{"final": true}`` commit marker) without adding pytree leaves.  Any
+    orphaned ``step_*.tmp`` left by an earlier crash is collected first.
+    """
+    _gc_orphan_tmps(directory)
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = final + ".tmp"
     if os.path.exists(tmp):
@@ -53,6 +132,8 @@ def save_checkpoint(tree: Any, directory: str, step: int) -> str:
 
     leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
     manifest = {"step": step, "leaves": []}
+    if meta:
+        manifest["meta"] = dict(meta)
     for path, leaf in leaves:
         name = _leaf_name(path)
         arr = np.asarray(jax.device_get(leaf))
@@ -67,21 +148,77 @@ def save_checkpoint(tree: Any, directory: str, step: int) -> str:
         )
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
+    # Env-keyed crash fault: die with the step fully written but NOT yet
+    # renamed — the exact window an atomic-commit bug would corrupt.  Fires
+    # only on finalize saves (meta final=True) so build checkpoints in the
+    # same process are unaffected; honors REPRO_FAULT_ONCE.  Test-only.
+    if (os.environ.get("REPRO_FAULT_KILL_AT_FINALIZE")
+            and meta and meta.get("final")
+            and _fault_once("kill_at_finalize")):
+        os._exit(int(os.environ.get("REPRO_FAULT_EXIT_CODE", "42")))
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
+    _inject_post_save_faults(final, manifest)
     return final
 
 
-def latest_step(directory: str) -> Optional[int]:
+def list_steps(directory: str) -> list[int]:
+    """All complete step numbers in ``directory``, ascending."""
     if not os.path.isdir(directory):
-        return None
-    steps = [
+        return []
+    return sorted(
         int(m.group(1))
         for d in os.listdir(directory)
         if (m := re.fullmatch(r"step_(\d+)", d))
-    ]
+    )
+
+
+def latest_step(directory: str) -> Optional[int]:
+    # Opportunistic GC of crash orphans; age-gated so a concurrent
+    # in-flight save from another process is never swept.
+    _gc_orphan_tmps(directory, min_age_s=3600.0)
+    steps = list_steps(directory)
     return max(steps) if steps else None
+
+
+def prune_steps(directory: str, keep: int) -> None:
+    """Delete all but the newest ``keep`` complete steps (best-effort)."""
+    steps = list_steps(directory)
+    for s in steps[:-keep] if keep > 0 else steps:
+        try:
+            shutil.rmtree(os.path.join(directory, f"step_{s:08d}"))
+        except OSError:
+            pass
+
+
+def load_manifest(directory: str, step: int) -> dict:
+    """Read a step's manifest.json (raises with the offending path)."""
+    p = os.path.join(directory, f"step_{step:08d}", "manifest.json")
+    try:
+        with open(p) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        raise IOError(f"unreadable manifest {p}: {e}") from e
+
+
+def _load_step_verified(directory: str, step: int,
+                        names=None) -> dict[str, np.ndarray]:
+    d = os.path.join(directory, f"step_{step:08d}")
+    manifest = load_manifest(directory, step)
+    out = {}
+    for meta in manifest["leaves"]:
+        if names is not None and meta["name"] not in names:
+            continue
+        p = os.path.join(d, meta["name"] + ".npy")
+        try:
+            arr = np.load(p)
+        except (OSError, ValueError) as e:
+            raise IOError(f"unreadable leaf {p}: {e}") from e
+        if zlib.crc32(arr.tobytes()) != meta["crc32"]:
+            raise IOError(f"crc mismatch for {meta['name']} in {p}")
+        out[meta["name"]] = arr
+    return out
 
 
 def load_checkpoint_raw(directory: str, step: Optional[int] = None,
@@ -93,23 +230,28 @@ def load_checkpoint_raw(directory: str, step: Optional[int] = None,
     driver's resume path) can instead read the manifest directly.  CRCs are
     verified; arrays come back as host numpy.  ``names`` (optional set)
     restricts loading to those leaves — untouched leaves pay no I/O.
+
+    With ``step=None`` (newest), a corrupt or truncated step — CRC
+    mismatch, unreadable leaf, or unreadable manifest — is *skipped* and
+    the scan falls back to the next-newest intact step, so one bad step
+    never strands an otherwise resumable run.  An explicitly requested
+    ``step`` is loaded verbatim: corruption raises, with the offending
+    file path in the message.
     """
-    if step is None:
-        step = latest_step(directory)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {directory}")
-    d = os.path.join(directory, f"step_{step:08d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
-    out = {}
-    for meta in manifest["leaves"]:
-        if names is not None and meta["name"] not in names:
-            continue
-        arr = np.load(os.path.join(d, meta["name"] + ".npy"))
-        if zlib.crc32(arr.tobytes()) != meta["crc32"]:
-            raise IOError(f"crc mismatch for {meta['name']}")
-        out[meta["name"]] = arr
-    return out
+    if step is not None:
+        return _load_step_verified(directory, step, names=names)
+    steps = list_steps(directory)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    errors = []
+    for s in reversed(steps):
+        try:
+            return _load_step_verified(directory, s, names=names)
+        except (IOError, KeyError) as e:
+            errors.append(str(e))
+    raise IOError(
+        f"no intact checkpoint in {directory}; tried steps "
+        f"{list(reversed(steps))}: " + "; ".join(errors))
 
 
 def restore_checkpoint(target: Any, directory: str,

@@ -48,14 +48,20 @@ from repro.core import backend as _backend
 from repro.core.greedy import (
     GreedyResult,
     GreedyState,
+    STOP_FLOOR,
     STOP_NONE,
     STOP_RANK,
     STOP_REFRESH,
     STOP_TAU,
+    _validate_resident_tree,
+    floor_estimate,
     greedy_init,
     greedy_refresh,
     imgs_orthogonalize,
+    load_resident_checkpoint,
     panel_imgs_orthogonalize,
+    resident_state_from_tree,
+    save_resident_checkpoint,
 )
 
 
@@ -336,7 +342,7 @@ _block_chunk_donated = jax.jit(
 )
 
 
-def _compact_result(state, max_k: int) -> GreedyResult:
+def _compact_result(state, max_k: int, stop: int = STOP_NONE) -> GreedyResult:
     """Drop hole columns (rejected in-block candidates) from the slot
     buffers: keep unit columns of Q and their matching R rows / pivots /
     errs / diagnostics, capped at ``max_k`` accepted bases (the slot
@@ -370,6 +376,7 @@ def _compact_result(state, max_k: int) -> GreedyResult:
         k=jnp.asarray(k, jnp.int32),
         n_ortho_passes=n_passes,
         rnorms=rnorms,
+        stop=stop,
     )
 
 
@@ -388,6 +395,8 @@ def _rb_greedy_block_impl(
     panel: bool = True,
     adaptive: bool = False,
     diagnostics: dict | None = None,
+    checkpoint_dir: str | None = None,
+    resume: bool = False,
 ) -> GreedyResult:
     """Chunked device-resident blocked driver (the front door's
     ``strategy="block_greedy"``).
@@ -418,6 +427,11 @@ def _rb_greedy_block_impl(
     set the chunk does not donate the state buffers, mirroring
     :func:`repro.core.greedy.rb_greedy`.
 
+    ``checkpoint_dir``/``resume`` mirror :func:`repro.core.greedy.rb_greedy`
+    (state + done/stop persisted after each chunk's stop handling; the
+    adaptive live width rides along, the diagnostics trajectory does not —
+    it is provenance, not replay state).
+
     Note: rejected in-block candidates leave zero "hole" columns inside the
     Q slot buffer during the build; the driver compacts them away at the
     end and caps the result at ``max_k``, so the returned ``k`` counts
@@ -440,8 +454,25 @@ def _rb_greedy_block_impl(
     backend = _backend.resolve_backend(backend)
     state = greedy_init(S, max_slots)
     rdt = state.norms_sq.dtype
+    eps = float(jnp.finfo(rdt).eps)
     ref_sq = float(jnp.max(state.norms_sq))
     scale = ref_sq ** 0.5  # fixed global column scale for the rank guard
+    done = False
+    final_stop = STOP_NONE
+    p_live = p  # adaptive: current width, halved/regrown between chunks
+    seq = 0
+    if checkpoint_dir is not None:
+        from repro.checkpoint.io import latest_step
+
+        tree = load_resident_checkpoint(checkpoint_dir) if resume else None
+        if tree is not None:
+            _validate_resident_tree(tree, N, M, max_slots, state.Q.dtype,
+                                    "resume checkpoint")
+            st_host, ref_sq, scale, done, final_stop = \
+                resident_state_from_tree(tree)
+            state = GreedyState(*(jnp.asarray(x) for x in st_host))
+            p_live = int(tree.get("p_live", p))
+        seq = latest_step(checkpoint_dir) or 0
     tau_d = jnp.asarray(tau, rdt)
     scale_d = jnp.asarray(scale, rdt)
     safety_d = jnp.asarray(refresh_safety, rdt)
@@ -450,9 +481,8 @@ def _rb_greedy_block_impl(
     # invalidate those retained buffers on accelerators
     chunk_fn = _block_chunk if callback is not None else \
         _block_chunk_donated
-    p_live = p  # adaptive: current width, halved/regrown between chunks
     trajectory = [] if diagnostics is not None else None
-    while int(state.k) + p_live <= max_slots:
+    while not done and int(state.k) + p_live <= max_slots:
         slots_before = int(state.k)
         state, n_done, stop = chunk_fn(
             S, state, tau_d, scale_d, ref_sq_d, safety_d,
@@ -482,16 +512,24 @@ def _rb_greedy_block_impl(
                 elif rejected == 0 and p_live < p:
                     p_live = min(p, p_live * 2)
         if stop == STOP_TAU or stop == STOP_RANK:
-            break
-        if stop == STOP_REFRESH:
+            done, final_stop = True, stop
+        elif stop == STOP_REFRESH:
             state = greedy_refresh(S, state)
             ref_sq = max(float(jnp.max(state.norms_sq)), 1e-300)
             ref_sq_d = jnp.asarray(ref_sq, rdt)
             if ref_sq ** 0.5 < tau:
-                break
+                done, final_stop = True, STOP_TAU
+            elif ref_sq ** 0.5 <= floor_estimate(eps, scale, int(state.k)):
+                done, final_stop = True, STOP_FLOOR
+        if not done and int(state.k) + p_live > max_slots:
+            done = True  # out of slots; final_stop stays STOP_NONE
+        if checkpoint_dir is not None:
+            seq = save_resident_checkpoint(
+                checkpoint_dir, seq, state, ref_sq, scale, done, final_stop,
+                extra={"p_live": p_live})
     if diagnostics is not None:
         diagnostics["p_trajectory"] = trajectory
-    return _compact_result(state, max_k)
+    return _compact_result(state, max_k, final_stop)
 
 
 # --------------------------------------------------- stepwise block oracle --
@@ -533,6 +571,8 @@ def rb_greedy_block_stepwise(
     # fixed global column scale for the rank guard (the greedy-family
     # convention; see block_greedy_step's docstring)
     scale_d = jnp.asarray(ref_sq ** 0.5, state.norms_sq.dtype)
+    scale = ref_sq ** 0.5
+    final_stop = STOP_NONE
     slots = 0  # occupied slots including holes
     while slots + p <= max_k:
         prev_k = int(state.k)
@@ -545,6 +585,7 @@ def rb_greedy_block_stepwise(
         err = float(state.errs[slots - p])  # max residual before this block
         state = state._replace(k=jnp.asarray(prev_k + n_acc, jnp.int32))
         if err < tau:
+            final_stop = STOP_TAU
             break
         res_now = jnp.max(jnp.maximum(state.norms_sq - state.acc, 0.0))
         err_now = float(jnp.sqrt(res_now))
@@ -555,10 +596,16 @@ def rb_greedy_block_stepwise(
             # check as rb_greedy_stepwise; the pre-PR-4 block driver
             # missed it and appended one below-tau block after a refresh)
             if ref_sq ** 0.5 < tau:
+                final_stop = STOP_TAU
+                break
+            if ref_sq ** 0.5 <= floor_estimate(eps, scale,
+                                               int(state.k)):
+                final_stop = STOP_FLOOR
                 break
         if err_now < tau or n_acc == 0:
+            final_stop = STOP_TAU if err_now < tau else STOP_RANK
             break
 
     # compact: drop zero columns from Q / matching rows of R, cap at the
     # requested max_k (shared with the chunked driver)
-    return _compact_result(state, max_k_req)
+    return _compact_result(state, max_k_req, final_stop)

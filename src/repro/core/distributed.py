@@ -39,6 +39,7 @@ from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from jax.experimental.shard_map import shard_map
@@ -46,11 +47,15 @@ from jax.experimental.shard_map import shard_map
 from repro.core import backend as _backend
 from repro.core.greedy import (
     GreedyResult,
+    STOP_FLOOR,
     STOP_NONE,
     STOP_RANK,
     STOP_REFRESH,
     STOP_TAU,
+    _validate_resident_tree,
+    floor_estimate,
     imgs_orthogonalize,
+    load_resident_checkpoint,
     panel_imgs_orthogonalize,
 )
 
@@ -109,6 +114,71 @@ def dist_greedy_init(S: jax.Array, max_k: int, mesh: Mesh) -> DistGreedyState:
         errs=jax.device_put(jnp.zeros((max_k,), rdtype), sh.errs),
         k=jax.device_put(jnp.zeros((), jnp.int32), sh.k),
     )
+
+
+# --------------------------------------------- checkpoint/resume support ---
+# Distributed sibling of repro.core.greedy's resident checkpoint helpers;
+# DistGreedyState has no per-basis diagnostics (n_passes/rnorms), so it
+# gets its own tree layout.  Leaves are gathered to host numpy on save and
+# re-placed with the CURRENT mesh's shardings on restore, so a checkpoint
+# written on one mesh resumes on a different device count (elastic).
+
+_DIST_STATE_VERSION = 1
+
+
+def _dist_state_tree(state: DistGreedyState, ref_sq: float, scale: float,
+                     done: bool, stop: int) -> dict:
+    k = int(state.k)
+    return {
+        "version": np.asarray(_DIST_STATE_VERSION, np.int64),
+        "Q": np.asarray(jax.device_get(state.Q)),
+        "R": np.asarray(jax.device_get(state.R))[:k],
+        "norms_sq": np.asarray(jax.device_get(state.norms_sq)),
+        "acc": np.asarray(jax.device_get(state.acc)),
+        "pivots": np.asarray(jax.device_get(state.pivots)),
+        "errs": np.asarray(jax.device_get(state.errs)),
+        "k": np.asarray(k, np.int64),
+        "ref_sq": np.asarray(ref_sq, np.float64),
+        "scale": np.asarray(scale, np.float64),
+        "done": np.asarray(int(done), np.int64),
+        "stop": np.asarray(int(stop), np.int64),
+    }
+
+
+def _dist_state_from_tree(tree: dict, mesh: Mesh):
+    version = int(tree["version"])
+    if version != _DIST_STATE_VERSION:
+        raise ValueError(
+            f"distributed checkpoint version {version} != supported "
+            f"{_DIST_STATE_VERSION}"
+        )
+    max_k = tree["Q"].shape[1]
+    M = tree["norms_sq"].shape[0]
+    R = np.zeros((max_k, M), tree["R"].dtype)
+    R[:tree["R"].shape[0]] = tree["R"]
+    sh = state_shardings(mesh)
+    state = DistGreedyState(
+        Q=jax.device_put(tree["Q"], sh.Q),
+        R=jax.device_put(R, sh.R),
+        norms_sq=jax.device_put(tree["norms_sq"], sh.norms_sq),
+        acc=jax.device_put(tree["acc"], sh.acc),
+        pivots=jax.device_put(tree["pivots"], sh.pivots),
+        errs=jax.device_put(tree["errs"], sh.errs),
+        k=jax.device_put(np.asarray(int(tree["k"]), np.int32), sh.k),
+    )
+    return (state, float(tree["ref_sq"]), float(tree["scale"]),
+            bool(int(tree["done"])), int(tree["stop"]))
+
+
+def _save_dist_checkpoint(directory: str, seq: int, state, ref_sq, scale,
+                          done: bool, stop: int, keep: int = 2) -> int:
+    from repro.checkpoint.io import prune_steps, save_checkpoint
+
+    seq += 1
+    save_checkpoint(_dist_state_tree(state, ref_sq, scale, done, stop),
+                    directory, seq)
+    prune_steps(directory, keep)
+    return seq
 
 
 def _axis_size(a: str):
@@ -489,6 +559,8 @@ def distributed_greedy(
     backend: str | None = None,
     block_p: int = 1,
     panel_ortho: bool = True,
+    checkpoint_dir: str | None = None,
+    resume: bool = False,
 ) -> GreedyResult:
     """Driver mirroring :func:`repro.core.greedy.rb_greedy` on a mesh.
 
@@ -514,6 +586,12 @@ def distributed_greedy(
     (default True) runs each block's replicated orthogonalization through
     the BLAS-3 panel path (see :mod:`repro.core.block_greedy`).
 
+    ``checkpoint_dir``/``resume`` mirror
+    :func:`repro.core.greedy.rb_greedy` (state + done/stop persisted after
+    each chunk's stop handling; leaves are saved as host numpy and
+    re-placed with THIS mesh's shardings on resume, so a run restores onto
+    a different device count).
+
     ``S`` may be anything :func:`repro.data.providers.as_provider`
     accepts; non-array sources are materialized before placement.
     """
@@ -532,7 +610,7 @@ def distributed_greedy(
             S, tau, max_k, mesh, block_p, callback=callback,
             refresh=refresh, refresh_safety=refresh_safety, kappa=kappa,
             max_passes=max_passes, chunk=chunk, backend=backend,
-            panel=panel_ortho,
+            panel=panel_ortho, checkpoint_dir=checkpoint_dir, resume=resume,
         )
 
     chunk_fn = make_dist_greedy_chunk(
@@ -544,15 +622,29 @@ def distributed_greedy(
     state = dist_greedy_init(S, max_k, mesh)
 
     rdt = state.norms_sq.dtype
+    eps = float(jnp.finfo(rdt).eps)
     ref_sq = float(jnp.max(state.norms_sq))
     scale = ref_sq ** 0.5
+    done = False
+    final_stop = STOP_NONE
+    seq = 0
+    if checkpoint_dir is not None:
+        from repro.checkpoint.io import latest_step
+
+        tree = load_resident_checkpoint(checkpoint_dir) if resume else None
+        if tree is not None:
+            _validate_resident_tree(tree, S.shape[0], S.shape[1], max_k,
+                                    S.dtype, "resume checkpoint")
+            state, ref_sq, scale, done, final_stop = \
+                _dist_state_from_tree(tree, mesh)
+        seq = latest_step(checkpoint_dir) or 0
     # invariant thresholds device-placed once; only ref_sq changes (refresh)
     tau_d = jnp.asarray(tau, rdt)
     scale_d = jnp.asarray(scale, rdt)
     safety_d = jnp.asarray(refresh_safety, rdt)
     ref_sq_d = jnp.asarray(ref_sq, rdt)
-    k = 0
-    while k < max_k:
+    k = int(state.k)
+    while not done and k < max_k:
         state, n_done, stop = chunk_fn(
             S, state, tau_d, scale_d, ref_sq_d, safety_d,
         )
@@ -567,23 +659,31 @@ def distributed_greedy(
                 Q=state.Q.at[:, k].set(0),
                 pivots=state.pivots.at[k].set(-1),
             )
-            break
-        if stop == STOP_RANK:
+            done, final_stop = True, STOP_TAU
+        elif stop == STOP_RANK:
             k -= 1
             state = state._replace(k=jnp.asarray(k, jnp.int32))
-            break
-        if stop == STOP_REFRESH:
+            done, final_stop = True, STOP_RANK
+        elif stop == STOP_REFRESH:
             state = refresh_fn(S, state)
             ref_sq = max(float(jnp.max(state.norms_sq)), 1e-300)
             ref_sq_d = jnp.asarray(ref_sq, rdt)
             if ref_sq ** 0.5 < tau:
-                break
+                done, final_stop = True, STOP_TAU
+            elif ref_sq ** 0.5 <= floor_estimate(eps, scale, k):
+                done, final_stop = True, STOP_FLOOR
+        if not done and k >= max_k:
+            done = True  # ran to capacity; final_stop stays STOP_NONE
         # (no n_done check: the chunk cond guarantees >= 1 iteration, and
         # reading it back would add a host sync per chunk)
+        if checkpoint_dir is not None:
+            seq = _save_dist_checkpoint(
+                checkpoint_dir, seq, state, ref_sq, scale, done, final_stop)
     return GreedyResult(
         Q=state.Q, R=state.R, pivots=state.pivots, errs=state.errs,
         k=state.k, n_ortho_passes=jnp.zeros_like(state.pivots),
         rnorms=jnp.zeros_like(state.errs),
+        stop=final_stop,
     )
 
 
@@ -601,6 +701,8 @@ def _distributed_block_greedy(
     chunk: int = 4,
     backend: str | None = None,
     panel: bool = True,
+    checkpoint_dir: str | None = None,
+    resume: bool = False,
 ) -> GreedyResult:
     """Blocked distributed driver body (see :func:`distributed_greedy`,
     ``block_p > 1``).  ``chunk`` counts BLOCKS per host round-trip;
@@ -627,13 +729,27 @@ def _distributed_block_greedy(
     state = dist_greedy_init(S, max_slots, mesh)
 
     rdt = state.norms_sq.dtype
+    eps = float(jnp.finfo(rdt).eps)
     ref_sq = float(jnp.max(state.norms_sq))
     scale = ref_sq ** 0.5  # fixed global column scale for the rank guard
+    done = False
+    final_stop = STOP_NONE
+    seq = 0
+    if checkpoint_dir is not None:
+        from repro.checkpoint.io import latest_step
+
+        tree = load_resident_checkpoint(checkpoint_dir) if resume else None
+        if tree is not None:
+            _validate_resident_tree(tree, N, M, max_slots, S.dtype,
+                                    "resume checkpoint")
+            state, ref_sq, scale, done, final_stop = \
+                _dist_state_from_tree(tree, mesh)
+        seq = latest_step(checkpoint_dir) or 0
     tau_d = jnp.asarray(tau, rdt)
     scale_d = jnp.asarray(scale, rdt)
     safety_d = jnp.asarray(refresh_safety, rdt)
     ref_sq_d = jnp.asarray(ref_sq, rdt)
-    while int(state.k) + p <= max_slots:
+    while not done and int(state.k) + p <= max_slots:
         state, n_done, stop = chunk_fn(
             S, state, tau_d, scale_d, ref_sq_d, safety_d,
         )
@@ -641,14 +757,21 @@ def _distributed_block_greedy(
             callback(state)
         stop = int(stop)
         if stop == STOP_TAU or stop == STOP_RANK:
-            break
-        if stop == STOP_REFRESH:
+            done, final_stop = True, stop
+        elif stop == STOP_REFRESH:
             state = refresh_fn(S, state)
             ref_sq = max(float(jnp.max(state.norms_sq)), 1e-300)
             ref_sq_d = jnp.asarray(ref_sq, rdt)
             if ref_sq ** 0.5 < tau:
-                break
+                done, final_stop = True, STOP_TAU
+            elif ref_sq ** 0.5 <= floor_estimate(eps, scale, int(state.k)):
+                done, final_stop = True, STOP_FLOOR
+        if not done and int(state.k) + p > max_slots:
+            done = True  # out of slots; final_stop stays STOP_NONE
+        if checkpoint_dir is not None:
+            seq = _save_dist_checkpoint(
+                checkpoint_dir, seq, state, ref_sq, scale, done, final_stop)
     # compact holes + cap at max_k: shared with the resident blocked driver
     from repro.core.block_greedy import _compact_result
 
-    return _compact_result(state, max_k)
+    return _compact_result(state, max_k, final_stop)

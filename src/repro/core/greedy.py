@@ -39,10 +39,12 @@ Three drivers are provided:
 from __future__ import annotations
 
 import functools
+import os
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import backend as _backend
 
@@ -65,6 +67,8 @@ class GreedyResult(NamedTuple):
               each pivot column.  In exact arithmetic rnorms[j] == errs[j]
               (Cor. 5.6); their divergence signals numerical-rank exhaustion
               and drives the driver's rank guard.
+      stop:   why the build terminated (one of the STOP_* codes; see
+              ``STOP_NAMES``).  ``STOP_NONE`` means it ran to ``max_k``.
     """
 
     Q: jax.Array
@@ -74,6 +78,7 @@ class GreedyResult(NamedTuple):
     k: jax.Array
     n_ortho_passes: jax.Array
     rnorms: jax.Array
+    stop: int = 0
 
 
 def imgs_orthogonalize(
@@ -378,8 +383,38 @@ def greedy_refresh(S: jax.Array, state: GreedyState) -> GreedyState:
 
 
 # Stop codes reported by a device-resident chunk (host reads ONE scalar per
-# chunk instead of err/rnorm floats per iteration).
-STOP_NONE, STOP_RANK, STOP_TAU, STOP_REFRESH = 0, 1, 2, 3
+# chunk instead of err/rnorm floats per iteration).  STOP_FLOOR is a
+# host-side verdict only (the post-refresh floor gate), never an in-chunk
+# code.
+STOP_NONE, STOP_RANK, STOP_TAU, STOP_REFRESH, STOP_FLOOR = 0, 1, 2, 3, 4
+
+STOP_NAMES = {
+    STOP_NONE: "STOP_NONE",        # ran to max_k (or slot capacity)
+    STOP_RANK: "STOP_RANK",        # numerical-rank exhaustion (rank guard)
+    STOP_TAU: "STOP_TAU",          # converged below tau
+    STOP_REFRESH: "STOP_REFRESH",  # internal chunk code, never final
+    STOP_FLOOR: "STOP_FLOOR",      # estimated achievable floor reached
+}
+
+# Safety factor of the achievable-floor gate.  After an exact refresh the
+# residuals are trustworthy; if the max residual sits within FLOOR_SAFETY
+# of the estimated floor the build cannot meaningfully improve and further
+# bases would be noise-amplified directions.
+FLOOR_SAFETY = 10.0
+
+
+def floor_estimate(eps: float, scale: float, k: int) -> float:
+    """Estimated achievable residual floor of a k-basis build.
+
+    Each of the k orthogonalization/projection stages contributes O(eps)
+    rounding relative to the data scale ``scale`` (= max column norm, the
+    rank guard's reference); the contributions accumulate stochastically,
+    giving ~eps * |s| * sqrt(k).  ``FLOOR_SAFETY`` absorbs the constants.
+    A post-refresh exact residual at or below this value is indistinguishable
+    from orthogonalization noise — the principled stop point PR 5's
+    tau-before-refresh precedence only papered over.
+    """
+    return FLOOR_SAFETY * eps * scale * max(k, 1) ** 0.5
 
 
 def _drop_last(state: GreedyState, k: int) -> GreedyState:
@@ -390,6 +425,112 @@ def _drop_last(state: GreedyState, k: int) -> GreedyState:
         R=state.R.at[k, :].set(0),
         pivots=state.pivots.at[k].set(-1),
     )
+
+
+# ------------------------------------------- resident checkpoint/resume ----
+# The chunked resident drivers (rb_greedy here; the blocked/distributed
+# siblings reuse these helpers) persist their GreedyState at chunk
+# boundaries through repro.checkpoint.io.  The tree carries the host-side
+# loop variables too (ref_sq changes at refresh; scale is fixed at init but
+# must survive a restart) plus a ``done``/``stop`` pair saved AFTER the
+# host's stop handling: the jitted chunk always runs >= 1 iteration, so
+# resuming a finished build into the loop would add extra bases — a done
+# checkpoint short-circuits straight to the result instead.
+
+_RESIDENT_STATE_VERSION = 1
+
+
+def resident_state_tree(state, ref_sq: float, scale: float, done: bool,
+                        stop: int, extra: dict | None = None) -> dict:
+    """Flat numpy tree of a resident GreedyState + host loop variables.
+
+    Only the first ``k`` rows of R are saved (checkpoint traffic scales
+    with k*M, not max_k*M); :func:`resident_state_from_tree` zero-pads
+    them back.
+    """
+    k = int(state.k)
+    tree = {
+        "version": np.asarray(_RESIDENT_STATE_VERSION, np.int64),
+        "Q": np.asarray(jax.device_get(state.Q)),
+        "R": np.asarray(jax.device_get(state.R))[:k],
+        "norms_sq": np.asarray(jax.device_get(state.norms_sq)),
+        "acc": np.asarray(jax.device_get(state.acc)),
+        "pivots": np.asarray(jax.device_get(state.pivots)),
+        "errs": np.asarray(jax.device_get(state.errs)),
+        "n_passes": np.asarray(jax.device_get(state.n_passes)),
+        "rnorms": np.asarray(jax.device_get(state.rnorms)),
+        "k": np.asarray(k, np.int64),
+        "ref_sq": np.asarray(ref_sq, np.float64),
+        "scale": np.asarray(scale, np.float64),
+        "done": np.asarray(int(done), np.int64),
+        "stop": np.asarray(int(stop), np.int64),
+    }
+    for key, val in (extra or {}).items():
+        tree[key] = np.asarray(val)
+    return tree
+
+
+def resident_state_from_tree(tree: dict):
+    """Inverse of :func:`resident_state_tree`.
+
+    Returns ``(state, ref_sq, scale, done, stop)`` with the state's array
+    leaves as host numpy (callers device_put / shard as needed).
+    """
+    version = int(tree["version"])
+    if version != _RESIDENT_STATE_VERSION:
+        raise ValueError(
+            f"resident checkpoint version {version} != supported "
+            f"{_RESIDENT_STATE_VERSION}"
+        )
+    max_k = tree["Q"].shape[1]
+    M = tree["norms_sq"].shape[0]
+    R = np.zeros((max_k, M), tree["R"].dtype)
+    R[:tree["R"].shape[0]] = tree["R"]
+    state = GreedyState(
+        Q=tree["Q"], R=R, norms_sq=tree["norms_sq"], acc=tree["acc"],
+        pivots=tree["pivots"], errs=tree["errs"],
+        n_passes=tree["n_passes"], rnorms=tree["rnorms"],
+        k=np.asarray(int(tree["k"]), np.int32),
+    )
+    return (state, float(tree["ref_sq"]), float(tree["scale"]),
+            bool(int(tree["done"])), int(tree["stop"]))
+
+
+def save_resident_checkpoint(directory: str, seq: int, state, ref_sq, scale,
+                             done: bool, stop: int,
+                             extra: dict | None = None, keep: int = 2) -> int:
+    """Persist one resident-driver step; returns the new sequence number."""
+    from repro.checkpoint.io import prune_steps, save_checkpoint
+
+    seq += 1
+    save_checkpoint(
+        resident_state_tree(state, ref_sq, scale, done, stop, extra),
+        directory, seq,
+    )
+    prune_steps(directory, keep)
+    return seq
+
+
+def load_resident_checkpoint(directory: str):
+    """Latest intact resident checkpoint tree, or None if none exists."""
+    from repro.checkpoint.io import latest_step, load_checkpoint_raw
+
+    if latest_step(directory) is None:
+        return None
+    return load_checkpoint_raw(directory)
+
+
+def _validate_resident_tree(tree, N, M, max_k, dtype, what="checkpoint"):
+    if tree["Q"].shape != (N, max_k) or tree["norms_sq"].shape != (M,):
+        raise ValueError(
+            f"{what} shape mismatch: Q {tree['Q'].shape} / M "
+            f"{tree['norms_sq'].shape[0]} vs requested ({N}, {max_k}) / {M}"
+        )
+    if tree["Q"].dtype != np.dtype(dtype):
+        raise ValueError(
+            f"{what} dtype mismatch: saved {tree['Q'].dtype}, "
+            f"requested {np.dtype(dtype)}"
+        )
 
 
 def _greedy_chunk_impl(
@@ -469,6 +610,8 @@ def rb_greedy(
     refresh_safety: float = 100.0,
     chunk: int = 16,
     backend: str | None = None,
+    checkpoint_dir: str | None = None,
+    resume: bool = False,
 ) -> GreedyResult:
     """Algorithm 3 driver: iterate until ``err < tau`` or ``k == max_k``.
 
@@ -492,7 +635,16 @@ def rb_greedy(
 
     refresh: "auto" triggers :func:`greedy_refresh` when the tracked residual
     nears the Eq.-(6.3) cancellation floor (err^2 < safety * eps * ref^2);
-    "never" is the paper-faithful mode.
+    "never" is the paper-faithful mode.  If the post-refresh exact residual
+    is still above tau but at or below :func:`floor_estimate`, the build
+    stops with ``STOP_FLOOR`` instead of accepting noise-amplified
+    directions.
+
+    ``checkpoint_dir``/``resume``: with a directory set the driver persists
+    its full state (plus a done/stop marker) after every chunk's stop
+    handling; ``resume=True`` picks up from the newest intact step and a
+    finished checkpoint short-circuits straight to the result, so killing
+    the process at any point and re-running yields a bit-identical build.
 
     ``S`` may be anything :func:`repro.data.providers.as_provider` accepts
     (arrays pass through; paths/providers are materialized — use
@@ -514,8 +666,25 @@ def rb_greedy(
     backend = _backend.resolve_backend(backend)
     state = greedy_init(S, max_k)
     rdt = state.norms_sq.dtype
+    eps = float(jnp.finfo(rdt).eps)
     ref_sq = float(jnp.max(state.norms_sq))
     scale = ref_sq ** 0.5  # fixed global column scale for the rank guard
+    done = False
+    final_stop = STOP_NONE
+    seq = 0
+    if checkpoint_dir is not None:
+        from repro.checkpoint.io import latest_step
+
+        tree = load_resident_checkpoint(checkpoint_dir) if resume else None
+        if tree is not None:
+            _validate_resident_tree(tree, N, M, max_k, state.Q.dtype,
+                                    "resume checkpoint")
+            st_host, ref_sq, scale, done, final_stop = \
+                resident_state_from_tree(tree)
+            state = GreedyState(*(jnp.asarray(x) for x in st_host))
+        # Fresh build into a dir with older steps: continue the sequence so
+        # prune/latest never interleave with stale numbering.
+        seq = latest_step(checkpoint_dir) or 0
     # A callback may retain states (checkpointing); donation would
     # invalidate those retained buffers on accelerators.
     chunk_fn = _greedy_chunk if callback is not None else \
@@ -525,8 +694,8 @@ def rb_greedy(
     scale_d = jnp.asarray(scale, rdt)
     safety_d = jnp.asarray(refresh_safety, rdt)
     ref_sq_d = jnp.asarray(ref_sq, rdt)
-    k = 0
-    while k < max_k:
+    k = int(state.k)
+    while not done and k < max_k:
         state, n_done, stop = chunk_fn(
             S, state, tau_d, scale_d, ref_sq_d, safety_d,
             chunk=chunk, kappa=kappa, max_passes=max_passes,
@@ -543,14 +712,14 @@ def rb_greedy(
             # arithmetic; their divergence is the symptom).  Drop and stop.
             k -= 1
             state = _drop_last(state, k)
-            break
-        if stop == STOP_TAU:
+            done, final_stop = True, STOP_RANK
+        elif stop == STOP_TAU:
             # Last added basis was selected at an error already below tau:
             # drop it to match Algorithm 3's while-condition semantics.
             k -= 1
             state = _drop_last(state, k)
-            break
-        if stop == STOP_REFRESH:
+            done, final_stop = True, STOP_TAU
+        elif stop == STOP_REFRESH:
             # Approaching the Eq.-(6.3) cancellation floor while still above
             # tau: recompute exact residuals and rescale the reference.
             state = greedy_refresh(S, state)
@@ -559,12 +728,26 @@ def rb_greedy(
             # The recorded err was floor noise; the *post-add* exact error
             # decides whether any further basis is needed (keep this one).
             if ref_sq ** 0.5 < tau:
-                break
+                done, final_stop = True, STOP_TAU
+            elif ref_sq ** 0.5 <= floor_estimate(eps, scale, k):
+                # Exact residual parked at the achievable floor: tau is
+                # unreachable in this precision — stop gracefully rather
+                # than accept noise-amplified directions.
+                done, final_stop = True, STOP_FLOOR
+        if not done and k >= max_k:
+            done = True  # ran to capacity; final_stop stays STOP_NONE
         # (no n_done check: the chunk cond guarantees >= 1 iteration, and
         # reading it back would add a host sync per chunk)
+        if checkpoint_dir is not None:
+            # Save AFTER stop handling: the chunk always runs >= 1
+            # iteration, so a pre-handling snapshot of a finished build
+            # would grow extra bases on resume.
+            seq = save_resident_checkpoint(
+                checkpoint_dir, seq, state, ref_sq, scale, done, final_stop)
     return GreedyResult(
         Q=state.Q, R=state.R, pivots=state.pivots, errs=state.errs,
         k=state.k, n_ortho_passes=state.n_passes, rnorms=state.rnorms,
+        stop=final_stop,
     )
 
 
@@ -598,6 +781,7 @@ def rb_greedy_stepwise(
     eps = float(jnp.finfo(state.norms_sq.dtype).eps)
     ref_sq = float(jnp.max(state.norms_sq))
     scale = ref_sq ** 0.5  # fixed global column scale for the rank guard
+    final_stop = STOP_NONE
     k = 0
     while k < max_k:
         state = _jitted_step(S, state, kappa=kappa, max_passes=max_passes,
@@ -610,19 +794,26 @@ def rb_greedy_stepwise(
         if rnorm < 50.0 * eps * scale:
             k -= 1
             state = _drop_last(state, k)
+            final_stop = STOP_RANK
             break
         if err < tau:
             k -= 1
             state = _drop_last(state, k)
+            final_stop = STOP_TAU
             break
         if refresh == "auto" and err * err < refresh_safety * eps * ref_sq:
             state = greedy_refresh(S, state)
             ref_sq = max(float(jnp.max(state.norms_sq)), 1e-300)
             if float(jnp.sqrt(ref_sq)) < tau:
+                final_stop = STOP_TAU
+                break
+            if ref_sq ** 0.5 <= floor_estimate(eps, scale, k):
+                final_stop = STOP_FLOOR
                 break
     return GreedyResult(
         Q=state.Q, R=state.R, pivots=state.pivots, errs=state.errs,
         k=state.k, n_ortho_passes=state.n_passes, rnorms=state.rnorms,
+        stop=final_stop,
     )
 
 

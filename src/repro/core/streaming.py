@@ -60,7 +60,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import backend as _backend
-from repro.core.greedy import imgs_orthogonalize, panel_imgs_orthogonalize
+from repro.core.greedy import (
+    STOP_FLOOR,
+    STOP_NONE,
+    STOP_RANK,
+    STOP_TAU,
+    floor_estimate,
+    imgs_orthogonalize,
+    panel_imgs_orthogonalize,
+)
 from repro.data.providers import SnapshotProvider, as_provider
 
 # v2: blocked streaming — the scalar pending/max-loc fields became
@@ -86,6 +94,7 @@ class StreamedGreedyResult(NamedTuple):
               in-memory drivers.
       tile_m: tile width the build used; n_tiles: ceil(M / tile_m).
       block_p: pivots per sweep the build used (1 = stepwise streaming).
+      stop: why the build terminated (repro.core.greedy STOP_* code).
     """
 
     Q: jax.Array
@@ -98,6 +107,7 @@ class StreamedGreedyResult(NamedTuple):
     tile_m: int
     n_tiles: int
     block_p: int = 1
+    stop: int = 0
 
 
 @functools.partial(jax.jit, static_argnames=("kt",))
@@ -188,7 +198,7 @@ class _StreamState:
         "k", "n_acc", "ref_sq", "scale", "best_vals", "best_cols",
         "pending", "cursor", "pending_Q", "pending_cols", "pending_errs",
         "pending_rnorms", "pending_npass", "pending_ok", "sweep_vals",
-        "sweep_cols", "seq", "tile_m", "block_p", "backend",
+        "sweep_cols", "seq", "tile_m", "block_p", "backend", "done", "stop",
     )
 
     def to_tree(self) -> dict:
@@ -227,6 +237,12 @@ class _StreamState:
             "sweep_vals": np.asarray(self.sweep_vals, np.float64),
             "sweep_cols": np.asarray(self.sweep_cols, np.int64),
             "seq": np.asarray(self.seq, np.int64),
+            # Terminal verdict.  Every other loop exit is a pure function
+            # of the fields above, but the floor-stop is not (its residual
+            # still sits ABOVE tau) — without a persisted done/stop a
+            # resume of a floor-stopped build would keep adding bases.
+            "done": np.asarray(self.done, np.int64),
+            "stop": np.asarray(self.stop, np.int64),
         }
         if self.R is not None:
             # Only the rows written so far (committed slots + the pending
@@ -310,6 +326,10 @@ class _StreamState:
         st.sweep_vals = np.asarray(tree["sweep_vals"], np.float64)
         st.sweep_cols = np.asarray(tree["sweep_cols"], np.int64)
         st.seq = int(tree["seq"])
+        # pre-done/stop v2 checkpoints (and lifted v1) were only written
+        # mid-build, so "not done" is the faithful default
+        st.done = int(tree.get("done", 0))
+        st.stop = int(tree.get("stop", STOP_NONE))
         return st
 
 
@@ -365,6 +385,103 @@ def _fresh_state(prov: SnapshotProvider, max_k: int, tiles, tile_m: int,
     st.sweep_vals = np.full((p,), -math.inf, np.float64)
     st.sweep_cols = np.full((p,), -1, np.int64)
     st.seq = 0
+    st.done = 0
+    st.stop = STOP_NONE
+    return st
+
+
+@functools.partial(jax.jit, static_argnames=("kt",))
+def _tile_warm_init(Q0: jax.Array, T: jax.Array, kt: int = 1):
+    """Warm-start init pass over one tile: raw column norms^2, the tile's
+    R rows against the existing basis (``C = Q0^H T``), the EXACT residuals
+    of the tile against Q0, and the tile's top-kt residual candidates."""
+    n_raw = jnp.sum(jnp.abs(T) ** 2, axis=0)
+    C = Q0.conj().T @ T
+    E = T - Q0 @ C
+    res = jnp.sum(jnp.abs(E) ** 2, axis=0)
+    tv, ti = jax.lax.top_k(res, kt)
+    return n_raw, C, res, tv, ti.astype(jnp.int32)
+
+
+def _warm_state(prov: SnapshotProvider, warm: dict, max_slots: int, tiles,
+                tile_m: int, block_p: int, keep_R: bool, rdt,
+                backend: str) -> _StreamState:
+    """Enrichment init: seed the stream with an existing basis.
+
+    ``warm`` carries the finalized artifact's trimmed arrays (``Q``
+    (N, k0), ``pivots``/``errs``/``rnorms``/``n_passes`` (k0,)).  One
+    init sweep computes, per tile, the raw norms (rank-guard scale), the
+    R rows of the new source against Q0, and the EXACT residuals — which
+    become the Eq.-(6.3) reference (``acc`` restarts at zero), exactly as
+    if a refresh had just run: the greedy loop then extends the basis
+    with only the new source's unexplained directions.
+    """
+    N, M = prov.shape
+    Q0 = jnp.asarray(warm["Q"])
+    k0 = Q0.shape[1]
+    if k0 > max_slots:
+        raise ValueError(
+            f"warm-start basis k0={k0} exceeds max_k={max_slots}")
+    p = block_p
+    dtype = jnp.dtype(prov.dtype)
+    if Q0.dtype != dtype:
+        raise ValueError(
+            f"warm-start dtype mismatch: basis {Q0.dtype}, provider {dtype}")
+    st = _StreamState()
+    st.tile_m = tile_m
+    st.block_p = p
+    st.backend = backend
+    st.norms_sq = np.empty((M,), rdt)
+    st.R = np.zeros((max_slots, M), np.dtype(dtype)) if keep_R else None
+    best_vals = np.full((p,), -math.inf, np.float64)
+    best_cols = np.full((p,), -1, np.int64)
+    raw_max = 0.0
+    nxt = prov.tile(*tiles[0]) if tiles else None
+    for i, (lo, hi) in enumerate(tiles):
+        T, nxt = nxt, None
+        out = _tile_warm_init(Q0, T, kt=min(p, hi - lo))
+        if i + 1 < len(tiles):
+            nxt = prov.tile(*tiles[i + 1])  # overlaps the init pass
+        n_raw, C, res, tv, ti = out
+        raw_max = max(raw_max, float(jnp.max(n_raw)))
+        st.norms_sq[lo:hi] = np.asarray(res, rdt)
+        if st.R is not None:
+            st.R[:k0, lo:hi] = np.asarray(C)
+        best_vals, best_cols = _merge_topk(
+            best_vals, best_cols, tv, lo + np.asarray(ti, np.int64), p)
+    st.acc = np.zeros((M,), rdt)
+    st.Q = jnp.zeros((N, max_slots), dtype).at[:, :k0].set(Q0)
+    st.pivots = np.full((max_slots,), -1, np.int32)
+    st.errs = np.zeros((max_slots,), rdt)
+    st.rnorms = np.zeros((max_slots,), rdt)
+    st.n_passes = np.zeros((max_slots,), np.int32)
+    st.pivots[:k0] = np.asarray(warm["pivots"], np.int32)[:k0]
+    st.errs[:k0] = np.asarray(warm["errs"], rdt)[:k0]
+    if "rnorms" in warm:
+        st.rnorms[:k0] = np.asarray(warm["rnorms"], rdt)[:k0]
+    if "n_passes" in warm:
+        st.n_passes[:k0] = np.asarray(warm["n_passes"], np.int32)[:k0]
+    st.k = k0
+    st.n_acc = k0
+    # The exact residuals ARE the reference (post-"refresh" semantics);
+    # the rank guard measures against the new source's raw data scale.
+    top = float(best_vals[0]) if best_cols[0] >= 0 else 0.0
+    st.ref_sq = max(top, 1e-300)
+    st.scale = max(raw_max, 0.0) ** 0.5
+    st.best_vals, st.best_cols = best_vals, best_cols
+    st.pending = 0
+    st.cursor = 0
+    st.pending_Q = jnp.zeros((N, p), dtype)
+    st.pending_cols = np.full((p,), -1, np.int64)
+    st.pending_errs = np.zeros((p,), np.float64)
+    st.pending_rnorms = np.zeros((p,), np.float64)
+    st.pending_npass = np.zeros((p,), np.int64)
+    st.pending_ok = np.zeros((p,), np.int64)
+    st.sweep_vals = np.full((p,), -math.inf, np.float64)
+    st.sweep_cols = np.full((p,), -1, np.int64)
+    st.seq = 0
+    st.done = 0
+    st.stop = STOP_NONE
     return st
 
 
@@ -413,6 +530,7 @@ def rb_greedy_streamed(
     checkpoint_every_tiles: int = 0,
     resume: bool = False,
     callback: Callable[[dict[str, Any]], None] | None = None,
+    warm_start: dict | None = None,
 ) -> StreamedGreedyResult:
     """Algorithm 3 over a :class:`~repro.data.providers.SnapshotProvider`.
 
@@ -454,6 +572,15 @@ def rb_greedy_streamed(
         ``block_p`` and dtype must match the checkpoint.
       callback: called once per accepted basis with a dict
         ``{k, pivot, err, rnorm, n_passes}``.
+      warm_start: seed the build with an existing basis (the enrichment
+        path, :meth:`repro.api.artifact.ReducedBasis.enrich`): a dict with
+        ``Q`` (N, k0) plus ``pivots``/``errs`` (and optionally
+        ``rnorms``/``n_passes``) of length k0.  The init sweep computes
+        the new source's exact residuals against Q0 (post-refresh
+        semantics) and the greedy loop extends the basis from slot k0;
+        the returned pivots < k0 are the seed's (indices into ITS
+        original source), >= k0 index the new source.  Ignored when
+        ``resume`` finds a checkpoint (the checkpoint already embeds it).
     """
     prov = as_provider(source)
     N, M = prov.shape
@@ -524,8 +651,12 @@ def rb_greedy_streamed(
         if (st.R is not None) != keep_R:
             raise ValueError("checkpoint keep_R setting differs from call")
     else:
-        st = _fresh_state(prov, max_slots, tiles, tile_m, p, keep_R, rdt,
-                          backend)
+        if warm_start is not None:
+            st = _warm_state(prov, warm_start, max_slots, tiles, tile_m, p,
+                             keep_R, rdt, backend)
+        else:
+            st = _fresh_state(prov, max_slots, tiles, tile_m, p, keep_R,
+                              rdt, backend)
         if ckpt_dir:
             # A fresh build may target a directory holding an older run's
             # steps: continue the step numbering past them so the new
@@ -536,10 +667,14 @@ def rb_greedy_streamed(
             st.seq = latest_step(ckpt_dir) or 0
 
     rzero = np.zeros((), rdt)
+    # a resumed checkpoint that already carries the done verdict needs no
+    # re-recording; a live run records it at its terminal save
+    done_saved = bool(st.done)
 
-    while True:
+    while not st.done:
         if not st.pending:
             if st.k + p > max_slots:
+                st.done, st.stop = 1, STOP_NONE  # slot capacity
                 break
             # Pivot block from the running top-p fold (folded across tiles
             # during the previous sweep / init / refresh pass).  err is the
@@ -548,6 +683,7 @@ def rb_greedy_streamed(
             err = float(np.sqrt(np.maximum(
                 np.asarray(st.best_vals[0], rdt), rzero)))
             if err < tau or st.best_cols[0] < 0:
+                st.done, st.stop = 1, STOP_TAU
                 break
             # --- joint IMGS of the block (in-block rank guard) ---------
             cols = np.asarray(st.best_cols)
@@ -612,6 +748,7 @@ def rb_greedy_streamed(
                 # Whole block rank-rejected: numerical-rank exhaustion,
                 # stop WITHOUT committing (at block_p=1 this is exactly
                 # the stepwise drivers' rank-guard break).
+                st.done, st.stop = 1, STOP_RANK
                 break
             st.pending = 1
             st.cursor = 0
@@ -713,7 +850,6 @@ def rb_greedy_streamed(
             floor_sq = max(float(st.best_vals[0]), 0.0)
             tau_converged = float(np.sqrt(np.maximum(
                 np.asarray(floor_sq, rdt), rzero))) < tau
-        stop_after_refresh = False
         if (refresh == "auto" and not tau_converged
                 and floor_sq < refresh_safety * eps * st.ref_sq):
             new_norms = np.empty_like(st.norms_sq)
@@ -735,15 +871,24 @@ def rb_greedy_streamed(
             st.best_vals, st.best_cols = best_vals, best_cols
             st.ref_sq = max(float(best_vals[0]), 1e-300)
             if st.ref_sq ** 0.5 < tau:
-                stop_after_refresh = True
+                st.done, st.stop = 1, STOP_TAU
+            elif st.ref_sq ** 0.5 <= floor_estimate(eps, st.scale,
+                                                    st.n_acc):
+                # Post-refresh exact residual at the achievable floor:
+                # tau is unreachable in this precision — stop gracefully
+                # (same gate as the resident drivers).
+                st.done, st.stop = 1, STOP_FLOOR
 
         if ckpt_dir:
             _save_state(st, ckpt_dir)
-        if stop_after_refresh:
-            break
+            done_saved = bool(st.done)
 
-    # (no final save: every state mutation above is followed by a save —
-    # the pivot-selection / tau / rank-guard exits mutate nothing)
+    # Final save: the pre-sweep exits (tau / rank-guard / capacity) and the
+    # floor-stop only mutate the done/stop verdict, but that verdict MUST be
+    # persisted — a floor-stopped build's residual still sits above tau, so
+    # a resume without it would keep adding bases.
+    if ckpt_dir and not done_saved:
+        _save_state(st, ckpt_dir)
     if p == 1:
         Q_out, R_out = st.Q, st.R
         pivots, errs = st.pivots, st.errs
@@ -776,5 +921,5 @@ def rb_greedy_streamed(
     return StreamedGreedyResult(
         Q=Q_out, R=R_out, pivots=pivots, errs=errs, k=k,
         n_ortho_passes=n_passes, rnorms=rnorms,
-        tile_m=tile_m, n_tiles=len(tiles), block_p=p,
+        tile_m=tile_m, n_tiles=len(tiles), block_p=p, stop=int(st.stop),
     )

@@ -2,6 +2,8 @@ from repro.data.pipeline import SyntheticLMData, FileLMData
 from repro.data.providers import (
     SnapshotProvider,
     ArrayProvider,
+    FaultPlan,
+    FaultyProvider,
     MemmapProvider,
     WaveformProvider,
     as_provider,
@@ -12,7 +14,7 @@ from repro.data.providers import (
 
 __all__ = [
     "SyntheticLMData", "FileLMData",
-    "SnapshotProvider", "ArrayProvider", "MemmapProvider",
-    "WaveformProvider", "as_provider", "create_snapshot_npy",
-    "materialize_source", "write_snapshot_npy",
+    "SnapshotProvider", "ArrayProvider", "FaultPlan", "FaultyProvider",
+    "MemmapProvider", "WaveformProvider", "as_provider",
+    "create_snapshot_npy", "materialize_source", "write_snapshot_npy",
 ]

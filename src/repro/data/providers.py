@@ -27,11 +27,36 @@ from __future__ import annotations
 
 import abc
 import os
-from typing import Iterator
+import time
+from dataclasses import dataclass
+from typing import Iterator, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+def _read_with_retry(fn, what: str):
+    """Run an I/O-backed read with bounded retry + exponential backoff.
+
+    Shared storage (NFS, object-store FUSE mounts) throws transient
+    ``IOError``s under load; a multi-hour streamed build should not die on
+    one.  Retries ``REPRO_IO_RETRIES`` times (default 3) with backoff
+    ``REPRO_IO_RETRY_BASE_S * 2**attempt`` (default base 0.05 s); the last
+    failure re-raises with ``what`` and the attempt count in the message
+    so the supervisor log shows *which* tile read was the casualty.
+    """
+    retries = int(os.environ.get("REPRO_IO_RETRIES", "3"))
+    base = float(os.environ.get("REPRO_IO_RETRY_BASE_S", "0.05"))
+    for attempt in range(retries + 1):
+        try:
+            return fn()
+        except (IOError, OSError) as e:
+            if attempt >= retries:
+                raise IOError(
+                    f"{what} failed after {retries + 1} attempts: {e}"
+                ) from e
+            time.sleep(base * (2.0 ** attempt))
 
 
 class SnapshotProvider(abc.ABC):
@@ -113,7 +138,9 @@ class MemmapProvider(SnapshotProvider):
 
     def __init__(self, path: str | os.PathLike):
         self.path = os.fspath(path)
-        self._mm = np.load(self.path, mmap_mode="r")
+        self._mm = _read_with_retry(
+            lambda: np.load(self.path, mmap_mode="r"),
+            f"open {self.path}")
         if self._mm.ndim != 2:
             raise ValueError(
                 f"{self.path}: expected a 2-D snapshot matrix, got shape "
@@ -132,7 +159,11 @@ class MemmapProvider(SnapshotProvider):
         # np.asarray materializes ONLY the requested columns on host; the
         # async jax.device_put lets the streaming driver prefetch the next
         # tile while the current tile's sweep runs.  The memmap stays lazy.
-        return jax.device_put(np.asarray(self._mm[:, lo:hi]))
+        # The page-in is where a flaky filesystem actually faults, so it
+        # runs under the bounded-retry wrapper.
+        return jax.device_put(_read_with_retry(
+            lambda: np.asarray(self._mm[:, lo:hi]),
+            f"read {self.path}[:, {lo}:{hi}]"))
 
 
 class WaveformProvider(SnapshotProvider):
@@ -172,9 +203,109 @@ class WaveformProvider(SnapshotProvider):
         return self._dtype
 
     def tile(self, lo: int, hi: int) -> jax.Array:
-        return self._gen(
-            jnp.asarray(self._m1[lo:hi]), jnp.asarray(self._m2[lo:hi])
+        # Generation itself is pure compute, but the parameter grids may be
+        # memmap-backed (np.load(mmap_mode=...) arrays pass np.asarray
+        # checks), so the host gather goes through the retry wrapper too.
+        m1, m2 = _read_with_retry(
+            lambda: (np.array(self._m1[lo:hi]), np.array(self._m2[lo:hi])),
+            f"read waveform params [{lo}:{hi})")
+        return self._gen(jnp.asarray(m1), jnp.asarray(m2))
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """What to break, and when — the fault-injection schedule.
+
+    Counted in provider *tile reads* (0-based), the unit of forward
+    progress in a streamed build:
+
+    - ``kill_at_tile``:    ``os._exit`` the process on that read — the
+      harness's stand-in for OOM-kills / preemption at an arbitrary point.
+    - ``raise_at_tile``:   raise a hard ``IOError`` on that read (survives
+      retry; the build dies with a diagnosable error).
+    - ``transient_every``: every n-th read raises ``IOError`` once, then
+      succeeds — exercises the bounded-retry path, the build completes.
+
+    ``from_env`` builds the plan from ``REPRO_FAULT_KILL_AT_TILE``,
+    ``REPRO_FAULT_RAISE_AT_TILE``, ``REPRO_FAULT_TRANSIENT_EVERY`` (and
+    ``REPRO_FAULT_EXIT_CODE``), so a supervised subprocess can be injured
+    without any code changes.  One-shot faults honor ``REPRO_FAULT_ONCE``
+    (see :mod:`repro.checkpoint.io`): after a supervised restart the same
+    kill does not fire again — exactly a real crash's shape.
+    """
+
+    kill_at_tile: Optional[int] = None
+    raise_at_tile: Optional[int] = None
+    transient_every: Optional[int] = None
+    exit_code: int = 42
+
+    @classmethod
+    def from_env(cls) -> "FaultPlan":
+        def geti(name):
+            v = os.environ.get(name)
+            return int(v) if v else None
+
+        return cls(
+            kill_at_tile=geti("REPRO_FAULT_KILL_AT_TILE"),
+            raise_at_tile=geti("REPRO_FAULT_RAISE_AT_TILE"),
+            transient_every=geti("REPRO_FAULT_TRANSIENT_EVERY"),
+            exit_code=geti("REPRO_FAULT_EXIT_CODE") or 42,
         )
+
+    def active(self) -> bool:
+        return any(v is not None for v in
+                   (self.kill_at_tile, self.raise_at_tile,
+                    self.transient_every))
+
+
+class FaultyProvider(SnapshotProvider):
+    """Fault-injecting wrapper around any :class:`SnapshotProvider`.
+
+    Transparent (shape/dtype/tiles delegate) until the :class:`FaultPlan`
+    says otherwise.  Counts tile reads across its lifetime in ``reads``;
+    the count is per-process, so a resumed run's counter restarts at 0 —
+    pair one-shot faults with ``REPRO_FAULT_ONCE`` to keep the relaunch
+    unharmed.
+    """
+
+    def __init__(self, inner: SnapshotProvider,
+                 plan: Optional[FaultPlan] = None):
+        self.inner = inner
+        self.plan = plan if plan is not None else FaultPlan.from_env()
+        self.reads = 0
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return self.inner.shape
+
+    @property
+    def dtype(self):
+        return self.inner.dtype
+
+    def tile(self, lo: int, hi: int) -> jax.Array:
+        from repro.checkpoint.io import _fault_once
+
+        plan, n = self.plan, self.reads
+        self.reads += 1
+        if (plan.kill_at_tile is not None and n >= plan.kill_at_tile
+                and _fault_once("kill_at_tile")):
+            os._exit(plan.exit_code)
+        if (plan.raise_at_tile is not None and n >= plan.raise_at_tile
+                and _fault_once("raise_at_tile")):
+            raise IOError(
+                f"injected hard I/O fault at tile read {n} "
+                f"(columns [{lo}:{hi}))")
+        first = [True]
+
+        def attempt():
+            if (plan.transient_every and (n + 1) % plan.transient_every == 0
+                    and first[0]):
+                first[0] = False
+                raise IOError(
+                    f"injected transient I/O fault at tile read {n}")
+            return self.inner.tile(lo, hi)
+
+        return _read_with_retry(attempt, f"tile [{lo}:{hi})")
 
 
 def write_snapshot_npy(path: str | os.PathLike, S,
@@ -207,12 +338,24 @@ def create_snapshot_npy(path: str | os.PathLike, shape: tuple[int, int],
 
 
 def as_provider(source) -> SnapshotProvider:
-    """Coerce an array / ``.npy`` path / provider into a provider."""
+    """Coerce an array / ``.npy`` path / provider into a provider.
+
+    When ``REPRO_FAULT_*`` env vars arm a :class:`FaultPlan`, the provider
+    comes back wrapped in a :class:`FaultyProvider` — the hook the
+    fault-injection harness uses to injure a supervised subprocess from
+    the outside.  Already-wrapped providers are never double-wrapped.
+    """
     if isinstance(source, SnapshotProvider):
-        return source
-    if isinstance(source, (str, os.PathLike)):
-        return MemmapProvider(source)
-    return ArrayProvider(source)
+        prov = source
+    elif isinstance(source, (str, os.PathLike)):
+        prov = MemmapProvider(source)
+    else:
+        prov = ArrayProvider(source)
+    if not isinstance(prov, FaultyProvider):
+        plan = FaultPlan.from_env()
+        if plan.active():
+            prov = FaultyProvider(prov, plan)
+    return prov
 
 
 def materialize_source(source) -> jax.Array:

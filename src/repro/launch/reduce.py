@@ -112,47 +112,71 @@ def dryrun(mesh_kind: str, out_dir: str):
 
 
 def real_run(tau: float, out: str, small: bool, chunk: int = 16,
-             backend: str | None = None):
+             backend: str | None = None, strategy: str = "distributed",
+             workdir: str | None = None, resume: bool = False,
+             tile_m: int = 4096):
     from repro.api import ReductionSpec, build_basis
     from repro.checkpoint import save_checkpoint
+    from repro.data.providers import WaveformProvider
     from repro.gw import build_snapshot_matrix, chirp_grid, frequency_grid
 
     wl = gw_reduced() if small else GW_CONFIG
-    devs = jax.devices()
-    mesh = make_auto_mesh((len(devs),), ("cols",))
     f = frequency_grid(20.0, 512.0, wl.n_rows)
     n_cols = wl.n_cols
     m1, m2 = chirp_grid(n_mc=n_cols // 16, n_eta=16)
-    sharding = NamedSharding(mesh, P(None, ("cols",)))
-    S = build_snapshot_matrix(f, m1, m2, dtype=jnp.complex64,
-                              sharding=sharding)
 
-    os.makedirs(out, exist_ok=True)
-    ckpt_dir = os.path.join(out, "ckpt")
-
-    # The chunked driver invokes the callback once per chunk (k advances by
-    # up to `chunk` between calls), so checkpoint on an interval threshold
-    # rather than an exact k % 25 == 0 hit.
-    last_ckpt = [0]
-
-    def cb(state):
-        k = int(state.k)
-        if k - last_ckpt[0] >= 25:
-            save_checkpoint(state, ckpt_dir, k)
-            last_ckpt[0] = k
-
-    spec = ReductionSpec(
-        source=S, strategy="distributed", tau=wl.tau, max_k=wl.max_k,
-        mesh=mesh, chunk=chunk, backend=backend, callback=cb,
+    common = dict(
+        tau=wl.tau, max_k=wl.max_k, chunk=chunk, backend=backend,
+        workdir=workdir, resume=resume,
     )
+    if strategy == "distributed":
+        devs = jax.devices()
+        mesh = make_auto_mesh((len(devs),), ("cols",))
+        sharding = NamedSharding(mesh, P(None, ("cols",)))
+        S = build_snapshot_matrix(f, m1, m2, dtype=jnp.complex64,
+                                  sharding=sharding)
+        if workdir is None:
+            # Legacy standalone checkpointing; with a workdir the build
+            # lifecycle owns its own <workdir>/build/ checkpoints.
+            os.makedirs(out, exist_ok=True)
+            ckpt_dir = os.path.join(out, "ckpt")
+            # The chunked driver invokes the callback once per chunk (k
+            # advances by up to `chunk` between calls), so checkpoint on
+            # an interval threshold rather than an exact k % 25 == 0 hit.
+            last_ckpt = [0]
+
+            def cb(state):
+                k = int(state.k)
+                if k - last_ckpt[0] >= 25:
+                    save_checkpoint(state, ckpt_dir, k)
+                    last_ckpt[0] = k
+
+            common["callback"] = cb
+        spec = ReductionSpec(source=S, strategy="distributed", mesh=mesh,
+                             **common)
+    else:
+        # Every other strategy reads the snapshot columns through a
+        # provider: "streamed" never materializes the matrix (tiles are
+        # generated on the fly, greedycpp's generate-your-slice strategy);
+        # resident strategies materialize it once on device.
+        prov = WaveformProvider(f, m1, m2, dtype=jnp.complex64)
+        spec = ReductionSpec(
+            source=prov, strategy=strategy, tile_m=tile_m,
+            checkpoint_every_tiles=1 if workdir is not None else 0,
+            **common)
+
     t0 = time.time()
     basis = build_basis(spec)
     k = basis.k
     print(f"greedy k={k} in {time.time()-t0:.1f}s; "
-          f"final err={float(basis.errs[max(k-1, 0)]):.3e}")
+          f"final err={float(basis.errs[max(k-1, 0)]):.3e}; "
+          f"stop={basis.provenance.get('stop')}")
+    os.makedirs(out, exist_ok=True)
     # the durable artifact (Q/R/pivots/errs + provenance; serve with
-    # `python -m repro.launch.serve --basis <dir>`) ...
-    basis.save(os.path.join(out, "basis"))
+    # `python -m repro.launch.serve --basis <dir>`): with a workdir the
+    # build already finalized it there; otherwise save under out/ ...
+    if workdir is None:
+        basis.save(os.path.join(out, "basis"))
     # ... plus the legacy flat exports
     np.save(os.path.join(out, "basis.npy"), np.asarray(basis.Q))
     np.save(os.path.join(out, "pivots.npy"), np.asarray(basis.pivots))
@@ -176,12 +200,29 @@ def main():
                     help="hot-loop primitive backend (default: auto — "
                          "Pallas kernels on TPU, jnp/XLA elsewhere; "
                          "xla_ref = seed reference ops baseline)")
+    ap.add_argument("--strategy",
+                    choices=["distributed", "streamed", "greedy",
+                             "block_greedy", "auto"],
+                    default="distributed",
+                    help="reduction strategy (streamed generates waveform "
+                         "tiles on the fly and never materializes S)")
+    ap.add_argument("--workdir", default=None,
+                    help="build-lifecycle directory: checkpoints in "
+                         "<workdir>/build/, finalized artifact in "
+                         "<workdir>; resumable and supervisor-safe")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from --workdir checkpoints (or return "
+                         "the already-finalized artifact)")
+    ap.add_argument("--tile-m", type=int, default=4096,
+                    help="streamed tile width in columns")
     args = ap.parse_args()
     if os.environ.get("REPRO_DRYRUN"):
         dryrun(args.mesh, args.out)
     else:
         real_run(args.tau, args.out, args.small, chunk=args.chunk,
-                 backend=args.backend)
+                 backend=args.backend, strategy=args.strategy,
+                 workdir=args.workdir, resume=args.resume,
+                 tile_m=args.tile_m)
 
 
 if __name__ == "__main__":

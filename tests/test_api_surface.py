@@ -66,6 +66,10 @@ def test_reduction_spec_fields_pinned():
         ("refresh", "auto"),
         ("refresh_safety", 100.0),
         ("keep_R", True),
+        # PR 6: workdir owns the atomic build->artifact lifecycle
+        # (checkpoints in <workdir>/build/, finalized artifact in
+        # <workdir>; mutually exclusive with checkpoint_dir)
+        ("workdir", None),
         ("checkpoint_dir", None),
         ("checkpoint_every_tiles", 0),
         ("resume", False),
@@ -84,8 +88,8 @@ def test_reduced_basis_surface_pinned():
         if not n.startswith("_") and callable(getattr(ReducedBasis, n))
     )
     assert public == [
-        "eim", "load", "per_column_errors", "project", "reconstruct",
-        "roq_weights", "save",
+        "eim", "enrich", "load", "per_column_errors", "project",
+        "reconstruct", "roq_weights", "save",
     ]
     assert [f.name for f in dataclasses.fields(ReducedBasis)] == [
         "Q", "pivots", "errs", "k", "R", "provenance",
@@ -106,7 +110,7 @@ def test_repro_core_exports_stable():
 def test_repro_data_exports_stable():
     assert sorted(repro.data.__all__) == sorted([
         "SyntheticLMData", "FileLMData", "SnapshotProvider",
-        "ArrayProvider", "MemmapProvider", "WaveformProvider",
-        "as_provider", "create_snapshot_npy", "materialize_source",
-        "write_snapshot_npy",
+        "ArrayProvider", "FaultPlan", "FaultyProvider", "MemmapProvider",
+        "WaveformProvider", "as_provider", "create_snapshot_npy",
+        "materialize_source", "write_snapshot_npy",
     ])

@@ -1,0 +1,469 @@
+"""Fault-injection matrix: self-healing builds under crash/corruption.
+
+PR-6 acceptance surface:
+
+- randomized kill-point crash + resume across {streamed, blocked,
+  resident-with-workdir} x {f32, c64} lands on an artifact bit-identical
+  to the uninterrupted build;
+- a build killed MID-FINALIZE (after the artifact step is fully written
+  but before the atomic rename) never exposes a partial artifact and
+  resumes to the identical one;
+- corrupted-leaf / truncated-manifest artifact steps fall back to the
+  newest intact step on load;
+- the principled floor-stop (STOP_FLOOR) fires on all four driver paths
+  (greedy / block_greedy / streamed / distributed) on an f32 family whose
+  post-refresh residual plateaus above tau, and lands in artifact
+  provenance;
+- the fault-injection harness itself (FaultPlan / FaultyProvider /
+  bounded retry) behaves as documented.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+
+from conftest import make_smooth_matrix
+from repro.api import ReducedBasis, ReductionSpec, build_basis
+from repro.data import (
+    ArrayProvider,
+    FaultPlan,
+    FaultyProvider,
+    as_provider,
+    write_snapshot_npy,
+)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# ------------------------------------------------------------------ helpers
+
+
+def floor_regime_matrix(seed=7, N=200, M=160, r=50, sigma=1.45e-7):
+    """f32 family whose exact residual plateaus ABOVE a tiny tau.
+
+    r modes decay smoothly over 4 decades, then the spectrum cliffs onto
+    an incompressible noise floor at ~sigma*sqrt(N) ~ 2e-6 — inside the
+    floor-stop window (50*eps*scale, 10*eps*scale*sqrt(k)) once k grows
+    past the modes.  With an aggressive refresh cadence a refresh is
+    guaranteed to land while the residual is in that window, so every
+    greedy driver must terminate with STOP_FLOOR instead of looping
+    refreshes (the PR-5 stop-gap's failure mode) or mining noise columns
+    until the rank guard trips.
+    """
+    rng = np.random.default_rng(seed)
+    U, _ = np.linalg.qr(rng.standard_normal((N, r)))
+    V, _ = np.linalg.qr(rng.standard_normal((M, r)))
+    sv = np.logspace(0, -4, r)
+    return ((U * sv) @ V.T + sigma * rng.standard_normal((N, M))).astype(
+        np.float32)
+
+
+FLOOR_TAU = 1e-7
+FLOOR_SAFETY = 2e6  # refresh trigger ratio sqrt(safety*eps) ~ 0.5 per step
+
+
+class _SimulatedCrash(RuntimeError):
+    pass
+
+
+def _crashing_callback(kill_k):
+    """Per-chunk callback that raises once the basis reaches kill_k."""
+
+    def cb(state):
+        if int(np.asarray(state["k"] if isinstance(state, dict)
+                          else state.k)) >= kill_k:
+            raise _SimulatedCrash(f"injected crash at k>={kill_k}")
+
+    return cb
+
+
+def _assert_basis_equal(a: ReducedBasis, b: ReducedBasis):
+    assert a.k == b.k
+    for f in ("Q", "pivots", "errs"):
+        x = np.asarray(getattr(a, f))
+        y = np.asarray(getattr(b, f))
+        assert np.array_equal(x, y), f"{f} differs"
+    if a.R is not None or b.R is not None:
+        assert np.array_equal(np.asarray(a.R), np.asarray(b.R))
+
+
+# ----------------------------------------- randomized crash/resume matrix --
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.complex64])
+@pytest.mark.parametrize("strategy,block_p", [
+    ("streamed", 1), ("streamed", 4), ("block_greedy", 4), ("greedy", 1),
+])
+def test_random_killpoint_resume_bit_identical(tmp_path, strategy, block_p,
+                                               dtype):
+    """Crash at a randomized point, resume, compare to the uninterrupted
+    build: Q/pivots/errs (and R) must be bit-identical."""
+    S = make_smooth_matrix(n=80, m=64, dtype=dtype)
+    common = dict(strategy=strategy, tau=1e-6, block_p=block_p,
+                  tile_m=16, chunk=4, checkpoint_every_tiles=1)
+
+    ref = build_basis(source=S, workdir=str(tmp_path / "ref"), **common)
+    assert ref.k > 4  # enough progress for a mid-build kill to matter
+
+    import zlib
+
+    rng = np.random.default_rng(
+        zlib.crc32(f"{strategy}/{block_p}/{np.dtype(dtype)}".encode()))
+    for trial in range(2):
+        wd = str(tmp_path / f"crash_{trial}")
+        if strategy == "streamed":
+            # kill via a hard provider fault at a random tile read (every
+            # build does well over 20: an init sweep plus one sweep per
+            # accepted block); the resumed run streams through a healthy
+            # provider.
+            kill_tile = int(rng.integers(1, 20))
+            faulty = FaultyProvider(ArrayProvider(S),
+                                    FaultPlan(raise_at_tile=kill_tile))
+            with pytest.raises(IOError):
+                build_basis(source=faulty, workdir=wd, **common)
+        else:
+            # resident drivers: crash from the per-chunk callback at a
+            # random rank (exercises the chunked checkpoint cadence).
+            kill_k = int(rng.integers(2, max(ref.k, 3)))
+            with pytest.raises(_SimulatedCrash):
+                build_basis(source=S, workdir=wd,
+                            callback=_crashing_callback(kill_k), **common)
+        assert not os.path.exists(os.path.join(wd, "step_00000000")), \
+            "partial artifact observable after crash"
+        resumed = build_basis(source=S, workdir=wd, resume=True, **common)
+        _assert_basis_equal(ref, resumed)
+        # resume of the FINISHED workdir is a no-op returning the artifact
+        again = build_basis(source=S, workdir=wd, resume=True, **common)
+        _assert_basis_equal(ref, again)
+        assert not os.path.isdir(os.path.join(wd, "build")), \
+            "build scratch survived finalize"
+
+
+def test_workdir_fresh_build_wipes_stale_scratch(tmp_path):
+    S = make_smooth_matrix(n=60, m=40, dtype=np.float32)
+    wd = str(tmp_path / "w")
+    # kill in the SECOND chunk so the first chunk's checkpoint exists
+    with pytest.raises(_SimulatedCrash):
+        build_basis(source=S, strategy="greedy", tau=1e-6, chunk=4,
+                    workdir=wd, callback=_crashing_callback(8))
+    assert os.path.isdir(os.path.join(wd, "build"))
+    # resume=False must NOT splice onto the stale checkpoints
+    b = build_basis(source=S, strategy="greedy", tau=1e-6, chunk=4,
+                    workdir=wd)
+    ref = build_basis(source=S, strategy="greedy", tau=1e-6, chunk=4)
+    _assert_basis_equal(ref, b)
+
+
+def test_workdir_checkpoint_dir_mutually_exclusive():
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        ReductionSpec(source=np.eye(4, dtype=np.float32),
+                      workdir="a", checkpoint_dir="b")
+
+
+# ------------------------------------------------- corrupted-artifact load --
+
+
+def _save_two_steps(tmp_path):
+    S = make_smooth_matrix(n=40, m=24, dtype=np.float32)
+    basis = build_basis(source=S, strategy="greedy", tau=1e-6)
+    d = str(tmp_path / "art")
+    basis.save(d)  # step 0
+    basis.save(d)  # step 1 (newest)
+    return basis, d
+
+
+def test_load_falls_back_on_corrupt_leaf(tmp_path):
+    basis, d = _save_two_steps(tmp_path)
+    q = os.path.join(d, "step_00000001", "Q.npy")
+    with open(q, "r+b") as f:  # flip a byte -> CRC mismatch
+        f.seek(os.path.getsize(q) - 1)
+        b = f.read(1)
+        f.seek(os.path.getsize(q) - 1)
+        f.write(bytes([b[0] ^ 0xFF]))
+    loaded = ReducedBasis.load(d)
+    _assert_basis_equal(basis, loaded)
+
+
+def test_load_falls_back_on_truncated_manifest(tmp_path):
+    basis, d = _save_two_steps(tmp_path)
+    m = os.path.join(d, "step_00000001", "manifest.json")
+    with open(m, "r+b") as f:
+        f.truncate(os.path.getsize(m) // 2)
+    loaded = ReducedBasis.load(d)
+    _assert_basis_equal(basis, loaded)
+
+
+def test_load_error_names_offending_file(tmp_path):
+    import re
+
+    from repro.checkpoint import load_checkpoint_raw
+
+    basis, d = _save_two_steps(tmp_path)
+    for s in ("step_00000000", "step_00000001"):
+        m = os.path.join(d, s, "manifest.json")
+        with open(m, "r+b") as f:
+            f.truncate(1)
+    with pytest.raises(IOError, match="manifest"):
+        load_checkpoint_raw(d)
+    with pytest.raises(
+            IOError, match=re.escape(os.path.join(d, "step_00000001"))):
+        load_checkpoint_raw(d, step=1)
+
+
+def test_load_skips_non_artifact_steps(tmp_path):
+    """A raw driver checkpoint in the artifact dir must not shadow it."""
+    from repro.checkpoint import save_checkpoint
+
+    basis, d = _save_two_steps(tmp_path)
+    save_checkpoint({"not_an_artifact": np.zeros(3)}, d, 2)
+    loaded = ReducedBasis.load(d)
+    _assert_basis_equal(basis, loaded)
+
+
+def test_orphan_tmp_dirs_collected_on_save(tmp_path):
+    basis, d = _save_two_steps(tmp_path)
+    orphan = os.path.join(d, "step_00000009.tmp")
+    os.makedirs(orphan)
+    basis.save(d)
+    assert not os.path.exists(orphan)
+
+
+# ----------------------------------------------------- principled floor-stop
+
+
+class TestFloorStop:
+    """The PR-5 floor-regime scenario ends in STOP_FLOOR on all four
+    driver paths (and the verdict reaches artifact provenance)."""
+
+    @pytest.fixture(scope="class")
+    def S(self):
+        return floor_regime_matrix()
+
+    def _check(self, res):
+        from repro.core.greedy import STOP_FLOOR, STOP_NAMES
+
+        assert int(res.stop) == STOP_FLOOR, STOP_NAMES.get(int(res.stop))
+        # terminated above tau (the whole point: tau was unreachable)
+        assert float(res.errs[int(res.k) - 1]) > FLOOR_TAU
+
+    def test_resident_greedy(self, S):
+        from repro.core.greedy import rb_greedy
+
+        self._check(rb_greedy(S, FLOOR_TAU, refresh_safety=FLOOR_SAFETY))
+
+    def test_block_greedy(self, S):
+        from repro.core.block_greedy import _rb_greedy_block_impl
+
+        self._check(_rb_greedy_block_impl(
+            S, FLOOR_TAU, p=4, refresh_safety=FLOOR_SAFETY))
+
+    def test_streamed(self, S):
+        from repro.core.streaming import rb_greedy_streamed
+
+        self._check(rb_greedy_streamed(
+            S, FLOOR_TAU, tile_m=50, refresh_safety=FLOOR_SAFETY))
+
+    def test_distributed(self, S):
+        from repro.compat import make_auto_mesh
+        from repro.core.distributed import distributed_greedy
+
+        mesh = make_auto_mesh((1,), ("cols",))
+        self._check(distributed_greedy(
+            S, FLOOR_TAU, max_k=min(S.shape), mesh=mesh,
+            refresh_safety=FLOOR_SAFETY))
+
+    def test_floor_stop_in_provenance(self, S, tmp_path):
+        b = build_basis(source=S, strategy="greedy", tau=FLOOR_TAU,
+                        refresh_safety=FLOOR_SAFETY,
+                        workdir=str(tmp_path / "w"))
+        assert b.provenance["stop"] == "STOP_FLOOR"
+        assert ReducedBasis.load(
+            str(tmp_path / "w")).provenance["stop"] == "STOP_FLOOR"
+
+
+# ------------------------------------------------- fault harness unit tests
+
+
+def test_faulty_provider_transient_heals(monkeypatch):
+    monkeypatch.setenv("REPRO_IO_RETRY_BASE_S", "0.001")
+    S = make_smooth_matrix(n=30, m=20, dtype=np.float32)
+    p = FaultyProvider(ArrayProvider(S), FaultPlan(transient_every=2))
+    tiles = [np.asarray(p.tile(lo, hi)) for lo, hi in p.tiles(5)]
+    assert np.array_equal(np.concatenate(tiles, axis=1), S)
+
+
+def test_faulty_provider_hard_raise():
+    S = make_smooth_matrix(n=30, m=20, dtype=np.float32)
+    p = FaultyProvider(ArrayProvider(S), FaultPlan(raise_at_tile=1))
+    p.tile(0, 5)
+    with pytest.raises(IOError, match="injected hard I/O fault"):
+        p.tile(5, 10)
+
+
+def test_as_provider_env_autowrap(monkeypatch):
+    S = make_smooth_matrix(n=30, m=20, dtype=np.float32)
+    monkeypatch.setenv("REPRO_FAULT_TRANSIENT_EVERY", "3")
+    p = as_provider(S)
+    assert isinstance(p, FaultyProvider)
+    assert as_provider(p) is p  # never double-wrapped
+    monkeypatch.delenv("REPRO_FAULT_TRANSIENT_EVERY")
+    assert not isinstance(as_provider(S), FaultyProvider)
+
+
+def test_memmap_read_retry_transient(tmp_path, monkeypatch):
+    """The retry wrapper survives transient faults on real file reads."""
+    from repro.data.providers import MemmapProvider, _read_with_retry
+
+    monkeypatch.setenv("REPRO_IO_RETRY_BASE_S", "0.001")
+    S = make_smooth_matrix(n=30, m=20, dtype=np.float32)
+    path = write_snapshot_npy(str(tmp_path / "s.npy"), S)
+    prov = MemmapProvider(path)
+    assert np.array_equal(np.asarray(prov.tile(3, 11)), S[:, 3:11])
+
+    calls = [0]
+
+    def flaky():
+        calls[0] += 1
+        if calls[0] < 3:
+            raise IOError("transient")
+        return "ok"
+
+    assert _read_with_retry(flaky, "test") == "ok"
+    assert calls[0] == 3
+
+    def always():
+        raise IOError("permanent")
+
+    monkeypatch.setenv("REPRO_IO_RETRIES", "2")
+    with pytest.raises(IOError, match="failed after 3 attempts"):
+        _read_with_retry(always, "doomed read")
+
+
+# --------------------------------------------- supervisor restart policy ---
+
+
+def test_supervisor_restart_budget_and_backoff(tmp_path):
+    """Crash-twice-then-succeed fits a budget of 2 but not 1."""
+    from repro.launch.supervisor import run_supervised
+
+    marker = tmp_path / "attempts"
+    prog = (f"import os, sys\n"
+            f"p = {str(marker)!r}\n"
+            f"n = int(open(p).read()) if os.path.exists(p) else 0\n"
+            f"open(p, 'w').write(str(n + 1))\n"
+            f"sys.exit(0 if n >= 2 else 7)\n")
+    cmd = [sys.executable, "-c", prog]
+    rc = run_supervised(cmd, max_restarts=2, backoff_base_s=0.01)
+    assert rc == 0
+    assert marker.read_text() == "3"
+
+    marker.unlink()
+    rc = run_supervised(cmd, max_restarts=1, backoff_base_s=0.01)
+    assert rc == 7  # budget of 1 exhausted before the 3rd attempt
+
+
+# ------------------------------------------------ supervised e2e smoke -----
+
+_BUILD_PROG = """
+import sys
+import numpy as np
+from repro.api import build_basis
+b = build_basis(source=sys.argv[1], strategy="streamed", tau=1e-6,
+                tile_m=8, block_p=4, checkpoint_every_tiles=1,
+                workdir=sys.argv[2], resume=True)
+print("k =", b.k)
+"""
+
+
+@pytest.mark.slow
+def test_supervised_streamed_build_survives_kill(tmp_path, monkeypatch):
+    """Kill a streamed blocked build mid-run (randomized tile) AND
+    mid-finalize; the supervisor's relaunch must finalize an artifact
+    bit-identical to the uninterrupted build, with no partial artifact
+    ever loadable."""
+    from repro.launch.supervisor import run_supervised
+
+    S = make_smooth_matrix(n=60, m=48, dtype=np.complex64)
+    npy = write_snapshot_npy(str(tmp_path / "S.npy"), S)
+    # the supervised subprocess inherits this test's environment
+    monkeypatch.setenv("PYTHONPATH", SRC)
+    monkeypatch.setenv("JAX_PLATFORMS", "cpu")
+
+    def build(workdir):
+        os.makedirs(workdir, exist_ok=True)
+        return run_supervised(
+            [sys.executable, "-c", _BUILD_PROG, npy, workdir],
+            max_restarts=2, backoff_base_s=0.0,
+            log_path=os.path.join(workdir, "run.log"))
+
+    # uninterrupted reference
+    assert build(str(tmp_path / "ref")) == 0
+    ref = ReducedBasis.load(str(tmp_path / "ref"))
+
+    kill_tile = int(np.random.default_rng(0).integers(3, 30))
+    wd = str(tmp_path / "killed")
+    monkeypatch.setenv("REPRO_FAULT_KILL_AT_TILE", str(kill_tile))
+    monkeypatch.setenv("REPRO_FAULT_KILL_AT_FINALIZE", "1")
+    monkeypatch.setenv("REPRO_FAULT_ONCE", str(tmp_path / "fault_marker"))
+    rc = build(wd)
+    monkeypatch.delenv("REPRO_FAULT_KILL_AT_TILE")
+    monkeypatch.delenv("REPRO_FAULT_KILL_AT_FINALIZE")
+    monkeypatch.delenv("REPRO_FAULT_ONCE")
+    assert rc == 0, open(os.path.join(wd, "run.log"), "rb").read()[-2000:]
+    # both faults actually fired (at-most-once markers exist)
+    assert os.path.exists(str(tmp_path / "fault_marker") + ".kill_at_tile")
+    assert os.path.exists(
+        str(tmp_path / "fault_marker") + ".kill_at_finalize")
+    _assert_basis_equal(ref, ReducedBasis.load(wd))
+    # the artifact dir holds exactly the finalized step — the finalize
+    # kill's fully-written-but-unrenamed tmp never became observable
+    assert [d for d in os.listdir(wd)
+            if d.startswith("step_") and not d.endswith(".tmp")] \
+        == ["step_00000000"]
+
+
+# ------------------------------------------------------------- enrichment --
+
+
+def test_enrich_extends_and_resaves(tmp_path):
+    S = make_smooth_matrix(n=60, m=40, dtype=np.complex64)
+    wd = str(tmp_path / "w")
+    b = build_basis(source=S, strategy="streamed", tau=1e-6, tile_m=16,
+                    workdir=wd)
+    # new snapshots: the old family plus genuinely new directions
+    rng = np.random.default_rng(5)
+    extra = (rng.standard_normal((60, 6))
+             + 1j * rng.standard_normal((60, 6))).astype(np.complex64)
+    S2 = np.concatenate([S, extra], axis=1)
+    e = b.enrich(S2, tile_m=16)
+    assert e.k > b.k
+    # seed bases kept verbatim, new pivots index the enrichment source
+    assert np.array_equal(np.asarray(e.Q[:, :b.k]), np.asarray(b.Q))
+    assert np.array_equal(np.asarray(e.pivots[:b.k]), np.asarray(b.pivots))
+    assert all(int(p) < S2.shape[1] for p in e.pivots[b.k:])
+    # the enriched basis covers the new family down to the c64 working
+    # precision (the greedy may stop at the rank guard ~50*eps*scale, so
+    # compare against a precision-scaled bound, not tau itself)
+    E = S2 - np.asarray(e.Q) @ (np.asarray(e.Q).conj().T @ S2)
+    scale = float(np.linalg.norm(S2, axis=0).max())
+    assert float(np.linalg.norm(E, axis=0).max()) < 1e-4 * scale
+    assert e.provenance["enriched_from_k"] == b.k
+    # re-saved as the newest artifact step in the same workdir
+    assert ReducedBasis.load(wd).k == e.k
+
+
+def test_enrich_noop_when_covered(tmp_path):
+    S = make_smooth_matrix(n=60, m=40, dtype=np.float32)
+    b = build_basis(source=S, strategy="greedy", tau=1e-6)
+    # source already covered well below this tau: no new bases.  (The f32
+    # build rank-guard-stops with true residuals ~2e-4, legitimately
+    # enrichable at tighter taus — so test no-op safely above that.)
+    e = b.enrich(S[:, :10], tau=1e-3, tile_m=8, save=False)
+    assert e.k == b.k
+    assert np.array_equal(np.asarray(e.Q), np.asarray(b.Q))
