@@ -34,16 +34,12 @@ def steady_min(fn, per: int, repeats: int = 12, warmup: int = 3) -> float:
     what a production driver loop experiences) and the minimum rejects
     load spikes / unlucky thread placement on a shared CI box.  Single-shot
     wall clock swings ~±40% on the 2-core box; this is the stable method
-    every committed hot-path BENCH row uses.
+    every committed hot-path BENCH row uses.  (Canonical implementation:
+    :func:`repro.timing.steady_min` — shared with the serving launcher.)
     """
-    for _ in range(warmup):
-        fn()
-    best = float("inf")
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        fn()
-        best = min(best, time.perf_counter() - t0)
-    return best / per
+    from repro.timing import steady_min as _impl
+
+    return _impl(fn, per=per, repeats=repeats, warmup=warmup)
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):

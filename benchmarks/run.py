@@ -14,6 +14,8 @@ machine-readably across PRs.
   rem5.4   — FLOP-count model validation
   perf_*   — greedy_update fusion evidence
   roofline — the full arch x shape x mesh baseline table (from artifacts)
+  sketch_vs_greedy — randomized one-pass range-finder vs streamed greedy
+             pass-count / wall-time at a fixed rank target
 
 The chunked hot-path row shards snapshot columns over one host device per
 core (XLA's CPU GEMV is single-threaded; the column-sharded sweep is how
@@ -46,6 +48,7 @@ def main() -> None:
         ortho_timing,
         pivot_timing,
         roofline_table,
+        sketch_vs_greedy,
         strong_scaling,
         weak_scaling,
     )
@@ -54,7 +57,8 @@ def main() -> None:
     # BENCH_streaming.json — not in this loop, so the smoke runs once)
     ok = True
     for mod in (pivot_timing, ortho_timing, flops_model, kernel_fusion,
-                strong_scaling, weak_scaling, roofline_table):
+                strong_scaling, weak_scaling, roofline_table,
+                sketch_vs_greedy):
         try:
             mod.run(csv=True)
         except Exception as e:  # keep the harness going; report at the end

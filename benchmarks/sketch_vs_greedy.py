@@ -1,0 +1,80 @@
+"""Sketch-vs-greedy: pass count and wall time to a fixed rank target.
+
+The randomized range-finder's pitch is pass complexity: greedy streams S
+once per accepted basis vector (once per ``block_p`` when blocked), the
+sketch streams it ``1 + 2*power`` times TOTAL.  This sweep builds the
+same rank-``max_k`` basis over one memmapped snapshot family through
+
+  sketch_vs_greedy_rand_pw0    randomized, power=0   (1 pass)
+  sketch_vs_greedy_rand_pw1    randomized, power=1   (3 passes)
+  sketch_vs_greedy_stream_bp1  streamed greedy       (~max_k passes)
+  sketch_vs_greedy_stream_bp8  streamed greedy, block_p=8 (~max_k/8)
+
+and emits per-build wall time with the pass count in the derived column
+— the measured form of the ``"auto"`` cutover rule (sketch wins when
+greedy's pass count exceeds ~2x the sketch's).
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+
+import numpy as np
+
+from benchmarks.common import emit, steady_min
+from repro.core.randomized import rb_randomized_streamed
+from repro.core.streaming import rb_greedy_streamed
+from repro.data.providers import MemmapProvider, write_snapshot_npy
+
+_N, _M = 1024, 4096
+_MAX_K = 32
+_TILE_M = 512
+
+
+def _snapshots(path: str) -> MemmapProvider:
+    # smooth parameterized family (fast-decaying n-width) at a size whose
+    # streamed build is dominated by the per-pass sweep, not init
+    x = np.linspace(0.0, 1.0, _N, dtype=np.float64)[:, None]
+    nu = np.linspace(0.5, 4.0, _M, dtype=np.float64)[None, :]
+    S = (np.sin(2 * np.pi * nu * x) * np.exp(-nu * x)).astype(np.float32)
+    return MemmapProvider(write_snapshot_npy(path, S))
+
+
+def run(csv: bool = True):
+    results = []
+    with tempfile.TemporaryDirectory() as d:
+        prov = _snapshots(os.path.join(d, "S.npy"))
+
+        def build_rand(power):
+            return lambda: rb_randomized_streamed(
+                prov, tau=None, max_k=_MAX_K, power=power, tile_m=_TILE_M)
+
+        def build_greedy(block_p):
+            return lambda: rb_greedy_streamed(
+                prov, tau=0.0, max_k=_MAX_K, block_p=block_p,
+                tile_m=_TILE_M, keep_R=False)
+
+        n_tiles = -(-_M // _TILE_M)
+        cases = [
+            ("rand_pw0", build_rand(0), 1),
+            ("rand_pw1", build_rand(1), 3),
+            ("stream_bp1", build_greedy(1), _MAX_K),
+            ("stream_bp8", build_greedy(8), -(-_MAX_K // 8)),
+        ]
+        for name, fn, passes in cases:
+            t = steady_min(fn, per=1, repeats=3, warmup=1)
+            results.append((name, t, passes))
+            if csv:
+                emit(
+                    f"sketch_vs_greedy_{name}",
+                    t * 1e6,
+                    f"passes={passes};k={_MAX_K};N={_N};M={_M};"
+                    f"tiles={n_tiles}",
+                )
+    return results
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run(csv=True)

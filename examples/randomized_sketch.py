@@ -1,0 +1,68 @@
+"""One-pass randomized sketch of a GW waveform family, then greedy refine.
+
+Greedy streams the snapshot family once per accepted basis vector; the
+randomized range-finder (``strategy="randomized"``) streams it ONCE, no
+matter the rank: each on-the-fly waveform tile is folded into a small
+sketch ``Y = S @ Omega`` whose dense SVD yields the basis and the
+spectrum estimates — the only sub-O(k)-pass road to the paper's 0.5 TB
+regime.  ``strategy="sketch+greedy"`` then buys back greedy's exact tau
+semantics: the sketch basis warm-starts the streamed greedy, which
+refines with real pivots only where the sketch fell short.
+
+    python examples/randomized_sketch.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.api import ReductionSpec, build_basis  # noqa: E402
+from repro.gw import chirp_grid, frequency_grid  # noqa: E402
+
+
+def main():
+    f = frequency_grid(20.0, 512.0, 1200)
+    m1, m2 = chirp_grid(mc_min=9.0, mc_max=11.0, n_mc=60, n_eta=25)
+
+    # --- one streamed pass: sketch + dense SVD --------------------------
+    spec = ReductionSpec.waveform(
+        f, m1, m2, dtype=jnp.complex64,
+        strategy="randomized", tau=1e-4, max_k=80, tile_m=300,
+        sketch_p=10, sketch_power=1,
+    )
+    N, M = spec.source.shape
+    print(f"waveform family: N={N} x M={M} complex64; "
+          f"sketch width ell={80 + 10}, passes={1 + 2 * 1}")
+    basis = build_basis(spec)
+    sk = basis.provenance["sketch"]
+    print(f"randomized: rank k={basis.k} from {sk['n_passes']} pass(es) "
+          f"over {sk['n_tiles']} tiles in "
+          f"{basis.provenance['wall_time_s']:.2f}s")
+    est = basis.provenance["sigma_estimates"]
+    print(f"  sigma estimates (Ritz): {est[0]:.3e} ... {est[basis.k - 1]:.3e}")
+
+    # --- sketch warm-start + greedy refinement to exact tau -------------
+    refined = build_basis(ReductionSpec.waveform(
+        f, m1, m2, dtype=jnp.complex64,
+        strategy="sketch+greedy", tau=1e-4, max_k=120, tile_m=300,
+        sketch_p=10, sketch_power=1, keep_R=False,
+    ))
+    k0 = refined.provenance["sketch"]["k0"]
+    added = int(np.sum(np.asarray(refined.pivots) >= 0))
+    print(f"sketch+greedy: sketch seeded k0={k0}, greedy refined with "
+          f"{added} pivot(s) to k={refined.k} "
+          f"(stop={refined.provenance.get('stop')})")
+
+    # validate both against a resident reconstruction of the family
+    S = spec.source.tile(0, M)
+    for name, b in (("randomized", basis), ("sketch+greedy", refined)):
+        err = float(jnp.max(b.per_column_errors(S)))
+        print(f"  {name}: max per-column projection error {err:.3e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,8 @@ driver from the problem shape, a device-memory budget and a DRAM-roofline
 machine model:
 
   mesh given                         -> "distributed"
+  roof-bound, max_k set, greedy pass
+    count > 2x the sketch's          -> "randomized" (one-pass range-finder)
   fits budget, sweep roof-bound      -> "block_greedy" (BLAS-3 panel sweep)
   fits budget otherwise              -> "greedy"   (resident chunked)
   too big, sweep roof-bound          -> "streamed" + block_p (blocked)
@@ -199,6 +201,22 @@ def _auto_strategy(spec: ReductionSpec, shape, dtype):
         why = f"{fit_why}; {roof_why}"
         if roof_bound:
             why += f"; blocked sweep, block_p={block_p}"
+        # On a roof-bound sweep every basis costs ~1/block_p of a DRAM
+        # read of S, so a greedy build streams S ~ceil(max_k / block_p)
+        # times; the one-pass sketch pays 1 + 2*sketch_power passes
+        # regardless of k.  When a rank target exists (max_k — without
+        # one the sketch width is unbounded and greedy's tau stop is the
+        # only control) and greedy's pass count exceeds TWICE the
+        # sketch's, the range-finder wins even after paying its
+        # probabilistic-vs-exact error margin.
+        if roof_bound and spec.max_k is not None:
+            greedy_passes = -(-spec.max_k // max(block_p, 1))
+            sketch_passes = 1 + 2 * spec.sketch_power
+            if greedy_passes > 2 * sketch_passes:
+                choice = "randomized"
+                block_p = spec.block_p  # blocking is a greedy-only knob
+                why += (f"; ~{greedy_passes} greedy passes over S vs "
+                        f"{sketch_passes} sketch pass(es) -> randomized")
     logger.info(
         "auto strategy -> %r for shape %s %s (%s)",
         choice, tuple(shape), jnp.dtype(dtype).name, why,
@@ -314,14 +332,97 @@ def _build_pod(spec, S, ckpt_dir=None):
             np.asarray(res.sigmas[:k]), None, k, {})
 
 
+def _sketch_extras(res):
+    """Randomized provenance: sketch params + singular-value estimates."""
+    return {
+        "sketch": {
+            "ell": int(res.ell),
+            "p": int(res.sketch_p),
+            "power": int(res.power),
+            "seed": int(res.seed),
+            "kind": res.kind,
+            "n_passes": int(res.n_passes),
+            "n_tiles": int(res.n_tiles),
+        },
+        "sigma_estimates": [float(s) for s in res.svals],
+    }
+
+
+def _run_sketch(spec, ckpt_dir):
+    from repro.core.randomized import rb_randomized_streamed
+
+    return rb_randomized_streamed(
+        spec.source, tau=spec.tau, max_k=spec.max_k,
+        sketch_p=spec.sketch_p, power=spec.sketch_power,
+        seed=spec.sketch_seed, kind=spec.sketch_kind,
+        tile_m=spec.tile_m, backend=spec.backend,
+        checkpoint_dir=ckpt_dir,
+        checkpoint_every_tiles=spec.checkpoint_every_tiles,
+        resume=spec.resume and ckpt_dir is not None,
+    )
+
+
+def _build_randomized(spec, _S_unused=None, ckpt_dir=None):
+    res = _run_sketch(spec, ckpt_dir)
+    k = int(res.k)
+    # POD-shaped result: no pivots (the basis spans a sketched range, not
+    # selected columns), errs are the spectrum estimates.
+    return (res.Q, np.zeros((0,), np.int32),
+            np.asarray(res.svals[:k]), None, k, _sketch_extras(res))
+
+
+def _build_sketch_greedy(spec, _S_unused=None, ckpt_dir=None):
+    """One-pass sketch initializes Q; streamed greedy refines to tau.
+
+    The sketch's basis enters :func:`repro.core.streaming.
+    rb_greedy_streamed` through the PR-6 ``warm_start=`` seam with
+    sentinel pivots (-1: these columns were not selected from S), and the
+    greedy loop extends it with whatever directions the sketch missed —
+    typically zero-to-few sweeps on well-sketched families, at tau's
+    EXACT Eq.-(6.3) error control rather than the probabilistic bound.
+    Refinement runs stepwise (block_p=1): the blocked compaction path
+    drops pivot==-1 slots, which would evict the warm columns.
+    """
+    from repro.core.streaming import rb_greedy_streamed
+
+    sketch_dir = os.path.join(ckpt_dir, "sketch") if ckpt_dir else None
+    refine_dir = os.path.join(ckpt_dir, "refine") if ckpt_dir else None
+    res = _run_sketch(spec, sketch_dir)
+    k0 = int(res.k)
+    warm = {
+        "Q": res.Q,
+        "pivots": np.full((k0,), -1, np.int32),
+        "errs": np.asarray(res.svals[:k0]),
+    }
+    refined = rb_greedy_streamed(
+        spec.source, tau=spec.tau, max_k=spec.max_k, tile_m=spec.tile_m,
+        block_p=1, kappa=spec.kappa, max_passes=spec.max_passes,
+        refresh=spec.refresh, refresh_safety=spec.refresh_safety,
+        backend=spec.backend, panel_ortho=spec.panel_ortho,
+        keep_R=spec.keep_R, checkpoint_dir=refine_dir,
+        checkpoint_every_tiles=spec.checkpoint_every_tiles,
+        resume=spec.resume, callback=spec.callback, warm_start=warm,
+    )
+    out = _trim_greedy(refined, _sketch_extras(res))
+    out[5]["sketch"]["k0"] = k0
+    out[5]["sketch"]["refined_k"] = out[4]
+    return out
+
+
 _BUILDERS = {
     "greedy": _build_greedy,
     "block_greedy": _build_block_greedy,
     "distributed": _build_distributed,
     "streamed": _build_streamed,
+    "randomized": _build_randomized,
+    "sketch+greedy": _build_sketch_greedy,
     "mgs": _build_mgs,
     "pod": _build_pod,
 }
+
+# Strategies that stream the provider directly and never materialize the
+# source on device (build_basis skips materialize_source for these).
+_STREAMING_STRATEGIES = ("streamed", "randomized", "sketch+greedy")
 
 
 def build_basis(spec: ReductionSpec | None = None,
@@ -383,7 +484,7 @@ def build_basis(spec: ReductionSpec | None = None,
     ckpt_dir = build_dir if build_dir is not None else spec.checkpoint_dir
 
     strategy = spec.strategy
-    if strategy == "streamed":
+    if strategy in _STREAMING_STRATEGIES:
         shape, dtype = (p := as_provider(spec.source)).shape, p.dtype
         S = None
     else:
@@ -398,7 +499,7 @@ def build_basis(spec: ReductionSpec | None = None,
                 # the roofline model opted into blocking: the chosen panel
                 # width must reach the driver (and the provenance)
                 spec = dataclasses.replace(spec, block_p=auto_p)
-        if strategy == "streamed":
+        if strategy in _STREAMING_STRATEGIES:
             S = None
         else:
             S = materialize_source(spec.source)

@@ -23,11 +23,13 @@ from typing import Any, Callable, Optional
 # Reduction strategies build_basis dispatches on.  "auto" resolves to
 # "distributed" (a mesh was given), "greedy" / "block_greedy" (the problem
 # fits the device memory budget; blocked when the Eq.-(6.3) sweep is
-# DRAM-roof-bound) or "streamed" (it does not fit; blocked under the same
-# roofline test) — see repro.api.build.
+# DRAM-roof-bound), "streamed" (it does not fit; blocked under the same
+# roofline test), or "randomized" (a max_k is given and the roofline
+# model predicts the greedy pass count costs more than twice the
+# sketch's 1 + 2*sketch_power passes) — see repro.api.build.
 STRATEGIES = (
     "pod", "mgs", "greedy", "block_greedy", "streamed", "distributed",
-    "auto",
+    "randomized", "sketch+greedy", "auto",
 )
 
 
@@ -107,6 +109,14 @@ class ReductionSpec:
         (:mod:`repro.api.roofline`; ``REPRO_ROOFLINE_MEASURE=0`` opts
         out), then to conservative per-platform defaults (see
         :func:`repro.api.build.machine_roofline`).
+      sketch_p, sketch_power, sketch_seed, sketch_kind: randomized
+        range-finder knobs (``randomized`` / ``sketch+greedy``):
+        oversampling columns beyond ``max_k`` (the bound's p),
+        subspace-iteration rounds (2 extra passes over S each),
+        the test-matrix seed, and its distribution (``"gaussian"`` or
+        ``"rademacher"``) — blocks are derived per tile from
+        ``fold_in(PRNGKey(sketch_seed), tile_index)``, so builds are
+        bit-reproducible and resumable.
     """
 
     source: Any = None
@@ -134,6 +144,10 @@ class ReductionSpec:
     bandwidth_gbps: Optional[float] = None
     peak_gflops: Optional[float] = None
     cache_bytes: Optional[int] = None
+    sketch_p: int = 10
+    sketch_power: int = 0
+    sketch_seed: int = 0
+    sketch_kind: str = "gaussian"
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:

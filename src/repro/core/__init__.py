@@ -4,8 +4,9 @@ NOTE: these modules are the strategy *engines*.  The recommended entry
 point is the front door, :mod:`repro.api` —
 ``build_basis(source=S, tau=...)`` dispatches to the right engine
 (``strategy="pod" | "mgs" | "greedy" | "block_greedy" | "streamed" |
-"distributed" | "auto"``) and returns one ``ReducedBasis`` artifact with
-``eim()`` / ``roq_weights()`` / ``save()`` built in.
+"distributed" | "randomized" | "sketch+greedy" | "auto"``) and returns
+one ``ReducedBasis`` artifact with ``eim()`` / ``roq_weights()`` /
+``save()`` built in.
 
 - :mod:`repro.core.pod`            -- Algorithm 1 (POD via SVD).
 - :mod:`repro.core.mgs`            -- Algorithm 2 (MGS with column pivoting;
@@ -22,6 +23,10 @@ point is the front door, :mod:`repro.api` —
 - :mod:`repro.core.streaming`      -- out-of-core tile-streamed greedy over
   snapshot providers (M unbounded; peak device memory
   O(N(max_k+2*tile_m)) with next-tile prefetch).
+- :mod:`repro.core.randomized`     -- streamed randomized range-finder
+  (sketched POD): ONE pass over the provider builds Y = S @ Omega, then
+  a small dense SVD; optional power iteration; resumable +
+  bit-reproducible via counter-derived per-tile test blocks.
 - :mod:`repro.core.backend`        -- hot-loop primitive dispatch
   (fused Pallas TPU kernels vs pure-jnp XLA; see its module docstring).
 """
@@ -40,6 +45,10 @@ from repro.core.greedy import (
     rb_greedy_stepwise,
 )
 from repro.core.streaming import StreamedGreedyResult, rb_greedy_streamed
+from repro.core.randomized import (
+    RandomizedSketchResult,
+    rb_randomized_streamed,
+)
 from repro.core.rrqr import optimal_rrqr
 from repro.core.reconstruction import reconstruction
 from repro.core.eim import eim_nodes, empirical_interpolant, roq_weights
@@ -47,6 +56,7 @@ from repro.core.eim import eim_nodes, empirical_interpolant, roq_weights
 __all__ = [
     "pod", "pod_basis", "mgs_pivoted_qr", "GreedyResult", "rb_greedy",
     "rb_greedy_stepwise", "rb_greedy_streamed", "StreamedGreedyResult",
+    "rb_randomized_streamed", "RandomizedSketchResult",
     "imgs_orthogonalize", "optimal_rrqr",
     "reconstruction", "eim_nodes", "empirical_interpolant", "roq_weights",
     "default_backend", "resolve_backend", "set_default_backend",

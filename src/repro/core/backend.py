@@ -40,13 +40,19 @@ Dispatch contract
 * Both implementations satisfy the same numerical contract (identical
   signatures and semantics, see ``kernels/*/ref.py``); pivot-for-pivot
   parity of whole drivers is asserted in ``tests/test_backend.py``.
-* Four primitives are dispatched: ``pivot_update`` and ``project_pass``
-  (above), plus the two blocked panel forms used by the block-pivoted
+* Six primitives are dispatched: ``pivot_update`` and ``project_pass``
+  (above), the two blocked panel forms used by the block-pivoted
   drivers: ``block_sweep`` (the BLAS-3 Eq.-(6.3) sweep;
   :mod:`repro.kernels.block_sweep` — one read of S per p bases) and
   ``panel_project`` (the BLAS-3 classical-GS projection of a whole (N, p)
   candidate panel; :mod:`repro.kernels.imgs_panel` — one read of Q per
-  panel instead of per candidate).
+  panel instead of per candidate), plus the two sketch GEMMs the
+  randomized range-finder (:mod:`repro.core.randomized`) streams tiles
+  through: ``sketch_fold`` (``Y += T @ Omega``) and ``sketch_project``
+  (``T^H @ Y``).  Both are pure GEMMs, already MXU/BLAS-3-shaped, so the
+  ``pallas`` route shares the ``xla`` plane-split form (XLA emits the
+  optimal GEMM; there is nothing left for a hand-written kernel to fuse)
+  while keeping the no-complex-dot HLO guarantee.
 """
 
 from __future__ import annotations
@@ -265,3 +271,67 @@ def block_sweep(
     if resolved == "xla" and jnp.iscomplexobj(S):
         return _plane_split_block_sweep(Qnew, S, acc)
     return _xla_block(Qnew, S, acc)
+
+
+def _plane_split_sketch_fold(T, Omega, Y):
+    """Complex sketch fold ``Y += T @ Omega`` as four real GEMMs on split
+    re/im planes (see :func:`_plane_split_pivot` for why: XLA lowers
+    complex matmuls on CPU to scalar loops an order of magnitude slower
+    than their real counterparts).  Same math as ``Y + T @ Omega`` up to
+    float summation order."""
+    Tr, Ti = T.real, T.imag
+    Or, Oi = Omega.real, Omega.imag
+    Yr = Y.real + (Tr @ Or - Ti @ Oi)
+    Yi = Y.imag + (Tr @ Oi + Ti @ Or)
+    return jax.lax.complex(Yr, Yi).astype(Y.dtype)
+
+
+def sketch_fold(
+    T: jax.Array,
+    Omega: jax.Array,
+    Y: jax.Array,
+    backend: str | None = None,
+):
+    """One tile's contribution to the randomized sketch: ``Y + T @ Omega``.
+
+    ``T`` is an (N, m) snapshot tile, ``Omega`` the matching (m, ell) test
+    block, ``Y`` the running (N, ell) sketch ``Y = S @ Omega`` — the
+    single-pass range-finder accumulation of :mod:`repro.core.randomized`.
+    ``xla``/``pallas`` run complex inputs on split re/im planes (four real
+    GEMMs, mirroring :func:`block_sweep`; the sketch GEMM is already
+    BLAS-3/MXU-shaped, so there is no dedicated Pallas kernel);
+    ``xla_ref`` is the literal form, complex GEMM included.
+    """
+    resolved = resolve_backend(backend)
+    if resolved != "xla_ref" and jnp.iscomplexobj(T):
+        return _plane_split_sketch_fold(T, Omega, Y)
+    return Y + T @ Omega
+
+
+def _plane_split_sketch_project(T, Y):
+    """Complex sketch co-range projection ``T^H @ Y`` as four real GEMMs
+    on split re/im planes (see :func:`_plane_split_pivot`)."""
+    Tr, Ti = T.real, T.imag
+    Yr, Yi = Y.real, Y.imag
+    # Z = T^H Y = (Tr - i Ti)^T (Yr + i Yi)
+    Zr = Tr.T @ Yr + Ti.T @ Yi
+    Zi = Tr.T @ Yi - Ti.T @ Yr
+    return jax.lax.complex(Zr, Zi).astype(T.dtype)
+
+
+def sketch_project(
+    T: jax.Array,
+    Y: jax.Array,
+    backend: str | None = None,
+):
+    """One tile's co-range projection for the power pass: ``T^H @ Y``.
+
+    ``T`` is an (N, m) snapshot tile, ``Y`` the current (N, ell) range
+    estimate; the returned (m, ell) block is this tile's row slab of
+    ``Z = S^H Y`` (the odd pass of a randomized power iteration).  Backend
+    routing mirrors :func:`sketch_fold`.
+    """
+    resolved = resolve_backend(backend)
+    if resolved != "xla_ref" and jnp.iscomplexobj(T):
+        return _plane_split_sketch_project(T, Y)
+    return T.conj().T @ Y

@@ -1,0 +1,454 @@
+"""Randomized sketch (range-finder) model reduction over snapshot providers.
+
+The greedy family streams the FULL snapshot matrix once per accepted basis
+vector (or once per ``block_p`` bases): k passes over S is the floor of
+Algorithm 3's cost.  The randomized range-finder (RPOD, arXiv:1312.3976;
+sampled-SVD POD, arXiv:1905.05107; Halko–Martinsson–Tropp) breaks that
+floor: ONE streamed pass folds every provider tile into a small sketch
+
+    Y = S @ Omega,          Omega: (M, ell) test matrix, ell = k + p,
+
+after which a dense QR/SVD of the (N, ell) sketch — negligible next to one
+pass over S — yields a basis whose projection error matches the optimal
+rank-k (POD) error up to the standard oversampling factor
+(E ||(I - QQ^H) S||_F^2 <= (1 + k/(p-1)) sum_{j>k} sigma_j^2).
+
+Streaming layout
+----------------
+
+The test matrix is never materialized: each tile ``T_t = S[:, lo:hi)``
+meets its own block ``Omega_t``, generated on device from a
+counter-derived key ``fold_in(PRNGKey(seed), t)`` — so the pass is
+order-deterministic, bit-reproducible, and resumable (a resumed build
+regenerates exactly the blocks it still needs).  The fold runs through
+:func:`repro.core.backend.sketch_fold` (plane-split real GEMMs for complex
+dtypes — the same no-complex-dot HLO guarantee as every other hot
+primitive), the tile's column norms ride along for free, and the next
+tile is prefetched while the current fold runs, mirroring
+:mod:`repro.core.streaming`.
+
+``power=q`` adds q rounds of subspace (power) iteration — 2 extra passes
+per round (``Z = S^H Q``, ``Y = S Z``), orthonormalizing between
+applications — sharpening the basis toward the exact POD subspace when
+the spectrum decays slowly.  Total passes over S: ``1 + 2 * power``.
+
+Singular-value estimates: with ``power=0`` the sketch's singular values
+scale like ``sigma_i(S) * sqrt(ell)`` for a Gaussian test matrix, so
+``s_i(Y)/sqrt(ell)`` estimates the spectrum; with ``power>=1`` the final
+pass applies S to an ORTHONORMAL (M, ell) co-range basis, so ``s_i(Y)``
+are Ritz values converging to ``sigma_i(S)`` from below.  Rank selection
+follows Algorithm 1's criterion on those estimates (smallest k with
+``sigma_hat_{k+1} < tau``), capped at ``max_k``.
+
+Mid-build checkpointing persists the partial sketch (phase, tile cursor,
+Y, Z, norms) through :mod:`repro.checkpoint.io`; a killed pass resumes
+from the last completed tile and lands on a bit-identical basis.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+import os
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import backend as _backend
+from repro.data.providers import SnapshotProvider, as_provider
+
+_STATE_VERSION = 1
+
+SKETCH_KINDS = ("gaussian", "rademacher")
+
+
+class RandomizedSketchResult(NamedTuple):
+    """Result of the streamed randomized range-finder.
+
+    Attributes:
+      Q:        (N, k) orthonormal basis (left singular vectors of the
+                sketch), provider dtype.
+      svals:    (ell,) singular-value ESTIMATES of S from the sketch
+                (see module docstring), real dtype, non-increasing.
+      k:        selected rank (Algorithm-1 tau criterion on ``svals``,
+                capped at ``max_k``).
+      ell:      sketch width ``min(max_k + sketch_p, N, M)``.
+      n_passes: streamed passes over the provider (``1 + 2 * power``).
+      tile_m / n_tiles: tiling the pass used.
+      sketch_p / power / seed / kind: the sketch parameters (provenance).
+      norms_sq: (M,) snapshot column norms^2, accumulated in the same
+                pass (free — the tile is already on device).
+    """
+
+    Q: jax.Array
+    svals: np.ndarray
+    k: int
+    ell: int
+    n_passes: int
+    tile_m: int
+    n_tiles: int
+    sketch_p: int
+    power: int
+    seed: int
+    kind: str
+    norms_sq: np.ndarray
+
+
+def _test_block(key, shape, dtype, kind: str) -> jax.Array:
+    """One (m, ell) block of the test matrix, derived purely from ``key``.
+
+    Gaussian: standard normal (complex: (g1 + i g2)/sqrt(2), unit column
+    variance).  Rademacher: +-1 entries (complex: unit phases from +-1
+    pairs scaled by 1/sqrt(2)) — cheaper draws, same guarantees in
+    practice.
+    """
+    rdt = jnp.zeros((), dtype).real.dtype
+    if kind == "gaussian":
+        if jnp.issubdtype(dtype, jnp.complexfloating):
+            gr = jax.random.normal(jax.random.fold_in(key, 0), shape, rdt)
+            gi = jax.random.normal(jax.random.fold_in(key, 1), shape, rdt)
+            return (jax.lax.complex(gr, gi) / np.sqrt(2.0)).astype(dtype)
+        return jax.random.normal(key, shape, rdt).astype(dtype)
+    if kind == "rademacher":
+        if jnp.issubdtype(dtype, jnp.complexfloating):
+            sr = jax.random.rademacher(
+                jax.random.fold_in(key, 0), shape, rdt)
+            si = jax.random.rademacher(
+                jax.random.fold_in(key, 1), shape, rdt)
+            return (jax.lax.complex(sr, si) / np.sqrt(2.0)).astype(dtype)
+        return jax.random.rademacher(key, shape, rdt).astype(dtype)
+    raise ValueError(f"unknown sketch kind {kind!r}; valid: {SKETCH_KINDS}")
+
+
+@functools.partial(jax.jit, static_argnames=("shape", "kind", "backend"))
+def _tile_fold(key, T, Y, shape, kind: str, backend: str):
+    """Phase-0 fold of one tile: generate Omega_t on device from the
+    counter-derived key, ``Y += T @ Omega_t``, column norms^2 for free."""
+    Om = _test_block(key, shape, T.dtype, kind)
+    n = jnp.sum(jnp.abs(T) ** 2, axis=0)
+    return _backend.sketch_fold(T, Om, Y, backend=backend), n
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _tile_project(T, Y, backend: str):
+    """Odd-phase slab: this tile's rows of ``Z = S^H Y``."""
+    return _backend.sketch_project(T, Y, backend=backend)
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _tile_apply(T, Zt, Y, backend: str):
+    """Even-phase fold: ``Y += T @ Z[lo:hi]`` (re-application of S)."""
+    return _backend.sketch_fold(T, Zt, Y, backend=backend)
+
+
+@jax.jit
+def _thin_q(Y):
+    """Orthonormalize between power-iteration applications (Halko
+    Alg. 4.4's stabilization; a thin QR of a tall-skinny array)."""
+    return jnp.linalg.qr(Y, mode="reduced")[0]
+
+
+class _SketchState:
+    """Host-side resumable state of the streamed sketch pass(es).
+
+    ``phase`` counts applications of S: 0 is the sketch fold
+    ``Y = S Omega``; odd phases fill ``Z = S^H Y``; even phases >= 2
+    re-apply ``Y = S Z``.  ``cursor`` is the next tile INDEX of the
+    current phase; phase transitions (orthonormalizations) happen at
+    ``cursor == n_tiles`` and are replayed deterministically on resume.
+    """
+
+    __slots__ = ("tile_m", "ell", "seed", "kind", "backend", "phase",
+                 "cursor", "Y", "Z", "norms_sq", "done", "seq")
+
+    def to_tree(self) -> dict:
+        tree = {
+            "version": np.asarray(_STATE_VERSION, np.int64),
+            # The cursor is in tile units and Omega blocks are derived
+            # per (seed, tile): a resume MUST replay the same tiling,
+            # width, seed and draw kind — persisted for validation.  The
+            # backend is persisted too: a partial Y carries one backend's
+            # float summation order.
+            "tile_m": np.asarray(self.tile_m, np.int64),
+            "ell": np.asarray(self.ell, np.int64),
+            "seed": np.asarray(self.seed, np.int64),
+            "kind": np.asarray(self.kind),
+            "backend": np.asarray(self.backend),
+            "phase": np.asarray(self.phase, np.int64),
+            "cursor": np.asarray(self.cursor, np.int64),
+            "Y": np.asarray(jax.device_get(self.Y)),
+            "norms_sq": self.norms_sq,
+            "done": np.asarray(self.done, np.int64),
+        }
+        if self.Z is not None:
+            tree["Z"] = self.Z
+        return tree
+
+    @classmethod
+    def from_tree(cls, tree: dict) -> "_SketchState":
+        version = int(tree["version"])
+        if version != _STATE_VERSION:
+            raise ValueError(
+                f"sketch checkpoint version {version} != supported "
+                f"{_STATE_VERSION}"
+            )
+        st = cls()
+        st.tile_m = int(tree["tile_m"])
+        st.ell = int(tree["ell"])
+        st.seed = int(tree["seed"])
+        st.kind = str(tree["kind"])
+        st.backend = str(tree["backend"])
+        st.phase = int(tree["phase"])
+        st.cursor = int(tree["cursor"])
+        st.Y = jnp.asarray(tree["Y"])
+        st.Z = tree.get("Z")
+        st.norms_sq = tree["norms_sq"]
+        st.done = int(tree["done"])
+        st.seq = 0
+        return st
+
+
+def _save_state(st: _SketchState, directory: str, keep: int = 2) -> None:
+    from repro.checkpoint.io import save_checkpoint
+
+    st.seq += 1
+    save_checkpoint(st.to_tree(), directory, st.seq)
+    import re
+    import shutil
+
+    steps = sorted(
+        int(m.group(1)) for d in os.listdir(directory)
+        if (m := re.fullmatch(r"step_(\d+)", d))
+    )
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+def _load_state(directory: str) -> Optional[_SketchState]:
+    from repro.checkpoint.io import latest_step, load_checkpoint_raw
+
+    if latest_step(directory) is None:
+        return None
+    return _SketchState.from_tree(load_checkpoint_raw(directory))
+
+
+def rb_randomized_streamed(
+    source,
+    tau: float | None = None,
+    max_k: int | None = None,
+    *,
+    sketch_p: int = 10,
+    power: int = 0,
+    seed: int = 0,
+    kind: str = "gaussian",
+    tile_m: int = 8192,
+    backend: str | None = None,
+    checkpoint_dir: str | os.PathLike | None = None,
+    checkpoint_every_tiles: int = 0,
+    resume: bool = False,
+) -> RandomizedSketchResult:
+    """Single-pass randomized range-finder over a snapshot provider.
+
+    ``source`` may be a provider, a resident array, or a ``.npy`` path
+    (coerced via :func:`repro.data.providers.as_provider`).  With
+    ``power=0`` the provider is streamed EXACTLY ONCE (one ``tile()``
+    call per tile — asserted with a read counter in
+    ``tests/test_randomized.py``); each additional power round costs two
+    more passes.
+
+    Args:
+      tau: Algorithm-1 rank-selection tolerance applied to the sketch's
+        singular-value estimates (``None`` keeps all ``max_k``).
+      max_k: target rank cap (default ``min(N, M)``); the sketch width is
+        ``min(max_k + sketch_p, N, M)``.
+      sketch_p: oversampling columns beyond ``max_k`` (the range-finder
+        bound's p; 5-10 is the standard regime).
+      power: subspace-iteration rounds (2 extra passes each).
+      seed / kind: test-matrix generation — ``"gaussian"`` or
+        ``"rademacher"`` blocks derived per tile from
+        ``fold_in(PRNGKey(seed), tile_index)``.
+      tile_m / backend: as in :func:`repro.core.streaming.
+        rb_greedy_streamed`.
+      checkpoint_dir / checkpoint_every_tiles / resume: persist the
+        partial sketch every N tiles (phase boundaries always checkpoint
+        when a directory is given); a resumed pass regenerates the
+        remaining test blocks from the counter-derived keys and is
+        bit-identical to an uninterrupted one.
+    """
+    prov = as_provider(source)
+    N, M = prov.shape
+    if max_k is None:
+        max_k = min(N, M)
+    max_k = min(max_k, N, M)
+    if sketch_p < 0:
+        raise ValueError(f"sketch_p must be >= 0, got {sketch_p}")
+    if power < 0:
+        raise ValueError(f"power must be >= 0, got {power}")
+    if kind not in SKETCH_KINDS:
+        raise ValueError(f"unknown sketch kind {kind!r}; valid: "
+                         f"{SKETCH_KINDS}")
+    if tile_m < 1:
+        raise ValueError(f"tile_m must be >= 1, got {tile_m}")
+    if checkpoint_every_tiles < 0:
+        raise ValueError("checkpoint_every_tiles must be >= 0")
+    if resume and checkpoint_dir is None:
+        raise ValueError("resume=True requires checkpoint_dir")
+    backend = _backend.resolve_backend(backend)
+    ckpt_dir = os.fspath(checkpoint_dir) if checkpoint_dir is not None \
+        else None
+
+    ell = min(max_k + sketch_p, N, M)
+    tiles = list(prov.tiles(tile_m))
+    n_tiles = len(tiles)
+    n_phases = 1 + 2 * power
+    dtype = jnp.dtype(prov.dtype)
+    rdt = np.zeros((), dtype).real.dtype
+
+    st = _load_state(ckpt_dir) if (resume and ckpt_dir) else None
+    if st is not None:
+        if st.tile_m != tile_m:
+            raise ValueError(
+                f"sketch checkpoint tile_m mismatch: saved {st.tile_m}, "
+                f"requested {tile_m}"
+            )
+        if st.ell != ell:
+            raise ValueError(
+                f"sketch checkpoint width mismatch: saved ell={st.ell}, "
+                f"requested {ell} (max_k + sketch_p changed?)"
+            )
+        if st.seed != seed or st.kind != kind:
+            raise ValueError(
+                f"sketch checkpoint test-matrix mismatch: saved "
+                f"(seed={st.seed}, kind={st.kind!r}), requested "
+                f"(seed={seed}, kind={kind!r})"
+            )
+        if st.Y.shape != (N, ell) or st.norms_sq.shape != (M,):
+            raise ValueError(
+                f"sketch checkpoint shape mismatch: Y {st.Y.shape} / M "
+                f"{st.norms_sq.shape[0]} vs requested ({N}, {ell}) / {M}"
+            )
+        if st.Y.dtype != dtype:
+            raise ValueError(
+                f"sketch checkpoint dtype mismatch: saved {st.Y.dtype}, "
+                f"provider {dtype}"
+            )
+        if st.backend != backend and not st.done:
+            # A partial Y/Z carries one backend's float summation order;
+            # mixing orders inside one accumulation breaks bit-identity.
+            raise ValueError(
+                f"sketch checkpoint was written under backend "
+                f"{st.backend!r}; resume with that backend (requested "
+                f"{backend!r})"
+            )
+    else:
+        st = _SketchState()
+        st.tile_m, st.ell = tile_m, ell
+        st.seed, st.kind, st.backend = seed, kind, backend
+        st.phase, st.cursor = 0, 0
+        st.Y = jnp.zeros((N, ell), dtype)
+        st.Z = None
+        st.norms_sq = np.zeros((M,), rdt)
+        st.done = 0
+        st.seq = 0
+        if ckpt_dir:
+            from repro.checkpoint.io import latest_step
+
+            st.seq = latest_step(ckpt_dir) or 0
+
+    base_key = jax.random.PRNGKey(seed)
+
+    def maybe_ckpt(mid_sweep: bool):
+        if not ckpt_dir:
+            return
+        if mid_sweep and not (checkpoint_every_tiles
+                              and st.cursor < n_tiles
+                              and st.cursor % checkpoint_every_tiles == 0):
+            return
+        _save_state(st, ckpt_dir)
+
+    while not st.done:
+        ph = st.phase
+        if ph == 0:
+            # --- the single-pass sketch fold ---------------------------
+            nxt = prov.tile(*tiles[st.cursor]) if st.cursor < n_tiles \
+                else None
+            while st.cursor < n_tiles:
+                lo, hi = tiles[st.cursor]
+                T, nxt = nxt, None
+                Y2, n = _tile_fold(
+                    jax.random.fold_in(base_key, st.cursor), T, st.Y,
+                    (hi - lo, ell), kind, backend,
+                )
+                if st.cursor + 1 < n_tiles:
+                    nxt = prov.tile(*tiles[st.cursor + 1])  # overlaps fold
+                st.Y = Y2
+                st.norms_sq[lo:hi] = np.asarray(n, rdt)
+                st.cursor += 1
+                maybe_ckpt(mid_sweep=True)
+        elif ph % 2 == 1:
+            # --- odd pass: Z = S^H Q (co-range slab per tile) ----------
+            if st.cursor == 0:
+                st.Y = _thin_q(st.Y)
+                st.Z = np.zeros((M, ell), np.dtype(dtype))
+            nxt = prov.tile(*tiles[st.cursor]) if st.cursor < n_tiles \
+                else None
+            while st.cursor < n_tiles:
+                lo, hi = tiles[st.cursor]
+                T, nxt = nxt, None
+                Zt = _tile_project(T, st.Y, backend)
+                if st.cursor + 1 < n_tiles:
+                    nxt = prov.tile(*tiles[st.cursor + 1])
+                st.Z[lo:hi] = np.asarray(Zt)
+                st.cursor += 1
+                maybe_ckpt(mid_sweep=True)
+        else:
+            # --- even pass: Y = S Z_orth (re-application) --------------
+            if st.cursor == 0:
+                # Orthonormalize the co-range so the final sketch's
+                # singular values are Ritz values of S (and the
+                # re-application stays well-conditioned).
+                st.Z = np.asarray(_thin_q(jnp.asarray(st.Z)))
+                st.Y = jnp.zeros((N, ell), dtype)
+            nxt = prov.tile(*tiles[st.cursor]) if st.cursor < n_tiles \
+                else None
+            while st.cursor < n_tiles:
+                lo, hi = tiles[st.cursor]
+                T, nxt = nxt, None
+                Y2 = _tile_apply(T, jnp.asarray(st.Z[lo:hi]), st.Y,
+                                 backend)
+                if st.cursor + 1 < n_tiles:
+                    nxt = prov.tile(*tiles[st.cursor + 1])
+                st.Y = Y2
+                st.cursor += 1
+                maybe_ckpt(mid_sweep=True)
+        st.phase += 1
+        st.cursor = 0
+        if st.phase >= n_phases:
+            st.done = 1
+            st.Z = None
+        maybe_ckpt(mid_sweep=False)
+
+    # --- small dense SVD of the sketch (negligible next to one pass) ----
+    U, s, _ = jnp.linalg.svd(st.Y, full_matrices=False)
+    s = np.asarray(s, rdt)
+    if power == 0:
+        # E ||x^T Omega||^2 = ell ||x||^2 for unit-variance test columns
+        svals = s / np.sqrt(float(ell))
+    else:
+        svals = s  # Ritz values of S on the orthonormal co-range
+    if tau is None:
+        k = min(max_k, ell)
+    else:
+        # Algorithm 1's criterion on the estimates: smallest k with
+        # sigma_hat_{k+1} < tau.
+        k = int(np.sum(svals >= tau))
+        k = min(k, max_k, ell)
+    Q = U[:, :k].astype(dtype)
+    return RandomizedSketchResult(
+        Q=Q, svals=svals, k=k, ell=ell, n_passes=n_phases,
+        tile_m=tile_m, n_tiles=n_tiles, sketch_p=sketch_p, power=power,
+        seed=seed, kind=kind, norms_sq=st.norms_sq,
+    )

@@ -4,9 +4,13 @@ The paper's headline run greedy-reduces a dense complex 10,000 x 3,276,800
 snapshot matrix (~0.5 TB) that never fits in one worker's memory
 (Sec. 6.1.1: each MPI process forms a "slice" of S over a subset of
 columns).  A :class:`SnapshotProvider` is the single-machine analogue of
-that contract: the streaming driver (:func:`repro.core.streaming.
-rb_greedy_streamed`) only ever asks for one column *tile* ``S[:, lo:hi]``
-at a time, so peak device memory is O(N * (max_k + tile_m)) regardless of M.
+that contract: the streaming drivers (:func:`repro.core.streaming.
+rb_greedy_streamed` and the one-pass range-finder :func:`repro.core.
+randomized.rb_randomized_streamed`) only ever ask for one column *tile*
+``S[:, lo:hi]`` at a time, so peak device memory is
+O(N * (max_k + tile_m)) regardless of M.  ``FaultyProvider.reads`` is the
+acceptance hook for pass-count claims: the randomized sketch must touch
+each tile exactly ``1 + 2*power`` times.
 
 Three implementations:
 

@@ -22,6 +22,7 @@ import numpy as np
 from repro.configs import get_config, get_reduced
 from repro.models import api
 from repro.serving import ServeEngine
+from repro.timing import steady_min
 
 
 def serve_basis(basis_dir: str, batch: int, seed: int = 0):
@@ -53,13 +54,19 @@ def serve_basis(basis_dir: str, batch: int, seed: int = 0):
     at_nodes = full[nodes, :]
 
     interp = jax.jit(lambda fn: ei.B @ fn)
-    jax.block_until_ready(interp(at_nodes))  # compile outside the clock
-    t0 = time.time()
-    out = jax.block_until_ready(interp(at_nodes))
-    dt = time.time() - t0
+    out = jax.block_until_ready(interp(at_nodes))  # compile out of clock
+    # Steady-state best-of-N, not a single shot: one wall-clock sample
+    # swings ±40% on a shared box (the same reason every committed BENCH
+    # row uses this method).
+    repeats = 12
+    dt = steady_min(
+        lambda: jax.block_until_ready(interp(at_nodes)),
+        per=1, repeats=repeats,
+    )
     err = float(jnp.max(jnp.linalg.norm(out - full, axis=0)))
     print(f"served {batch} interpolation requests in {dt*1e3:.2f} ms "
-          f"({batch / max(dt, 1e-9):.0f} req/s); "
+          f"(best of {repeats} steady-state rounds; "
+          f"{batch / max(dt, 1e-9):.0f} req/s); "
           f"max reconstruction error {err:.2e}")
     return out
 

@@ -42,12 +42,14 @@ class ServeEngine:
         logits, cache = self._prefill(self.params, batch)
         B = logits.shape[0]
         toks = []
+        # The per-step key is derived ONCE per step as fold_in(key, step)
+        # inside _select; the base key is never advanced here.  (Folding
+        # it in this loop as well compounded the folds — steps drew from
+        # correlated, index-colliding streams.)
         tok = self._select(logits, temperature, key, 0)
         for i in range(n_tokens):
             toks.append(tok)
             logits, cache = self._decode(self.params, tok, cache)
-            if key is not None:
-                key = jax.random.fold_in(key, i)
             tok = self._select(logits, temperature, key, i + 1)
         return jnp.stack(toks, axis=1)
 

@@ -1,0 +1,34 @@
+"""Steady-state timing: the one wall-clock method every reported number
+uses.
+
+Single-shot wall clock swings ~±40% on a shared 2-core box — PRs 3–4
+purged it from the committed benchmarks in favor of this method, and the
+serving launcher and roofline calibration report with it too.  The rule:
+warm up, then time CONSECUTIVE repeats (hot thread pools, warm allocator
+— what a production driver loop experiences) and take the MINIMUM, which
+rejects load spikes and unlucky thread placement.
+
+``benchmarks/common.steady_min`` delegates here (the benchmarks package
+is repo tooling, not importable from the installed ``repro`` package, so
+the canonical implementation lives on the package side).
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def steady_min(fn, per: int = 1, repeats: int = 12, warmup: int = 3) -> float:
+    """Best-of-``repeats`` steady-state seconds per iteration.
+
+    ``fn`` performs ``per`` hot-loop iterations and must block on its
+    outputs (``jax.block_until_ready``) before returning.
+    """
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best / per

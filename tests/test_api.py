@@ -259,6 +259,36 @@ def test_measured_roofline_feeds_model_when_enabled(monkeypatch, caplog):
     assert info.currsize == 1 and info.hits >= 1  # measured exactly once
 
 
+def test_measured_roofline_failure_not_cached(monkeypatch):
+    """Regression (PR-7 bugfix): a transient calibration failure used to
+    be lru_cached as the (0.0, 0.0) sentinel, permanently disabling
+    measured roofs for the process.  The failure path must NOT be cached
+    — the next call retries and a later success IS cached."""
+    import repro.api.roofline as R
+
+    R.measured_roofline.cache_clear()
+    calls = {"n": 0}
+    real_steady = R._steady_min
+
+    def flaky_steady(fn, *a, **kw):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("injected transient calibration failure")
+        return real_steady(fn, repeats=1, warmup=0)
+
+    monkeypatch.setattr(R, "_steady_min", flaky_steady)
+    try:
+        assert R.measured_roofline() == (0.0, 0.0)  # sentinel reported...
+        assert R.measured_roofline.cache_info().currsize == 0  # ...UNCACHED
+        bw, gf = R.measured_roofline()  # retried -> real measurement
+        assert bw > 0 and gf > 0
+        assert R.measured_roofline() == (bw, gf)
+        info = R.measured_roofline.cache_info()
+        assert info.currsize == 1 and info.hits >= 1  # success cached
+    finally:
+        R.measured_roofline.cache_clear()  # drop the 1-repeat numbers
+
+
 def test_auto_decision_table_deterministic_without_measurement():
     """CI acceptance: under REPRO_ROOFLINE_MEASURE=0 the auto-strategy
     decision table reproduces the PR-4 classifications from the

@@ -31,7 +31,7 @@ def test_repro_api_exports():
 def test_strategies_pinned():
     assert repro.api.STRATEGIES == (
         "pod", "mgs", "greedy", "block_greedy", "streamed", "distributed",
-        "auto",
+        "randomized", "sketch+greedy", "auto",
     )
 
 
@@ -79,6 +79,11 @@ def test_reduction_spec_fields_pinned():
         ("bandwidth_gbps", None),
         ("peak_gflops", None),
         ("cache_bytes", None),
+        # PR 7: randomized range-finder knobs (randomized / sketch+greedy)
+        ("sketch_p", 10),
+        ("sketch_power", 0),
+        ("sketch_seed", 0),
+        ("sketch_kind", "gaussian"),
     ]
 
 
@@ -101,6 +106,7 @@ def test_repro_core_exports_stable():
     assert sorted(repro.core.__all__) == sorted([
         "pod", "pod_basis", "mgs_pivoted_qr", "GreedyResult", "rb_greedy",
         "rb_greedy_stepwise", "rb_greedy_streamed", "StreamedGreedyResult",
+        "rb_randomized_streamed", "RandomizedSketchResult",
         "imgs_orthogonalize", "optimal_rrqr", "reconstruction", "eim_nodes",
         "empirical_interpolant", "roq_weights", "default_backend",
         "resolve_backend", "set_default_backend",

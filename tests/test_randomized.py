@@ -1,0 +1,417 @@
+"""Randomized sketch strategy: quality vs POD, one-pass streaming,
+crash/resume bit-identity, greedy warm-start, and the HLO pins for the
+sketch primitives.
+
+The quality matrix asserts the randomized range-finder bound (Halko et
+al., Thm. 10.5 in expectation): for a width-``ell = k + p`` Gaussian
+sketch,
+
+    E ||S - Q Q^H S||_F^2  <=  (1 + k/(p-1)) * sum_{j>k} sigma_j^2.
+
+Seeds are FIXED (the test matrix is derived from counter-based keys), so
+each asserted draw is deterministic; the bound is checked with a slack
+factor that covers truncation-to-k and cross-backend summation-order
+differences, plus a dtype floor for f32.
+"""
+
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_smooth_matrix
+from repro.core import backend as B
+from repro.core.randomized import rb_randomized_streamed
+from repro.data.providers import (
+    ArrayProvider,
+    FaultPlan,
+    FaultyProvider,
+    MemmapProvider,
+    WaveformProvider,
+    write_snapshot_npy,
+)
+
+
+def _proj_err_fro(S, Q):
+    S = np.asarray(S, np.complex128 if np.iscomplexobj(S) else np.float64)
+    Q = np.asarray(Q, S.dtype)
+    E = S - Q @ (Q.conj().T @ S)
+    return float(np.linalg.norm(E))
+
+
+def _pod_tail(S, k):
+    sig = np.linalg.svd(
+        np.asarray(S, np.complex128 if np.iscomplexobj(S) else np.float64),
+        compute_uv=False)
+    return float(np.sqrt(np.sum(sig[k:] ** 2))), sig
+
+
+def _assert_range_finder_bound(S, res, max_k, sketch_p, slack=4.0):
+    tail, sig = _pod_tail(S, max_k)
+    err = _proj_err_fro(S, res.Q)
+    bound = math.sqrt(1.0 + max_k / (sketch_p - 1)) * tail
+    # dtype floor: at f32 the projection error cannot beat rounding on S
+    eps = np.finfo(np.asarray(res.Q).real.dtype).eps
+    floor = 100.0 * eps * float(np.linalg.norm(sig))
+    assert err <= slack * bound + floor, (
+        f"sketch Frobenius error {err:.3e} exceeds "
+        f"{slack}x range-finder bound {bound:.3e} (+floor {floor:.1e})"
+    )
+
+
+# ------------------------------------------------- quality vs exact POD ----
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.complex64])
+@pytest.mark.parametrize("provider", ["array", "memmap"])
+def test_sketch_quality_matrix(tmp_path, dtype, provider):
+    """{f32, c64} x {array, memmap}: one-pass sketch error within the
+    (1 + k/(p-1)) range-finder bound of the exact POD tail."""
+    S = make_smooth_matrix(200, 120, dtype=dtype)
+    if provider == "memmap":
+        src = MemmapProvider(write_snapshot_npy(tmp_path / "S.npy", S))
+    else:
+        src = ArrayProvider(jnp.asarray(S))
+    res = rb_randomized_streamed(src, tau=None, max_k=15, sketch_p=10,
+                                 tile_m=32)
+    assert res.k == 15 and res.ell == 25 and res.n_passes == 1
+    Q = np.asarray(res.Q)
+    assert Q.dtype == np.dtype(dtype)
+    # orthonormal basis
+    G = Q.conj().T @ Q
+    assert np.abs(G - np.eye(res.k)).max() < 1e-4
+    _assert_range_finder_bound(S, res, max_k=15, sketch_p=10)
+    # the free rider: exact column norms from the same pass
+    np.testing.assert_allclose(
+        res.norms_sq, np.sum(np.abs(S) ** 2, axis=0), rtol=1e-4)
+
+
+def test_sketch_quality_waveform():
+    """Waveform provider (columns generated on the fly): same bound."""
+    from repro.gw import chirp_grid, frequency_grid
+
+    f = frequency_grid(20.0, 256.0, 200)
+    m1, m2 = chirp_grid(n_mc=11, n_eta=7)
+    prov = WaveformProvider(f, m1, m2, dtype=jnp.complex64)
+    S = np.asarray(prov.tile(0, prov.shape[1]))
+    res = rb_randomized_streamed(prov, tau=None, max_k=12, sketch_p=10,
+                                 tile_m=16)
+    assert res.n_passes == 1
+    _assert_range_finder_bound(S, res, max_k=12, sketch_p=10)
+
+
+def test_power_iteration_sharpens_sigma_estimates():
+    """power>=1 applies S to an orthonormal co-range, so the sketch's
+    singular values are Ritz values: they must approximate the true
+    spectrum far better than the power=0 sqrt(ell)-scaled estimates, and
+    the projection error must not degrade."""
+    S = make_smooth_matrix(200, 120, dtype=np.float64)
+    sig = np.linalg.svd(S, compute_uv=False)
+    r0 = rb_randomized_streamed(S, tau=None, max_k=15, sketch_p=10,
+                                tile_m=40)
+    r1 = rb_randomized_streamed(S, tau=None, max_k=15, sketch_p=10,
+                                power=1, tile_m=40)
+    assert r1.n_passes == 3
+    np.testing.assert_allclose(r1.svals[:10], sig[:10], rtol=1e-3)
+    e0 = np.abs(r0.svals[:10] - sig[:10]) / sig[:10]
+    e1 = np.abs(r1.svals[:10] - sig[:10]) / sig[:10]
+    assert e1.max() < e0.max()
+    assert _proj_err_fro(S, r1.Q) <= 2.0 * _proj_err_fro(S, r0.Q)
+
+
+def test_tau_rank_selection_matches_pod_criterion():
+    """tau selects k = #{sigma_hat >= tau} (Algorithm 1's criterion on
+    the estimates), capped at max_k."""
+    S = make_smooth_matrix(200, 120, dtype=np.float64)
+    res = rb_randomized_streamed(S, tau=1e-3, max_k=60, sketch_p=10,
+                                 power=1, tile_m=40)
+    assert res.k == int(np.sum(res.svals >= 1e-3))
+    assert res.k < 60  # tau actually truncated
+    capped = rb_randomized_streamed(S, tau=1e-3, max_k=5, sketch_p=10,
+                                    power=1, tile_m=40)
+    assert capped.k == 5
+
+
+def test_rademacher_kind_same_bound():
+    S = make_smooth_matrix(200, 120, dtype=np.complex64)
+    res = rb_randomized_streamed(S, tau=None, max_k=15, sketch_p=10,
+                                 tile_m=32, kind="rademacher")
+    _assert_range_finder_bound(S, res, max_k=15, sketch_p=10)
+
+
+# ---------------------------------------------- streaming / determinism ----
+
+
+def test_one_streamed_pass_read_counter():
+    """Acceptance: strategy builds the basis in ONE pass over the
+    provider at power=0 (exactly n_tiles tile reads), 1 + 2*power passes
+    otherwise."""
+    S = make_smooth_matrix(200, 120, dtype=np.float32)
+    n_tiles = math.ceil(120 / 32)
+    prov = FaultyProvider(ArrayProvider(jnp.asarray(S)), FaultPlan())
+    rb_randomized_streamed(prov, tau=None, max_k=15, tile_m=32)
+    assert prov.reads == n_tiles
+    prov2 = FaultyProvider(ArrayProvider(jnp.asarray(S)), FaultPlan())
+    rb_randomized_streamed(prov2, tau=None, max_k=15, tile_m=32, power=2)
+    assert prov2.reads == 5 * n_tiles
+
+
+def test_sketch_deterministic_and_seeded():
+    """Counter-derived test blocks: same seed -> bit-identical basis;
+    different seed -> a different (but equally valid) draw."""
+    S = make_smooth_matrix(200, 120, dtype=np.complex64)
+    a = rb_randomized_streamed(S, tau=None, max_k=10, tile_m=32, seed=3)
+    b = rb_randomized_streamed(S, tau=None, max_k=10, tile_m=32, seed=3)
+    assert np.array_equal(np.asarray(a.Q), np.asarray(b.Q))
+    assert np.array_equal(a.svals, b.svals)
+    c = rb_randomized_streamed(S, tau=None, max_k=10, tile_m=32, seed=4)
+    assert not np.array_equal(np.asarray(a.Q), np.asarray(c.Q))
+
+
+@pytest.mark.parametrize("power,raise_at", [(0, 2), (1, 9)])
+def test_mid_sketch_crash_resume_bit_identity(tmp_path, power, raise_at):
+    """Kill the pass mid-phase (power=1 case dies inside a POWER pass);
+    resume regenerates the remaining counter-derived blocks and lands on
+    the uninterrupted run's bits."""
+    S = make_smooth_matrix(200, 120, dtype=np.complex64)
+    ref = rb_randomized_streamed(S, tau=None, max_k=12, sketch_p=6,
+                                 power=power, tile_m=16)
+    d = str(tmp_path / "ckpt")
+    prov = FaultyProvider(ArrayProvider(jnp.asarray(S)),
+                          FaultPlan(raise_at_tile=raise_at))
+    with pytest.raises(IOError):
+        rb_randomized_streamed(prov, tau=None, max_k=12, sketch_p=6,
+                               power=power, tile_m=16, checkpoint_dir=d,
+                               checkpoint_every_tiles=2)
+    res = rb_randomized_streamed(S, tau=None, max_k=12, sketch_p=6,
+                                 power=power, tile_m=16, checkpoint_dir=d,
+                                 resume=True)
+    assert np.array_equal(np.asarray(res.Q), np.asarray(ref.Q))
+    assert np.array_equal(res.svals, ref.svals)
+    assert np.array_equal(res.norms_sq, ref.norms_sq)
+
+
+def test_resume_validates_checkpoint_compatibility(tmp_path):
+    """A resumed pass must replay the same tiling/width/test matrix (the
+    cursor is in tile units, Omega blocks are per-(seed, tile)); any
+    drift is a hard error, not silent corruption."""
+    S = make_smooth_matrix(100, 60, dtype=np.float32)
+    d = str(tmp_path / "ckpt")
+    prov = FaultyProvider(ArrayProvider(jnp.asarray(S)),
+                          FaultPlan(raise_at_tile=2))
+    with pytest.raises(IOError):
+        rb_randomized_streamed(prov, tau=None, max_k=8, sketch_p=4,
+                               tile_m=16, checkpoint_dir=d,
+                               checkpoint_every_tiles=1)
+    common = dict(tau=None, checkpoint_dir=d, resume=True)
+    with pytest.raises(ValueError, match="tile_m"):
+        rb_randomized_streamed(S, max_k=8, sketch_p=4, tile_m=20, **common)
+    with pytest.raises(ValueError, match="width"):
+        rb_randomized_streamed(S, max_k=9, sketch_p=4, tile_m=16, **common)
+    with pytest.raises(ValueError, match="test-matrix"):
+        rb_randomized_streamed(S, max_k=8, sketch_p=4, tile_m=16, seed=1,
+                               **common)
+    with pytest.raises(ValueError, match="test-matrix"):
+        rb_randomized_streamed(S, max_k=8, sketch_p=4, tile_m=16,
+                               kind="rademacher", **common)
+    # a partial Y carries one backend's summation order: resuming under
+    # the OTHER backend must refuse (CI runs both matrix legs, so pick
+    # whichever is not the currently-resolved one)
+    other = "xla" if B.resolve_backend(None) == "xla_ref" else "xla_ref"
+    with pytest.raises(ValueError, match="backend"):
+        rb_randomized_streamed(S, max_k=8, sketch_p=4, tile_m=16,
+                               backend=other, **common)
+
+
+def test_argument_validation():
+    S = make_smooth_matrix(50, 30, dtype=np.float32)
+    with pytest.raises(ValueError, match="sketch_p"):
+        rb_randomized_streamed(S, tau=None, sketch_p=-1)
+    with pytest.raises(ValueError, match="power"):
+        rb_randomized_streamed(S, tau=None, power=-1)
+    with pytest.raises(ValueError, match="kind"):
+        rb_randomized_streamed(S, tau=None, kind="srht")
+    with pytest.raises(ValueError, match="resume"):
+        rb_randomized_streamed(S, tau=None, resume=True)
+
+
+# ------------------------------------------------------- HLO pins ----------
+
+
+def _dot_lines(hlo_text):
+    return [l for l in hlo_text.splitlines() if "dot" in l]
+
+
+@pytest.mark.parametrize("dtype", [np.complex64, np.complex128])
+def test_sketch_primitives_no_complex_dot(rng, dtype):
+    """The sketch fold/project must lower to REAL dot ops under the xla
+    backend (plane-split 4-GEMM plan) — the same structural pin every
+    other hot primitive carries (complex dots lower to a ~10x scalar
+    loop on CPU XLA)."""
+    N, M, L = 64, 48, 12
+    T = jnp.asarray((rng.standard_normal((N, M))
+                     + 1j * rng.standard_normal((N, M))).astype(dtype))
+    Om = jnp.asarray((rng.standard_normal((M, L))
+                      + 1j * rng.standard_normal((M, L))).astype(dtype))
+    Y = jnp.zeros((N, L), dtype)
+
+    def lower_fold(bk):
+        return jax.jit(
+            lambda *a: B.sketch_fold(*a, backend=bk)
+        ).lower(T, Om, Y).as_text()
+
+    dots = _dot_lines(lower_fold("xla"))
+    assert dots and not any("complex" in l for l in dots)
+    assert any("complex" in l for l in _dot_lines(lower_fold("xla_ref")))
+
+    def lower_proj(bk):
+        return jax.jit(
+            lambda *a: B.sketch_project(*a, backend=bk)
+        ).lower(T, Y).as_text()
+
+    dots = _dot_lines(lower_proj("xla"))
+    assert dots and not any("complex" in l for l in dots)
+    assert any("complex" in l for l in _dot_lines(lower_proj("xla_ref")))
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.complex64])
+def test_sketch_primitives_backend_parity(rng, dtype):
+    """Plane-split and reference forms compute the same products."""
+    N, M, L = 40, 30, 8
+    mk = (lambda s: (rng.standard_normal(s)
+                     + 1j * rng.standard_normal(s)).astype(dtype)
+          if np.issubdtype(dtype, np.complexfloating)
+          else rng.standard_normal(s).astype(dtype))
+    T, Om, Y = mk((N, M)), mk((M, L)), mk((N, L))
+    tol = 200 * np.finfo(np.dtype(dtype).type(0).real.dtype).eps
+    np.testing.assert_allclose(
+        np.asarray(B.sketch_fold(T, Om, Y, backend="xla")),
+        np.asarray(B.sketch_fold(T, Om, Y, backend="xla_ref")),
+        rtol=tol, atol=tol)
+    np.testing.assert_allclose(
+        np.asarray(B.sketch_project(T, Y, backend="xla")),
+        np.asarray(B.sketch_project(T, Y, backend="xla_ref")),
+        rtol=tol, atol=tol)
+
+
+# ------------------------------------------- sketch + greedy refinement ----
+
+
+def test_sketch_greedy_exact_low_rank_needs_no_refinement():
+    """On an exactly rank-r family with ell >= r the sketch captures the
+    range whole: greedy refinement must accept ZERO additional pivots
+    (all pivots stay the sketch's -1 sentinel) and stop at tau."""
+    from repro.api import build_basis
+    from repro.core.errors import proj_error_max
+
+    rng = np.random.default_rng(5)
+    r = 8
+    A = rng.standard_normal((200, r))
+    Bm = rng.standard_normal((r, 120))
+    S = (A @ Bm).astype(np.float64)
+    basis = build_basis(source=S, strategy="sketch+greedy", tau=1e-8,
+                        max_k=30, sketch_p=10, tile_m=32)
+    assert basis.provenance["sketch"]["k0"] == basis.k
+    assert np.all(np.asarray(basis.pivots) == -1)
+    assert basis.provenance["stop"] == "STOP_TAU"
+    assert float(proj_error_max(S, basis.Q)) < 1e-8
+
+
+def test_sketch_greedy_refines_to_tau_parity_with_cold_greedy():
+    """On a generic smooth family: refinement extends the sketch basis
+    with real pivots until the SAME tau the cold streamed greedy reaches,
+    and both bases meet it (error parity; the sketch start must not cost
+    correctness)."""
+    from repro.api import build_basis
+    from repro.core.errors import proj_error_max
+
+    S = make_smooth_matrix(200, 120, dtype=np.complex64)
+    tau = 1e-4
+    warm = build_basis(source=S, strategy="sketch+greedy", tau=tau,
+                       max_k=60, sketch_p=5, tile_m=32,
+                       sketch_power=1)
+    cold = build_basis(source=S, strategy="streamed", tau=tau, max_k=60,
+                       tile_m=32)
+    assert float(proj_error_max(S, warm.Q)) < tau
+    assert float(proj_error_max(S, cold.Q)) < tau
+    k0 = warm.provenance["sketch"]["k0"]
+    added = np.asarray(warm.pivots)[k0:]
+    # refinement pivots are REAL column selections (the sketch's are -1)
+    assert np.all(np.asarray(warm.pivots)[:k0] == -1)
+    assert np.all(added >= 0)
+    # the warm start cannot need more refinement sweeps than the cold
+    # build needed bases in total
+    assert warm.k - k0 <= cold.k
+
+
+# ---------------------------------------------------------- front door -----
+
+
+def test_front_door_randomized_strategy():
+    """build_basis(strategy="randomized"): POD-shaped artifact (no
+    pivots), sketch provenance (params + sigma estimates), per-column
+    error consistent with the basis."""
+    from repro.api import build_basis
+
+    S = make_smooth_matrix(200, 120, dtype=np.complex64)
+    basis = build_basis(source=S, strategy="randomized", tau=1e-4,
+                        max_k=40, tile_m=32, sketch_power=1)
+    assert basis.pivots.shape == (0,)
+    sk = basis.provenance["sketch"]
+    assert sk["p"] == 10 and sk["power"] == 1 and sk["n_passes"] == 3
+    assert sk["kind"] == "gaussian" and sk["ell"] == 50
+    est = basis.provenance["sigma_estimates"]
+    assert len(est) == sk["ell"] and est == sorted(est, reverse=True)
+    assert len(basis.errs) == basis.k
+    assert float(basis.per_column_errors(S).max()) < 1e-3
+
+
+def test_front_door_randomized_workdir_resume(tmp_path):
+    """The PR-6 workdir lifecycle composes: a fresh randomized build
+    finalizes into the workdir, and a resume relaunch returns the
+    finalized artifact bit-identically."""
+    from repro.api import ReducedBasis, build_basis
+
+    S = make_smooth_matrix(200, 120, dtype=np.float32)
+    wd = str(tmp_path / "wd")
+    built = build_basis(source=S, strategy="randomized", tau=None,
+                        max_k=20, tile_m=32, workdir=wd)
+    again = build_basis(source=S, strategy="randomized", tau=None,
+                        max_k=20, tile_m=32, workdir=wd, resume=True)
+    assert np.array_equal(np.asarray(built.Q), np.asarray(again.Q))
+    assert not os.path.exists(os.path.join(wd, "build"))
+    loaded = ReducedBasis.load(wd)
+    assert loaded.provenance["sketch"] == built.provenance["sketch"]
+
+
+def test_auto_picks_randomized_when_sketch_passes_win():
+    """Roof-bound sweep + a rank target whose greedy pass count exceeds
+    2x the sketch's -> "auto" resolves to the one-pass range-finder; with
+    no max_k (unbounded sketch width) it must NOT."""
+    from repro.api import ReductionSpec
+    from repro.api.build import _auto_strategy
+
+    roofs = dict(bandwidth_gbps=10.0, peak_gflops=1e4, cache_bytes=1)
+    spec = ReductionSpec(source="unused", strategy="auto", max_k=64,
+                         **roofs)
+    choice, block_p = _auto_strategy(spec, (4096, 16384), jnp.float32)
+    assert choice == "randomized"
+    assert block_p == 1  # blocking is a greedy knob; not forced on
+    # no rank target: the sketch width is unbounded -> stay greedy
+    spec_nok = ReductionSpec(source="unused", strategy="auto", **roofs)
+    choice, _ = _auto_strategy(spec_nok, (4096, 16384), jnp.float32)
+    assert choice == "block_greedy"
+    # rank target small enough that blocked greedy passes <= 2x sketch:
+    # blocking wins
+    spec_small = ReductionSpec(source="unused", strategy="auto", max_k=16,
+                               **roofs)
+    choice, _ = _auto_strategy(spec_small, (4096, 16384), jnp.float32)
+    assert choice == "block_greedy"
+    # deeper power iteration raises the sketch's pass bill: cutover moves
+    spec_pow = ReductionSpec(source="unused", strategy="auto", max_k=64,
+                             sketch_power=2, **roofs)
+    choice, _ = _auto_strategy(spec_pow, (4096, 16384), jnp.float32)
+    assert choice == "block_greedy"

@@ -182,3 +182,61 @@ def test_serve_engine_sampling(cfg):
     batch = api.make_batch(cfg, jax.random.key(1), batch=2, seq=16)
     out = eng.generate(batch, 6, temperature=1.0, key=jax.random.key(7))
     assert out.shape == (2, 6)
+
+
+def _stub_engine(vocab=16, batch=2):
+    """ServeEngine with model calls stubbed out: generate()'s control
+    flow (and its PRNG discipline) under test, no transformer cost."""
+    eng = ServeEngine.__new__(ServeEngine)
+    eng.cfg = None
+    eng.params = None
+    eng.max_len = 32
+    logits = jnp.zeros((batch, vocab), jnp.float32)
+    eng._prefill = lambda params, b: (logits, None)
+    eng._decode = lambda params, tok, cache: (logits, cache)
+    return eng
+
+
+def test_serve_sampling_single_fold_per_step(monkeypatch):
+    """Regression (PR-7 bugfix): sampled decode folded the key TWICE per
+    step — once advancing the base key in the loop and once in _select —
+    with overlapping indices, correlating the streams and reusing fold
+    indices across steps.  The per-step key must be exactly
+    fold_in(base_key, step), each step distinct."""
+    eng = _stub_engine()
+    base = jax.random.key(7)
+    seen = []
+    real_categorical = jax.random.categorical
+
+    def recording(key, logits, *a, **kw):
+        seen.append(np.asarray(jax.random.key_data(key)).copy())
+        return real_categorical(key, logits, *a, **kw)
+
+    monkeypatch.setattr(jax.random, "categorical", recording)
+    n = 6
+    eng.generate({"unused": None}, n, temperature=1.0, key=base)
+    assert len(seen) == n + 1  # one select per step index 0..n
+    expected = [
+        np.asarray(jax.random.key_data(jax.random.fold_in(base, i)))
+        for i in range(n + 1)
+    ]
+    for i, (got, want) in enumerate(zip(seen, expected)):
+        assert np.array_equal(got, want), (
+            f"step {i}: select key is not fold_in(base_key, {i}) — the "
+            f"double-fold regressed")
+    flat = np.stack([s.ravel() for s in seen])
+    assert len(np.unique(flat, axis=0)) == len(seen)  # all distinct
+
+
+def test_serve_sampling_deterministic_for_fixed_seed():
+    """Same key -> identical sampled stream; different key -> different
+    draws (on a stub whose logits are flat, so tokens are pure PRNG)."""
+    eng = _stub_engine(vocab=1024)
+    out1 = eng.generate({"unused": None}, 8, temperature=1.0,
+                        key=jax.random.key(3))
+    out2 = eng.generate({"unused": None}, 8, temperature=1.0,
+                        key=jax.random.key(3))
+    assert np.array_equal(np.asarray(out1), np.asarray(out2))
+    out3 = eng.generate({"unused": None}, 8, temperature=1.0,
+                        key=jax.random.key(4))
+    assert not np.array_equal(np.asarray(out1), np.asarray(out3))
