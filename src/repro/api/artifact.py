@@ -20,6 +20,10 @@ import jax.numpy as jnp
 import numpy as np
 
 _ARTIFACT_VERSION = 1
+# The EIM leaves ride in the same artifact step behind their own version
+# gate (additive: version-1 readers ignore unknown leaves, and loading an
+# older artifact without them just recomputes on first eim() call).
+_EIM_VERSION = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,15 +105,26 @@ class ReducedBasis:
         only exists once the atomic rename lands, so a crash mid-save
         leaves nothing :meth:`load` would ever observe.  Returns the
         written step directory.
+
+        The EIM node set and interpolant matrix are persisted alongside Q
+        (``eim_nodes`` / ``eim_B`` leaves, gated by ``eim_version``):
+        serving startup then skips the O(N·k²) EIM build entirely —
+        :meth:`load` pre-seeds the :meth:`eim` cache from the leaves.
+        Loading an older artifact without them (or with a future
+        ``eim_version``) falls back to recomputing on first use.
         """
         from repro.checkpoint.io import latest_step, save_checkpoint
 
+        ei = self.eim()  # cached; computed here at most once per basis
         tree = {
             "artifact_version": np.asarray(_ARTIFACT_VERSION, np.int64),
             "Q": np.asarray(jax.device_get(self.Q)),
             "pivots": np.asarray(self.pivots),
             "errs": np.asarray(self.errs),
             "k": np.asarray(self.k, np.int64),
+            "eim_version": np.asarray(_EIM_VERSION, np.int64),
+            "eim_nodes": np.asarray(jax.device_get(ei.nodes)),
+            "eim_B": np.asarray(jax.device_get(ei.B)),
             "provenance_json": np.asarray(
                 json.dumps(self.provenance, default=str)
             ),
@@ -173,6 +188,16 @@ class ReducedBasis:
             provenance=json.loads(str(tree["provenance_json"])),
         )
         object.__setattr__(basis, "_directory", directory)
+        if ("eim_nodes" in tree and "eim_B" in tree
+                and int(tree.get("eim_version", -1)) == _EIM_VERSION):
+            from repro.core.eim import EIMResult
+
+            # pre-seed the eim() cache so serving startup skips the
+            # O(N·k²) node selection (cached_property stores here)
+            object.__setattr__(basis, "_eim", EIMResult(
+                nodes=jnp.asarray(tree["eim_nodes"]),
+                B=jnp.asarray(tree["eim_B"]),
+            ))
         return basis
 
     # ------------------------------------------------------- enrichment ----

@@ -1,19 +1,35 @@
 """Serving launcher: batched-request generation with a reduced config,
-or batched reduced-order evaluation from a saved basis artifact.
+or a persistent reduced-order (ROQ) service over saved basis artifacts.
 
 LM mode (unchanged):
   python -m repro.launch.serve --arch mixtral-8x7b --reduced \
       --batch 4 --prompt-len 32 --gen 16
 
-Basis mode — load a ReducedBasis saved by ``repro.api`` (e.g. by
-``python -m repro.launch.reduce``) and serve batched empirical-interpolation
-requests from its EIM nodes (the paper's ROQ online stage):
-  python -m repro.launch.serve --basis artifacts/reduce/basis --batch 256
+Basis mode — spin up the persistent :class:`repro.serving.ROQEngine`
+over one or MORE ReducedBasis artifacts (e.g. per parameter-region GW
+bases) and drive synthetic empirical-interpolation traffic through it
+(the paper's ROQ online stage):
+  python -m repro.launch.serve --basis artifacts/region_a \
+      --basis artifacts/region_b --max-batch 64 --max-wait-ms 2 \
+      --requests 4096
+Each request is a vector known only at a basis's k EIM nodes; the engine
+batches requests per basis under the latency/throughput dial, evaluates
+them through the warm jitted interpolant cache, and reports a latency /
+throughput / cache metrics snapshot on exit.  ``--duration`` submits for
+a fixed wall time instead of a fixed request count.
+
+(The pre-engine one-shot path rebuilt — and recompiled — the jitted
+interpolant ``jax.jit(lambda fn: ei.B @ fn)`` on every invocation, and
+reused the compile round's output as the correctness reference even when
+the batch changed; both are gone: evaluation goes through the shared
+interpolant cache, warm across calls, and every response is checked
+against its own request's reference.)
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -22,71 +38,154 @@ import numpy as np
 from repro.configs import get_config, get_reduced
 from repro.models import api
 from repro.serving import ServeEngine
-from repro.timing import steady_min
 
 
-def serve_basis(basis_dir: str, batch: int, seed: int = 0):
-    """Reduced-order serving from a saved artifact: each "request" is a
-    vector known only at the k EIM nodes; the interpolant reconstructs the
-    full N-sample response (I_k[f] = B @ f[nodes], Alg. 5 of Ref. [6])."""
+def _basis_ids(basis_dirs: list) -> list:
+    """Stable, human-readable ids: directory basename, deduped."""
+    ids, seen = [], set()
+    for d in basis_dirs:
+        bid = os.path.basename(os.path.normpath(os.fspath(d))) or "basis"
+        if bid in seen:
+            i = 2
+            while f"{bid}.{i}" in seen:
+                i += 1
+            bid = f"{bid}.{i}"
+        seen.add(bid)
+        ids.append(bid)
+    return ids
+
+
+def _request_pool(basis, eim, pool: int, seed: int):
+    """Synthetic requests: basis-span vectors sampled at the EIM nodes.
+
+    Returns ``(at_nodes (k, pool), full (N, pool))`` — ``full`` is the
+    exact interpolant of each request (requests lie in span(Q), where the
+    empirical interpolant is exact up to the interpolation solve), used
+    as the per-request correctness reference."""
     import jax.numpy as jnp
 
-    from repro.api import ReducedBasis
-
-    basis = ReducedBasis.load(basis_dir)
-    prov = basis.provenance
-    print(f"loaded {basis!r}")
-    print(f"  built by strategy={prov.get('strategy')!r} over "
-          f"shape={prov.get('shape')} in {prov.get('wall_time_s', 0):.1f}s")
-
-    ei = basis.eim()
-    nodes = np.asarray(ei.nodes)
-    print(f"  EIM: {basis.k} nodes of N={basis.N} samples "
-          f"({basis.N / max(basis.k, 1):.0f}x fewer model evaluations "
-          f"per request)")
-
-    # synthetic requests: basis-span vectors sampled at the EIM nodes
     rng = np.random.default_rng(seed)
-    coeff = rng.standard_normal((basis.k, batch))
+    coeff = rng.standard_normal((basis.k, pool))
     if jnp.iscomplexobj(basis.Q):
-        coeff = coeff + 1j * rng.standard_normal((basis.k, batch))
-    full = basis.Q @ jnp.asarray(coeff.astype(basis.Q.dtype))
-    at_nodes = full[nodes, :]
+        coeff = coeff + 1j * rng.standard_normal((basis.k, pool))
+    full = np.asarray(basis.Q @ jnp.asarray(coeff.astype(
+        np.asarray(basis.Q).dtype)))
+    nodes = np.asarray(eim.nodes)
+    return full[nodes, :], full
 
-    interp = jax.jit(lambda fn: ei.B @ fn)
-    out = jax.block_until_ready(interp(at_nodes))  # compile out of clock
-    # Steady-state best-of-N, not a single shot: one wall-clock sample
-    # swings ±40% on a shared box (the same reason every committed BENCH
-    # row uses this method).
-    repeats = 12
-    dt = steady_min(
-        lambda: jax.block_until_ready(interp(at_nodes)),
-        per=1, repeats=repeats,
-    )
-    err = float(jnp.max(jnp.linalg.norm(out - full, axis=0)))
-    print(f"served {batch} interpolation requests in {dt*1e3:.2f} ms "
-          f"(best of {repeats} steady-state rounds; "
-          f"{batch / max(dt, 1e-9):.0f} req/s); "
-          f"max reconstruction error {err:.2e}")
-    return out
+
+def serve_basis(basis_dirs, *, max_batch: int = 64,
+                max_wait_ms: float = 2.0, requests: int | None = None,
+                duration: float | None = None, queue_depth: int = 4096,
+                timeout_s: float | None = None, seed: int = 0):
+    """Serve synthetic ROQ traffic over the given artifacts; returns the
+    final engine stats dict (plus ``max_err`` / ``served`` keys)."""
+    from repro.serving import QueueFullError, ROQEngine
+
+    if isinstance(basis_dirs, (str, os.PathLike)):
+        basis_dirs = [basis_dirs]
+    ids = _basis_ids(basis_dirs)
+    engine = ROQEngine({bid: d for bid, d in zip(ids, basis_dirs)},
+                       max_batch=max_batch, max_wait_ms=max_wait_ms,
+                       queue_depth=queue_depth, timeout_s=timeout_s)
+    pools = {}
+    for bid in ids:
+        basis, eim = engine.router.get(bid)
+        prov = basis.provenance
+        print(f"[{bid}] {basis!r}")
+        print(f"  built by strategy={prov.get('strategy')!r} over "
+              f"shape={prov.get('shape')}; EIM: {basis.k} nodes of "
+              f"N={basis.N} samples "
+              f"({basis.N / max(basis.k, 1):.0f}x fewer model "
+              f"evaluations per request)")
+        pools[bid] = _request_pool(basis, eim, pool=max(2 * max_batch, 64),
+                                   seed=seed)
+        engine.warm(bid)
+
+    if requests is None and duration is None:
+        requests = 16 * max_batch
+
+    futures = []   # (future, bid, pool column)
+    rejected = 0
+    t0 = time.perf_counter()
+    i = 0
+    while True:
+        if duration is not None:
+            if time.perf_counter() - t0 >= duration:
+                break
+        elif i >= requests:
+            break
+        bid = ids[i % len(ids)]
+        at_nodes, _ = pools[bid]
+        col = i % at_nodes.shape[1]
+        try:
+            futures.append((engine.submit(bid, at_nodes[:, col]), bid, col))
+        except QueueFullError:
+            rejected += 1
+            time.sleep(1e-4)  # brief backoff, then keep offering load
+        i += 1
+    engine.close(drain=True)
+    wall = time.perf_counter() - t0
+
+    max_err = 0.0
+    for fut, bid, col in futures:
+        out = fut.result()
+        ref = pools[bid][1][:, col]
+        max_err = max(max_err, float(np.max(np.abs(out - ref))))
+    stats = engine.stats()
+    stats["max_err"] = max_err
+    stats["served"] = len(futures)
+    stats["submit_rejected"] = rejected
+    lat = stats["latency_ms"] or {}
+    print(f"served {len(futures)} requests over {len(ids)} bases in "
+          f"{wall:.3f}s ({len(futures) / max(wall, 1e-9):.0f} req/s "
+          f"end-to-end; {rejected} backpressure rejects)")
+    if lat:
+        print(f"  latency p50={lat['p50']:.3f}ms p95={lat['p95']:.3f}ms "
+              f"p99={lat['p99']:.3f}ms (n={lat['n']})")
+    print(f"  batches={stats['counters']['batches']} "
+          f"occupancy={stats['batch_occupancy_mean']:.2f} "
+          f"cache_hit_rate={stats['cache_hit_rate']:.2f} "
+          f"(misses={stats['counters']['cache_misses']})")
+    print(f"  max interpolation error {max_err:.2e}")
+    return stats
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
-    ap.add_argument("--basis",
+    ap.add_argument("--basis", action="append", default=[],
                     help="directory of a ReducedBasis artifact "
-                         "(repro.api .save); serves reduced-order "
-                         "evaluations instead of LM generation")
+                         "(repro.api .save); repeatable — serves "
+                         "reduced-order interpolation across all given "
+                         "bases instead of LM generation")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    # basis-mode engine dial
+    ap.add_argument("--max-batch", type=int, default=64,
+                    help="flush a basis's batch at this many requests")
+    ap.add_argument("--max-wait-ms", type=float, default=2.0,
+                    help="... or this long after its oldest request")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="total synthetic requests to submit "
+                         "(default 16*max_batch)")
+    ap.add_argument("--duration", type=float, default=None,
+                    help="submit for this many seconds instead of a "
+                         "fixed --requests count")
+    ap.add_argument("--queue-depth", type=int, default=4096)
+    ap.add_argument("--timeout-s", type=float, default=None,
+                    help="per-request deadline")
     args = ap.parse_args(argv)
 
     if args.basis:
-        return serve_basis(args.basis, batch=args.batch)
+        return serve_basis(
+            args.basis, max_batch=args.max_batch,
+            max_wait_ms=args.max_wait_ms, requests=args.requests,
+            duration=args.duration, queue_depth=args.queue_depth,
+            timeout_s=args.timeout_s)
     if not args.arch:
         ap.error("--arch is required unless --basis is given")
 

@@ -1,3 +1,23 @@
 from repro.serving.engine import ServeEngine
+from repro.serving.metrics import ServingMetrics
+from repro.serving.roq import (
+    EngineClosedError,
+    InterpolantCache,
+    QueueFullError,
+    ROQEngine,
+    batch_bucket,
+    direct_interpolate,
+)
+from repro.serving.router import BasisRouter
 
-__all__ = ["ServeEngine"]
+__all__ = [
+    "ServeEngine",
+    "ROQEngine",
+    "BasisRouter",
+    "ServingMetrics",
+    "InterpolantCache",
+    "QueueFullError",
+    "EngineClosedError",
+    "batch_bucket",
+    "direct_interpolate",
+]

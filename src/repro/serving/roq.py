@@ -1,0 +1,487 @@
+"""Persistent ROQ serving engine: the paper's *online* stage as a service.
+
+The offline stage builds a reduced basis once; the whole point is the
+online stage — many cheap queries against it.  A request here is a vector
+``f`` known only at the basis's ``k`` EIM nodes; the engine answers with
+the full N-sample empirical interpolant ``I_k[f] = B @ f[nodes]`` (Alg. 5
+of Ref. [6]).  One :class:`ROQEngine` turns that single GEMV into a
+persistent batched service:
+
+- ``submit(basis_id, f_nodes)`` puts a request on a BOUNDED queue and
+  returns a ``concurrent.futures.Future`` (queue full -> explicit
+  :class:`QueueFullError` reject, never silent latency).
+- A worker thread forms dynamic per-basis batches under the latency /
+  throughput dial: flush at ``max_batch`` requests OR ``max_wait_ms``
+  after the oldest pending one, whichever first.
+- Batches evaluate through a warm :class:`InterpolantCache` keyed by
+  ``(basis_id, batch_bucket, dtype)``: batch widths round up to
+  power-of-two buckets so the number of XLA compilations is
+  O(log2(max_batch)) per basis, not one per width.
+- ``basis_id`` routes through a :class:`~repro.serving.router.BasisRouter`
+  (multi-artifact working set, LRU under a device-memory budget); router
+  evictions drop the matching warm cache entries.
+- Per-request timeout and error isolation: a malformed request (wrong
+  length, uncastable dtype, unknown basis) fails ALONE via its future;
+  its batchmates still serve.  Injected faults
+  (``REPRO_FAULT_SERVE_RAISE_AT_BATCH``, PR-6 conventions) fail one
+  batch, never the engine.
+- ``close()`` drains: intake stops, everything already accepted is
+  served, then the worker exits.
+
+Bitwise contract (load-bearing for tests and the multi-basis acceptance
+row): padded-bucket evaluation is bit-identical to the unpadded direct
+evaluation of the same requests.  Two ingredients make that true: complex
+interpolants run as plane-split real GEMMs (the repo-wide convention —
+XLA CPU's complex GEMM both differs bitwise under padding and lowers
+badly), and every GEMM is kept at width >= 2 (width-1 dots route to a
+GEMV with a different accumulation order, so :func:`direct_interpolate`
+pads a lone column to 2).  Per-column GEMM results are then independent
+of the padded width — asserted across dtypes in tests/test_serving.py.
+"""
+
+from __future__ import annotations
+
+import concurrent.futures
+import dataclasses
+import logging
+import os
+import queue
+import threading
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.metrics import ServingMetrics
+from repro.serving.router import BasisRouter
+
+logger = logging.getLogger("repro.serving")
+
+
+class QueueFullError(RuntimeError):
+    """Backpressure: the engine's bounded queue is full; retry or shed."""
+
+
+class EngineClosedError(RuntimeError):
+    """The engine is closed (or closing) and takes no new requests."""
+
+
+def batch_bucket(n: int) -> int:
+    """Padded batch width for a batch of ``n`` requests: the smallest
+    power of two >= max(n, 2).  The floor of 2 keeps even a lone request
+    on the bitwise-stable GEMM path (see module docstring)."""
+    if n < 1:
+        raise ValueError(f"batch of {n} requests")
+    return 1 << (max(n, 2) - 1).bit_length()
+
+
+# One jitted apply per arithmetic form, shared by every basis; XLA's trace
+# cache keys on shapes/dtypes, so distinct buckets compile once each and
+# same-shaped bases share executables.  The explicit InterpolantCache on
+# top tracks warmth per (basis_id, bucket, dtype) and owns the
+# device-committed interpolant planes.
+@jax.jit
+def _apply_real(B, F):
+    return B @ F
+
+
+@jax.jit
+def _apply_split(Br, Bi, Fr, Fi):
+    return Br @ Fr - Bi @ Fi, Br @ Fi + Bi @ Fr
+
+
+def _eval_planes(planes, Fp: np.ndarray) -> np.ndarray:
+    """Evaluate the committed interpolant on a padded (k, bucket) batch."""
+    if len(planes) == 1:
+        (B,) = planes
+        return np.asarray(_apply_real(B, jnp.asarray(Fp)))
+    Br, Bi = planes
+    re, im = _apply_split(Br, Bi, jnp.asarray(np.ascontiguousarray(Fp.real)),
+                          jnp.asarray(np.ascontiguousarray(Fp.imag)))
+    out = np.empty((re.shape[0], re.shape[1]), dtype=Fp.dtype)
+    out.real = np.asarray(re)
+    out.imag = np.asarray(im)
+    return out
+
+
+def _commit_planes(eim_B) -> tuple:
+    """Device-commit an interpolant matrix once per routed basis."""
+    B = np.asarray(eim_B)
+    if np.issubdtype(B.dtype, np.complexfloating):
+        return (jnp.asarray(np.ascontiguousarray(B.real)),
+                jnp.asarray(np.ascontiguousarray(B.imag)))
+    return (jnp.asarray(B),)
+
+
+def direct_interpolate(eim, F) -> np.ndarray:
+    """Reference evaluation: unpadded, unbatched-policy-free ``B @ F``.
+
+    ``F`` is (k,) or (k, b) at the EIM nodes; returns (N,) or (N, b).
+    This is "direct per-basis evaluation" in the acceptance sense — the
+    engine's padded-bucket path must match it bit for bit.  A single
+    column is padded to width 2 to stay on the GEMM path.
+    """
+    B = np.asarray(eim.B)
+    F = np.asarray(F, dtype=B.dtype)
+    squeeze = F.ndim == 1
+    if squeeze:
+        F = F[:, None]
+    b = F.shape[1]
+    if b < 2:
+        Fp = np.zeros((F.shape[0], 2), dtype=F.dtype)
+        Fp[:, :b] = F
+    else:
+        Fp = F
+    out = _eval_planes(_commit_planes(B), Fp)[:, :b]
+    return out[:, 0] if squeeze else out
+
+
+class InterpolantCache:
+    """Warm jitted interpolants keyed by ``(basis_id, bucket, dtype)``.
+
+    Holds the device-committed interpolant planes per basis plus the set
+    of (bucket, dtype) combinations already traced/compiled for it; a
+    miss pays the device commit and/or XLA compile, every later batch in
+    the same bucket is warm.  ``evict(basis_id)`` drops both (wired to
+    router LRU evictions).
+    """
+
+    def __init__(self):
+        self._planes: dict[str, tuple] = {}
+        self._warm: set[tuple] = set()
+        self._lock = threading.Lock()
+
+    def evaluate(self, basis_id: str, eim, F: np.ndarray):
+        """(out, bucket, was_warm) for a (k, b) request batch ``F``."""
+        b = F.shape[1]
+        bucket = batch_bucket(b)
+        key = (basis_id, bucket, str(F.dtype))
+        with self._lock:
+            warm = key in self._warm
+            planes = self._planes.get(basis_id)
+            if planes is None:
+                planes = _commit_planes(eim.B)
+                self._planes[basis_id] = planes
+        Fp = np.zeros((F.shape[0], bucket), dtype=F.dtype)
+        Fp[:, :b] = F
+        out = _eval_planes(planes, Fp)[:, :b]
+        with self._lock:
+            self._warm.add(key)
+        return out, bucket, warm
+
+    def warm_keys(self, basis_id: str) -> list[tuple]:
+        with self._lock:
+            return sorted(k for k in self._warm if k[0] == basis_id)
+
+    def evict(self, basis_id: str) -> None:
+        with self._lock:
+            self._planes.pop(basis_id, None)
+            self._warm = {k for k in self._warm if k[0] != basis_id}
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"committed_bases": len(self._planes),
+                    "warm_entries": len(self._warm)}
+
+
+@dataclasses.dataclass
+class _Request:
+    basis_id: str
+    f: np.ndarray
+    future: concurrent.futures.Future
+    t_submit: float
+    deadline: Optional[float]
+
+
+def _resolve(fut: concurrent.futures.Future, *, result=None,
+             error: Optional[BaseException] = None) -> bool:
+    """Resolve a future, tolerating caller-side cancellation."""
+    try:
+        if error is not None:
+            fut.set_exception(error)
+        else:
+            fut.set_result(result)
+        return True
+    except concurrent.futures.InvalidStateError:
+        return False
+
+
+class ROQEngine:
+    """Persistent batched ROQ interpolation service (see module docstring).
+
+    Args:
+      router: a :class:`BasisRouter`, or a ``{basis_id: directory |
+        ReducedBasis}`` mapping to build one from (budgeted by
+        ``REPRO_DEVICE_MEM_BUDGET`` conventions).
+      max_batch: flush a basis's pending batch at this many requests.
+      max_wait_ms: ... or this long after its oldest pending request —
+        the latency/throughput dial (small = low latency, large = big
+        batches).
+      queue_depth: bounded intake; a full queue rejects with
+        :class:`QueueFullError` (explicit backpressure).
+      timeout_s: default per-request deadline (None = no deadline),
+        overridable per ``submit``.
+      start: spin up the worker immediately (tests pass False to poke
+        the queue unserviced).
+    """
+
+    def __init__(self, router, *, max_batch: int = 32,
+                 max_wait_ms: float = 2.0, queue_depth: int = 1024,
+                 timeout_s: Optional[float] = None,
+                 metrics: Optional[ServingMetrics] = None,
+                 start: bool = True):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.metrics = metrics if metrics is not None else ServingMetrics()
+        if isinstance(router, dict):
+            mapping, router = router, BasisRouter(metrics=self.metrics)
+            for bid, src in mapping.items():
+                router.register(bid, src)
+        if router._metrics is None:
+            router._metrics = self.metrics
+        self.router = router
+        self.cache = InterpolantCache()
+        prev_evict = router._on_evict
+        def _on_evict(bid, _prev=prev_evict):
+            self.cache.evict(bid)
+            if _prev is not None:
+                _prev(bid)
+        router._on_evict = _on_evict
+        self.max_batch = int(max_batch)
+        self.max_wait_s = float(max_wait_ms) / 1e3
+        self.timeout_s = timeout_s
+        self._queue: queue.Queue = queue.Queue(maxsize=int(queue_depth))
+        self._closed = False
+        self._abort = False
+        self._wake = threading.Event()
+        self._batch_ordinal = 0
+        self._worker: Optional[threading.Thread] = None
+        if start:
+            self.start()
+
+    # ----------------------------------------------------------- intake ----
+    def submit(self, basis_id: str, f_nodes,
+               timeout_s: Optional[float] = None
+               ) -> concurrent.futures.Future:
+        """Enqueue one interpolation request; returns its future.
+
+        The future resolves to the (N,) interpolant, or raises the
+        request's own failure (bad shape/dtype, unknown basis, timeout,
+        batch evaluation error).  Raises synchronously only for
+        engine-level conditions: closed intake or a full queue.
+        """
+        if self._closed:
+            raise EngineClosedError("engine is closed to new requests")
+        f = np.asarray(f_nodes)
+        if f.ndim != 1:
+            self.metrics.count("errors")
+            raise ValueError(
+                f"a request is ONE vector at the EIM nodes; got shape "
+                f"{f.shape} (batching is the engine's job)")
+        now = time.perf_counter()
+        if timeout_s is None:
+            timeout_s = self.timeout_s
+        req = _Request(
+            basis_id=str(basis_id), f=f,
+            future=concurrent.futures.Future(), t_submit=now,
+            deadline=None if timeout_s is None else now + float(timeout_s),
+        )
+        try:
+            self._queue.put_nowait(req)
+        except queue.Full:
+            self.metrics.count("rejected")
+            raise QueueFullError(
+                f"serving queue full ({self._queue.maxsize} deep); "
+                f"backpressure — retry or shed load") from None
+        self.metrics.count("submitted")
+        self._wake.set()
+        return req.future
+
+    def warm(self, basis_id: str, buckets=None) -> None:
+        """Pre-compile interpolant entries for ``basis_id`` off the
+        request path (all power-of-two buckets up to ``max_batch`` by
+        default) and fault in the routed basis."""
+        basis, eim = self.router.get(basis_id)
+        dtype = np.asarray(basis.Q).dtype
+        if buckets is None:
+            buckets, b = [], 2
+            while b < batch_bucket(self.max_batch):
+                buckets.append(b)
+                b *= 2
+            buckets.append(batch_bucket(self.max_batch))
+        for b in buckets:
+            zeros = np.zeros((basis.k, int(b)), dtype=dtype)
+            self.cache.evaluate(basis_id, eim, zeros)
+
+    # ----------------------------------------------------------- worker ----
+    def start(self) -> None:
+        if self._worker is not None:
+            return
+        self._worker = threading.Thread(
+            target=self._run, name="roq-engine", daemon=True)
+        self._worker.start()
+
+    def close(self, drain: bool = True) -> None:
+        """Stop intake; serve everything already accepted (``drain=True``)
+        or fail it with :class:`EngineClosedError` (``drain=False``);
+        join the worker."""
+        self._closed = True
+        if not drain:
+            self._abort = True
+        self._wake.set()
+        if self._worker is not None:
+            self._worker.join()
+            self._worker = None
+        if self._abort:
+            self._fail_all_pending(EngineClosedError("engine aborted"))
+
+    def __enter__(self) -> "ROQEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close(drain=True)
+
+    def _run(self) -> None:
+        pending: dict[str, list[_Request]] = {}
+        while True:
+            if self._abort:
+                break
+            self._wake.wait(timeout=self._poll_s(pending))
+            self._wake.clear()
+            if self._abort:
+                break
+            while True:
+                try:
+                    req = self._queue.get_nowait()
+                except queue.Empty:
+                    break
+                pending.setdefault(req.basis_id, []).append(req)
+            self.metrics.set_queue_depth(self._queue.qsize())
+            draining = self._closed and self._queue.empty()
+            now = time.perf_counter()
+            for bid in list(pending):
+                lst = pending[bid]
+                while len(lst) >= self.max_batch:
+                    self._flush(bid, lst[:self.max_batch])
+                    del lst[:self.max_batch]
+                if lst and (draining
+                            or now - lst[0].t_submit >= self.max_wait_s):
+                    self._flush(bid, lst)
+                    lst.clear()
+                if not lst:
+                    del pending[bid]
+            if self._closed and self._queue.empty() and not pending:
+                break
+        if self._abort:
+            for lst in pending.values():
+                for r in lst:
+                    if _resolve(r.future,
+                                error=EngineClosedError("engine aborted")):
+                        self.metrics.count("errors")
+
+    def _poll_s(self, pending) -> float:
+        """Sleep until the next max_wait flush is due (capped so close()
+        and fresh submissions stay responsive)."""
+        cap = 0.05
+        if self._closed:
+            return 1e-3
+        if not pending:
+            return cap
+        now = time.perf_counter()
+        oldest = min(lst[0].t_submit for lst in pending.values() if lst)
+        return max(1e-4, min(cap, oldest + self.max_wait_s - now))
+
+    def _fail_all_pending(self, err: BaseException) -> None:
+        while True:
+            try:
+                r = self._queue.get_nowait()
+            except queue.Empty:
+                return
+            if _resolve(r.future, error=err):
+                self.metrics.count("errors")
+
+    # ------------------------------------------------------------ flush ----
+    def _flush(self, basis_id: str, reqs: list) -> None:
+        now = time.perf_counter()
+        live = []
+        for r in reqs:
+            if r.deadline is not None and now > r.deadline:
+                if _resolve(r.future, error=TimeoutError(
+                        f"request waited past its "
+                        f"{r.deadline - r.t_submit:.3f}s deadline")):
+                    self.metrics.count("timeouts")
+            else:
+                live.append(r)
+        if not live:
+            return
+        try:
+            basis, eim = self.router.get(basis_id)
+        except Exception as e:  # unknown id, unreadable artifact, ...
+            for r in live:
+                if _resolve(r.future, error=e):
+                    self.metrics.count("errors")
+            return
+        dtype = np.asarray(basis.Q).dtype
+        good = []
+        for r in live:
+            if r.f.shape != (basis.k,):
+                err = ValueError(
+                    f"request for {basis_id!r} has shape {r.f.shape}, "
+                    f"expected ({basis.k},) — one value per EIM node")
+            elif not np.can_cast(r.f.dtype, dtype, casting="same_kind"):
+                err = ValueError(
+                    f"request dtype {r.f.dtype} does not cast to basis "
+                    f"dtype {dtype}")
+            else:
+                good.append(r)
+                continue
+            if _resolve(r.future, error=err):
+                self.metrics.count("errors")
+        if not good:
+            return
+        F = np.stack([r.f for r in good], axis=1).astype(dtype, copy=False)
+        self._batch_ordinal += 1
+        try:
+            self._maybe_inject_batch_fault(self._batch_ordinal)
+            out, bucket, warm = self.cache.evaluate(basis_id, eim, F)
+        except Exception as e:
+            # batch-level failure: isolated to THIS batch's requests;
+            # the engine keeps serving subsequent batches.
+            logger.warning("batch %d for %r failed: %s",
+                           self._batch_ordinal, basis_id, e)
+            for r in good:
+                if _resolve(r.future, error=e):
+                    self.metrics.count("errors")
+            return
+        self.metrics.count("cache_hits" if warm else "cache_misses")
+        self.metrics.observe_batch(len(good), bucket)
+        t_done = time.perf_counter()
+        for i, r in enumerate(good):
+            if _resolve(r.future, result=out[:, i]):
+                self.metrics.count("completed")
+                self.metrics.observe_latency(t_done - r.t_submit)
+
+    @staticmethod
+    def _maybe_inject_batch_fault(ordinal: int) -> None:
+        """PR-6-convention fault hook: ``REPRO_FAULT_SERVE_RAISE_AT_BATCH=n``
+        raises a transient error evaluating the n-th batch (at most once
+        under ``REPRO_FAULT_ONCE``), exercising batch error isolation."""
+        at = os.environ.get("REPRO_FAULT_SERVE_RAISE_AT_BATCH")
+        if not at or ordinal != int(at):
+            return
+        from repro.checkpoint.io import _fault_once
+
+        if _fault_once("serve_raise_at_batch"):
+            raise RuntimeError(
+                f"injected serving fault at batch {ordinal} "
+                f"(REPRO_FAULT_SERVE_RAISE_AT_BATCH)")
+
+    # ------------------------------------------------------------ status ----
+    def stats(self) -> dict:
+        """One observability rollup: metrics snapshot + router + cache."""
+        snap = self.metrics.snapshot()
+        snap["router"] = self.router.stats()
+        snap["interpolant_cache"] = self.cache.stats()
+        return snap

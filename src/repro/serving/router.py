@@ -1,0 +1,178 @@
+"""Multi-basis routing: request key -> loaded ``ReducedBasis`` + EIM.
+
+A production ROQ service holds MANY bases — e.g. one per parameter region
+of the GW space, each cheap to build with the randomized sketch — but the
+device cannot hold all of them at once.  :class:`BasisRouter` owns that
+working set:
+
+- ``register(basis_id, source)`` declares a basis by artifact directory
+  (lazily loaded, evictable) or as an in-memory ``ReducedBasis`` (pinned:
+  with no directory to reload from, evicting it would lose it).
+- ``get(basis_id)`` returns the loaded ``(basis, eim)`` pair, loading on
+  first use and counting the persisted-vs-recomputed EIM path.
+- Loaded bases form an LRU under a device-memory budget following the
+  ``REPRO_DEVICE_MEM_BUDGET`` convention (default:
+  :func:`repro.api.build.device_memory_budget`); crossing it evicts
+  least-recently-used directory-backed bases, firing ``on_evict`` so the
+  engine can drop their warm interpolant-cache entries too.  A later
+  ``get`` reloads from the artifact directory — bit-identical arrays, by
+  the artifact round-trip guarantee.
+"""
+
+from __future__ import annotations
+
+import collections
+import logging
+import os
+import threading
+from typing import Callable, NamedTuple, Optional
+
+import numpy as np
+
+logger = logging.getLogger("repro.serving")
+
+
+class _Entry(NamedTuple):
+    basis: object          # ReducedBasis
+    eim: object            # EIMResult (nodes, B)
+    nbytes: int            # device working-set estimate
+    evictable: bool        # directory-backed (reloadable) vs pinned
+
+
+def _entry_bytes(basis, eim) -> int:
+    """Device working set of one routed basis: Q + interpolant B + nodes."""
+    total = 0
+    for arr in (basis.Q, eim.B, eim.nodes):
+        a = np.asarray(arr)
+        total += int(a.size) * int(a.dtype.itemsize)
+    return total
+
+
+class BasisRouter:
+    def __init__(self, memory_budget_bytes: Optional[int] = None,
+                 on_evict: Optional[Callable[[str], None]] = None,
+                 metrics=None):
+        if memory_budget_bytes is None:
+            from repro.api.build import device_memory_budget
+
+            memory_budget_bytes = device_memory_budget()
+        self.memory_budget_bytes = int(memory_budget_bytes)
+        self._on_evict = on_evict
+        self._metrics = metrics
+        self._sources: dict[str, object] = {}   # id -> dir | ReducedBasis
+        self._live: collections.OrderedDict[str, _Entry] = \
+            collections.OrderedDict()           # LRU: oldest first
+        self._lock = threading.RLock()
+
+    # ---------------------------------------------------------- registry ----
+    def register(self, basis_id: str, source) -> None:
+        """Declare ``basis_id`` -> artifact directory or ReducedBasis.
+
+        Directories stay on disk until routed to; an in-memory basis with
+        a backing :attr:`~repro.api.ReducedBasis.directory` is registered
+        by that directory (evictable), one without is pinned.
+        """
+        from repro.api import ReducedBasis
+
+        with self._lock:
+            if basis_id in self._sources:
+                raise ValueError(f"basis_id {basis_id!r} already registered")
+            if isinstance(source, (str, os.PathLike)):
+                self._sources[basis_id] = os.fspath(source)
+            elif isinstance(source, ReducedBasis):
+                if source.directory is not None:
+                    self._sources[basis_id] = source.directory
+                else:
+                    self._sources[basis_id] = source  # pinned
+            else:
+                raise TypeError(
+                    f"register() wants an artifact directory or a "
+                    f"ReducedBasis, got {type(source).__name__}")
+
+    def ids(self) -> list[str]:
+        with self._lock:
+            return list(self._sources)
+
+    def loaded_ids(self) -> list[str]:
+        """Currently-resident ids, least recently used first."""
+        with self._lock:
+            return list(self._live)
+
+    def __contains__(self, basis_id: str) -> bool:
+        with self._lock:
+            return basis_id in self._sources
+
+    # ------------------------------------------------------------ lookup ----
+    def get(self, basis_id: str):
+        """Resident ``(basis, eim)`` for ``basis_id`` (loads, LRU-bumps,
+        and evicts colder bases as needed).  KeyError on unknown ids —
+        the engine turns that into a per-request failure."""
+        with self._lock:
+            if basis_id not in self._sources:
+                raise KeyError(f"unknown basis_id {basis_id!r}; "
+                               f"registered: {sorted(self._sources)}")
+            entry = self._live.get(basis_id)
+            if entry is None:
+                entry = self._load(basis_id)
+                self._live[basis_id] = entry
+                self._shrink_to_budget(keep=basis_id)
+            else:
+                self._live.move_to_end(basis_id)
+            return entry.basis, entry.eim
+
+    def _load(self, basis_id: str) -> _Entry:
+        from repro.api import ReducedBasis
+
+        source = self._sources[basis_id]
+        if isinstance(source, str):
+            basis = ReducedBasis.load(source)
+            evictable = True
+        else:
+            basis = source
+            evictable = False
+        persisted = "_eim" in vars(basis)
+        eim = basis.eim()   # instant when the artifact carried the leaves
+        if self._metrics is not None:
+            self._metrics.count("basis_loads")
+        entry = _Entry(basis, eim, _entry_bytes(basis, eim), evictable)
+        logger.info(
+            "router loaded %r: k=%d N=%d dtype=%s eim=%s (%.1f MiB)",
+            basis_id, basis.k, basis.N, basis.Q.dtype,
+            "persisted" if persisted else "computed",
+            entry.nbytes / 2**20)
+        return entry
+
+    def _shrink_to_budget(self, keep: str) -> None:
+        """Evict LRU evictable entries (never ``keep``) while over budget.
+
+        A single basis larger than the whole budget stays resident — the
+        router serves it and logs, rather than thrashing or failing."""
+        def resident():
+            return sum(e.nbytes for e in self._live.values())
+
+        while resident() > self.memory_budget_bytes:
+            victim = next(
+                (bid for bid, e in self._live.items()
+                 if bid != keep and e.evictable), None)
+            if victim is None:
+                logger.warning(
+                    "router over memory budget (%d > %d bytes) with no "
+                    "evictable basis left; keeping %d resident",
+                    resident(), self.memory_budget_bytes, len(self._live))
+                return
+            self._live.pop(victim)
+            if self._metrics is not None:
+                self._metrics.count("basis_evictions")
+            logger.info("router evicted %r (LRU, over budget)", victim)
+            if self._on_evict is not None:
+                self._on_evict(victim)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "registered": len(self._sources),
+                "resident": len(self._live),
+                "resident_bytes": sum(e.nbytes
+                                      for e in self._live.values()),
+                "memory_budget_bytes": self.memory_budget_bytes,
+            }

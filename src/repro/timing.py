@@ -32,3 +32,34 @@ def steady_min(fn, per: int = 1, repeats: int = 12, warmup: int = 3) -> float:
         fn()
         best = min(best, time.perf_counter() - t0)
     return best / per
+
+
+def percentiles(samples, qs=(50.0, 95.0, 99.0)) -> dict:
+    """Percentiles of ``samples`` by sorted linear interpolation.
+
+    The one quantile method every latency report uses (serving metrics
+    snapshots and the load harness both call this instead of hand-rolling
+    index math).  ``qs`` are percent ranks in [0, 100]; returns
+    ``{q: value}`` with the values linearly interpolated between order
+    statistics (numpy's default "linear" method), so ``percentiles(s,
+    (0, 50, 100))`` gives min / median / max exactly.
+
+    Raises ``ValueError`` on an empty sample set or an out-of-range q —
+    an empty latency window is a caller-level condition (report "no
+    samples", don't fabricate a 0.0 percentile).
+    """
+    xs = sorted(float(x) for x in samples)
+    if not xs:
+        raise ValueError("percentiles() of empty sample set")
+    out = {}
+    n = len(xs)
+    for q in qs:
+        fq = float(q)
+        if not 0.0 <= fq <= 100.0:
+            raise ValueError(f"percentile rank {q!r} outside [0, 100]")
+        pos = (fq / 100.0) * (n - 1)
+        lo = int(pos)
+        hi = min(lo + 1, n - 1)
+        frac = pos - lo
+        out[q] = xs[lo] + (xs[hi] - xs[lo]) * frac
+    return out

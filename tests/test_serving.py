@@ -1,0 +1,423 @@
+"""Serving subsystem tests: ROQEngine batching/padding, router LRU,
+timeout/error isolation, backpressure, EIM artifact persistence, and the
+end-to-end multi-basis smoke over greedy- and randomized-built artifacts.
+
+The load-bearing contract: every response the engine produces — through
+padded batch buckets, warm cache entries, and routed bases — is
+BIT-IDENTICAL to :func:`repro.serving.direct_interpolate` of the same
+request (plane-split complex, GEMM width >= 2; see serving/roq.py).
+"""
+
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import ReducedBasis, build_basis
+from repro.serving import (
+    BasisRouter,
+    EngineClosedError,
+    InterpolantCache,
+    QueueFullError,
+    ROQEngine,
+    batch_bucket,
+    direct_interpolate,
+)
+from tests.conftest import make_smooth_matrix
+
+WAIT_S = 10.0  # generous future timeout: worker flushes in milliseconds
+
+
+def _requests(basis, n, seed=0):
+    """n random request vectors (k,) in the basis dtype."""
+    rng = np.random.default_rng(seed)
+    dtype = np.asarray(basis.Q).dtype
+    f = rng.standard_normal((basis.k, n))
+    if np.issubdtype(dtype, np.complexfloating):
+        f = f + 1j * rng.standard_normal((basis.k, n))
+    return f.astype(dtype)
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    """One f32 greedy + one c64 randomized artifact, saved to disk."""
+    root = tmp_path_factory.mktemp("serving_bases")
+    f32 = build_basis(source=make_smooth_matrix(120, 60, np.float32),
+                      strategy="greedy", tau=1e-5, max_k=8)
+    c64 = build_basis(source=make_smooth_matrix(80, 50, np.complex64),
+                      strategy="randomized", tau=1e-5, max_k=6)
+    dirs = {"f32_greedy": str(root / "f32_greedy"),
+            "c64_rand": str(root / "c64_rand")}
+    f32.save(dirs["f32_greedy"])
+    c64.save(dirs["c64_rand"])
+    return dirs
+
+
+# ----------------------------------------------------------- buckets ----
+
+def test_batch_bucket_powers_of_two_with_floor_two():
+    assert [batch_bucket(n) for n in (1, 2, 3, 4, 5, 8, 9, 16, 17)] == \
+        [2, 2, 4, 4, 8, 8, 16, 16, 32]
+    with pytest.raises(ValueError):
+        batch_bucket(0)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.complex64])
+def test_padded_bucket_eval_bitwise_vs_unpadded(dtype):
+    """Ragged batch widths through the cache == unpadded direct eval,
+    bit for bit — and each column == the per-request direct eval."""
+    basis = build_basis(source=make_smooth_matrix(64, 40, dtype),
+                        strategy="greedy", tau=1e-5, max_k=7)
+    eim = basis.eim()
+    cache = InterpolantCache()
+    for width in (1, 2, 3, 5, 7):
+        F = _requests(basis, width, seed=width)
+        out, bucket, _ = cache.evaluate(f"b_{dtype.__name__}", eim, F)
+        assert bucket == batch_bucket(width)
+        assert out.shape == (basis.N, width)
+        # whole-batch direct (unpadded) reference
+        assert np.array_equal(out, direct_interpolate(eim, F))
+        # per-request direct reference
+        for j in range(width):
+            assert np.array_equal(out[:, j],
+                                  direct_interpolate(eim, F[:, j]))
+
+
+def test_cache_warm_after_first_bucket_and_evict():
+    basis = build_basis(source=make_smooth_matrix(48, 30, np.float32),
+                        strategy="greedy", tau=1e-5, max_k=5)
+    cache = InterpolantCache()
+    F = _requests(basis, 3)
+    _, bucket, warm0 = cache.evaluate("x", basis.eim(), F)
+    _, _, warm1 = cache.evaluate("x", basis.eim(), F)
+    assert (warm0, warm1) == (False, True)
+    assert cache.warm_keys("x") == [("x", bucket, str(F.dtype))]
+    cache.evict("x")
+    assert cache.warm_keys("x") == []
+    _, _, warm2 = cache.evaluate("x", basis.eim(), F)
+    assert warm2 is False
+
+
+# ------------------------------------------------------------ router ----
+
+def test_router_lru_eviction_reload_roundtrip(artifacts):
+    evicted = []
+    # budget of 1 byte: exactly the requested basis stays resident
+    router = BasisRouter(memory_budget_bytes=1, on_evict=evicted.append)
+    for bid, d in artifacts.items():
+        router.register(bid, d)
+    b1, e1 = router.get("f32_greedy")
+    q1 = np.asarray(b1.Q).copy()
+    assert router.loaded_ids() == ["f32_greedy"]
+    router.get("c64_rand")
+    assert router.loaded_ids() == ["c64_rand"]
+    assert evicted == ["f32_greedy"]
+    b1b, e1b = router.get("f32_greedy")  # reload round-trip
+    assert evicted == ["f32_greedy", "c64_rand"]
+    assert np.array_equal(np.asarray(b1b.Q), q1)
+    assert np.array_equal(np.asarray(e1b.nodes), np.asarray(e1.nodes))
+    assert np.array_equal(np.asarray(e1b.B), np.asarray(e1.B))
+
+
+def test_router_pinned_in_memory_basis_never_evicted(artifacts):
+    pinned = build_basis(source=make_smooth_matrix(48, 30, np.float32),
+                         strategy="greedy", tau=1e-5, max_k=5)
+    assert pinned.directory is None
+    router = BasisRouter(memory_budget_bytes=1)
+    router.register("pinned", pinned)
+    router.register("disk", artifacts["f32_greedy"])
+    router.get("pinned")
+    router.get("disk")
+    # over budget, but the pinned basis has nowhere to reload from and
+    # the disk one is the just-requested keep -> both stay resident
+    assert sorted(router.loaded_ids()) == ["disk", "pinned"]
+
+
+def test_router_unknown_and_duplicate_ids(artifacts):
+    router = BasisRouter(memory_budget_bytes=1 << 30)
+    router.register("a", artifacts["f32_greedy"])
+    with pytest.raises(ValueError, match="already registered"):
+        router.register("a", artifacts["c64_rand"])
+    with pytest.raises(KeyError, match="unknown basis_id"):
+        router.get("nope")
+    with pytest.raises(TypeError):
+        router.register("b", 123)
+
+
+def test_router_default_budget_honors_env(monkeypatch):
+    monkeypatch.setenv("REPRO_DEVICE_MEM_BUDGET", str(12345))
+    assert BasisRouter().memory_budget_bytes == 12345
+
+
+# ------------------------------------------------------------ engine ----
+
+def test_engine_serves_bitwise_and_routes(artifacts):
+    with ROQEngine(artifacts, max_batch=4, max_wait_ms=1.0) as eng:
+        futs = []
+        for bid in artifacts:
+            basis, _ = eng.router.get(bid)
+            F = _requests(basis, 9, seed=3)
+            futs += [(bid, F[:, j], eng.submit(bid, F[:, j]))
+                     for j in range(9)]
+        for bid, f, fut in futs:
+            out = fut.result(timeout=WAIT_S)
+            _, eim = eng.router.get(bid)
+            assert np.array_equal(out, direct_interpolate(eim, f))
+    snap = eng.stats()
+    assert snap["counters"]["completed"] == 18
+    assert snap["counters"]["errors"] == 0
+    assert snap["latency_ms"]["n"] == 18
+    assert snap["latency_ms"]["p50"] <= snap["latency_ms"]["p99"]
+
+
+def test_engine_warm_prewarms_all_buckets(artifacts):
+    with ROQEngine({"a": artifacts["f32_greedy"]}, max_batch=8,
+                   max_wait_ms=0.5) as eng:
+        eng.warm("a")
+        assert {k[1] for k in eng.cache.warm_keys("a")} == {2, 4, 8}
+        basis, _ = eng.router.get("a")
+        F = _requests(basis, 20)
+        futs = [eng.submit("a", F[:, j]) for j in range(20)]
+        for fut in futs:
+            fut.result(timeout=WAIT_S)
+    snap = eng.stats()
+    assert snap["counters"]["cache_misses"] == 0
+    assert snap["counters"]["cache_hits"] >= 3
+    assert snap["cache_hit_rate"] == 1.0
+
+
+def test_malformed_request_fails_alone_batchmates_serve(artifacts):
+    eng = ROQEngine({"a": artifacts["f32_greedy"]}, max_batch=8,
+                    max_wait_ms=0.5, start=False)
+    basis, eim = eng.router.get("a")
+    F = _requests(basis, 3)
+    good = [eng.submit("a", F[:, j]) for j in range(3)]
+    bad_len = eng.submit("a", np.zeros(basis.k + 1, np.float32))
+    bad_dtype = eng.submit("a", np.zeros(basis.k, np.complex64))
+    bad_id = eng.submit("missing", F[:, 0])
+    eng.start()
+    eng.close(drain=True)
+    for j, fut in enumerate(good):
+        assert np.array_equal(fut.result(timeout=WAIT_S),
+                              direct_interpolate(eim, F[:, j]))
+    with pytest.raises(ValueError, match="one value per EIM node"):
+        bad_len.result(timeout=WAIT_S)
+    with pytest.raises(ValueError, match="does not cast"):
+        bad_dtype.result(timeout=WAIT_S)
+    with pytest.raises(KeyError, match="unknown basis_id"):
+        bad_id.result(timeout=WAIT_S)
+    snap = eng.stats()
+    assert snap["counters"]["completed"] == 3
+    assert snap["counters"]["errors"] == 3
+
+
+def test_submit_rejects_2d_batch_synchronously(artifacts):
+    with ROQEngine({"a": artifacts["f32_greedy"]}) as eng:
+        with pytest.raises(ValueError, match="ONE vector"):
+            eng.submit("a", np.zeros((4, 4), np.float32))
+
+
+def test_timeout_expires_alone_batchmates_serve(artifacts):
+    eng = ROQEngine({"a": artifacts["f32_greedy"]}, max_batch=8,
+                    max_wait_ms=0.5, start=False)
+    basis, eim = eng.router.get("a")
+    F = _requests(basis, 2)
+    doomed = eng.submit("a", F[:, 0], timeout_s=0.0)
+    ok = eng.submit("a", F[:, 1])
+    time.sleep(0.01)  # let the deadline pass before the worker ever runs
+    eng.start()
+    eng.close(drain=True)
+    with pytest.raises(TimeoutError):
+        doomed.result(timeout=WAIT_S)
+    assert np.array_equal(ok.result(timeout=WAIT_S),
+                          direct_interpolate(eim, F[:, 1]))
+    snap = eng.stats()
+    assert snap["counters"]["timeouts"] == 1
+    assert snap["counters"]["completed"] == 1
+
+
+def test_queue_full_backpressure_explicit_reject(artifacts):
+    eng = ROQEngine({"a": artifacts["f32_greedy"]}, queue_depth=2,
+                    start=False)
+    basis, _ = eng.router.get("a")
+    F = _requests(basis, 3)
+    f0 = eng.submit("a", F[:, 0])
+    f1 = eng.submit("a", F[:, 1])
+    with pytest.raises(QueueFullError, match="backpressure"):
+        eng.submit("a", F[:, 2])
+    assert eng.stats()["counters"]["rejected"] == 1
+    eng.start()
+    eng.close(drain=True)
+    f0.result(timeout=WAIT_S)
+    f1.result(timeout=WAIT_S)
+    assert eng.stats()["counters"]["completed"] == 2
+
+
+def test_injected_batch_fault_isolated_engine_survives(
+        artifacts, monkeypatch):
+    monkeypatch.setenv("REPRO_FAULT_SERVE_RAISE_AT_BATCH", "1")
+    monkeypatch.delenv("REPRO_FAULT_ONCE", raising=False)
+    eng = ROQEngine({"a": artifacts["f32_greedy"]}, max_batch=8,
+                    max_wait_ms=0.5, start=False)
+    basis, eim = eng.router.get("a")
+    F = _requests(basis, 2)
+    doomed = [eng.submit("a", F[:, j]) for j in range(2)]
+    eng.start()
+    for fut in doomed:  # batch 1: the injected fault fails ALL its requests
+        with pytest.raises(RuntimeError, match="injected serving fault"):
+            fut.result(timeout=WAIT_S)
+    # ... but only that batch: the engine keeps serving (batch 2)
+    ok = eng.submit("a", F[:, 0])
+    assert np.array_equal(ok.result(timeout=WAIT_S),
+                          direct_interpolate(eim, F[:, 0]))
+    eng.close(drain=True)
+    snap = eng.stats()
+    assert snap["counters"]["errors"] == 2
+    assert snap["counters"]["completed"] == 1
+
+
+def test_close_drains_then_rejects_new_requests(artifacts):
+    eng = ROQEngine({"a": artifacts["f32_greedy"]}, max_batch=64,
+                    max_wait_ms=1e4, start=False)  # no flush until drain
+    basis, eim = eng.router.get("a")
+    F = _requests(basis, 5)
+    futs = [eng.submit("a", F[:, j]) for j in range(5)]
+    eng.start()
+    eng.close(drain=True)  # max_wait of 10s never elapsed: drain flushes
+    for j, fut in enumerate(futs):
+        assert np.array_equal(fut.result(timeout=WAIT_S),
+                              direct_interpolate(eim, F[:, j]))
+    with pytest.raises(EngineClosedError):
+        eng.submit("a", F[:, 0])
+
+
+def test_close_abort_fails_pending(artifacts):
+    eng = ROQEngine({"a": artifacts["f32_greedy"]}, max_batch=64,
+                    max_wait_ms=1e4, start=False)
+    basis, _ = eng.router.get("a")
+    fut = eng.submit("a", _requests(basis, 1)[:, 0])
+    eng.start()
+    eng.close(drain=False)
+    with pytest.raises(EngineClosedError):
+        fut.result(timeout=WAIT_S)
+
+
+def test_router_eviction_drops_warm_cache_entries(artifacts):
+    # 1-byte budget: routing to basis b evicts a AND its cache entries
+    router = BasisRouter(memory_budget_bytes=1)
+    for bid, d in artifacts.items():
+        router.register(bid, d)
+    with ROQEngine(router, max_batch=4, max_wait_ms=0.5) as eng:
+        basis_a, _ = eng.router.get("f32_greedy")
+        eng.submit("f32_greedy",
+                   _requests(basis_a, 1)[:, 0]).result(timeout=WAIT_S)
+        assert eng.cache.warm_keys("f32_greedy")
+        basis_b, _ = eng.router.get("c64_rand")   # evicts f32_greedy
+        assert eng.cache.warm_keys("f32_greedy") == []
+        # re-route: reloads and re-warms transparently, still bitwise
+        f = _requests(basis_a, 1, seed=9)[:, 0]
+        out = eng.submit("f32_greedy", f).result(timeout=WAIT_S)
+        _, eim = eng.router.get("f32_greedy")
+        assert np.array_equal(out, direct_interpolate(eim, f))
+    assert eng.stats()["counters"]["basis_evictions"] >= 2
+
+
+def test_concurrent_submitters_all_bitwise(artifacts):
+    """Many threads hammering both bases: every response still exact."""
+    with ROQEngine(artifacts, max_batch=8, max_wait_ms=1.0,
+                   queue_depth=4096) as eng:
+        results = []
+        lock = threading.Lock()
+
+        def client(bid, seed):
+            basis, eim = eng.router.get(bid)
+            F = _requests(basis, 16, seed=seed)
+            futs = [(F[:, j], eng.submit(bid, F[:, j])) for j in range(16)]
+            good = all(
+                np.array_equal(fut.result(timeout=WAIT_S),
+                               direct_interpolate(eim, f))
+                for f, fut in futs)
+            with lock:
+                results.append(good)
+
+        threads = [threading.Thread(target=client, args=(bid, s))
+                   for s, bid in enumerate(list(artifacts) * 3)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    assert results and all(results)
+    assert eng.stats()["counters"]["completed"] == 16 * len(threads)
+
+
+# ----------------------------------------------- EIM artifact leaves ----
+
+def test_eim_persisted_on_save_preseeded_on_load(artifacts):
+    loaded = ReducedBasis.load(artifacts["f32_greedy"])
+    # the leaves pre-seed the cache: no recompute on first eim() call
+    assert "_eim" in vars(loaded)
+    from repro.core.eim import eim_nodes
+
+    fresh = eim_nodes(loaded.Q)
+    assert np.array_equal(np.asarray(loaded.eim().nodes),
+                          np.asarray(fresh.nodes))
+    assert np.array_equal(np.asarray(loaded.eim().B), np.asarray(fresh.B))
+
+
+def test_legacy_artifact_without_eim_leaves_recomputes(tmp_path):
+    """Artifacts saved before the EIM leaves existed still load and
+    serve; eim() falls back to recomputing."""
+    import json
+
+    from repro.checkpoint.io import save_checkpoint
+
+    basis = build_basis(source=make_smooth_matrix(48, 30, np.float32),
+                        strategy="greedy", tau=1e-5, max_k=5)
+    tree = {
+        "artifact_version": np.asarray(1, np.int64),
+        "Q": np.asarray(basis.Q),
+        "pivots": np.asarray(basis.pivots),
+        "errs": np.asarray(basis.errs),
+        "k": np.asarray(basis.k, np.int64),
+        "provenance_json": np.asarray(json.dumps(basis.provenance,
+                                                 default=str)),
+    }
+    save_checkpoint(tree, str(tmp_path), 0, meta={"final": True})
+    loaded = ReducedBasis.load(str(tmp_path))
+    assert "_eim" not in vars(loaded)
+    ei = loaded.eim()  # recompute fallback
+    assert np.array_equal(np.asarray(ei.nodes),
+                          np.asarray(basis.eim().nodes))
+
+
+def test_eim_leaves_gated_on_version(tmp_path, monkeypatch):
+    """A future eim_version is ignored (recompute), not misread."""
+    import repro.api.artifact as artifact_mod
+
+    basis = build_basis(source=make_smooth_matrix(48, 30, np.float32),
+                        strategy="greedy", tau=1e-5, max_k=5)
+    monkeypatch.setattr(artifact_mod, "_EIM_VERSION", 999)
+    basis.save(str(tmp_path))
+    monkeypatch.undo()
+    loaded = ReducedBasis.load(str(tmp_path))
+    assert "_eim" not in vars(loaded)
+    assert loaded.eim().B.shape == (basis.N, basis.k)
+
+
+# ------------------------------------------------------ launcher e2e ----
+
+def test_serve_launcher_end_to_end(artifacts):
+    from repro.launch.serve import main
+
+    stats = main(["--basis", artifacts["f32_greedy"],
+                  "--basis", artifacts["c64_rand"],
+                  "--max-batch", "8", "--max-wait-ms", "1",
+                  "--requests", "64"])
+    assert stats["served"] == 64
+    assert stats["counters"]["completed"] == 64
+    assert stats["max_err"] < 1e-4
+    assert stats["latency_ms"]["n"] == 64
+    for q in ("p50", "p95", "p99"):
+        assert stats["latency_ms"][q] > 0.0

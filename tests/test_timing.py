@@ -1,0 +1,64 @@
+"""Unit tests for repro.timing: the shared quantile helper (serving
+metrics snapshots + the load harness both use it) and steady_min."""
+
+import numpy as np
+import pytest
+
+from repro.timing import percentiles, steady_min
+
+
+def test_percentiles_matches_numpy_linear():
+    rng = np.random.default_rng(7)
+    xs = rng.standard_normal(257).tolist()
+    qs = (0.0, 10.0, 50.0, 95.0, 99.0, 100.0)
+    got = percentiles(xs, qs)
+    want = np.percentile(xs, qs)  # numpy default = linear interpolation
+    for q, w in zip(qs, want):
+        assert got[q] == pytest.approx(float(w), rel=1e-12), q
+
+
+def test_percentiles_min_median_max_exact():
+    xs = [5.0, 1.0, 3.0, 2.0, 4.0]
+    got = percentiles(xs, (0, 50, 100))
+    assert got[0] == 1.0
+    assert got[50] == 3.0
+    assert got[100] == 5.0
+
+
+def test_percentiles_single_sample_is_flat():
+    got = percentiles([2.5], (0, 50, 99, 100))
+    assert set(got.values()) == {2.5}
+
+
+def test_percentiles_interpolates_between_order_stats():
+    # two samples: p50 is the midpoint under linear interpolation
+    assert percentiles([0.0, 1.0], (50,))[50] == pytest.approx(0.5)
+    assert percentiles([0.0, 1.0], (75,))[75] == pytest.approx(0.75)
+
+
+def test_percentiles_accepts_any_iterable_of_numbers():
+    got = percentiles((x for x in [3, 1, 2]), (100,))
+    assert got[100] == 3.0
+
+
+def test_percentiles_default_qs():
+    got = percentiles([1.0, 2.0, 3.0])
+    assert sorted(got) == [50.0, 95.0, 99.0]
+
+
+def test_percentiles_empty_raises():
+    with pytest.raises(ValueError, match="empty"):
+        percentiles([])
+
+
+@pytest.mark.parametrize("q", [-0.1, 100.1, 1000])
+def test_percentiles_out_of_range_q_raises(q):
+    with pytest.raises(ValueError, match="outside"):
+        percentiles([1.0], (q,))
+
+
+def test_steady_min_calls_and_scale():
+    calls = []
+    dt = steady_min(lambda: calls.append(1), per=2, repeats=4, warmup=3)
+    assert len(calls) == 3 + 4
+    assert dt >= 0.0
