@@ -16,6 +16,8 @@ machine-readably across PRs.
   roofline — the full arch x shape x mesh baseline table (from artifacts)
   sketch_vs_greedy — randomized one-pass range-finder vs streamed greedy
              pass-count / wall-time at a fixed rank target
+  batched_vs_sequential — B=8 lockstep fused tau-sweep vs 8 sequential
+             scalar builds (+ the stacked-layout bitwise-parity row)
 
 The chunked hot-path row shards snapshot columns over one host device per
 core (XLA's CPU GEMV is single-threaded; the column-sharded sweep is how
@@ -42,6 +44,7 @@ BENCH_JSON = os.environ.get("REPRO_BENCH_JSON", "BENCH_greedy.json")
 def main() -> None:
     print("name,us_per_call,derived")
     from benchmarks import (
+        batched_builds,
         common,
         flops_model,
         kernel_fusion,
@@ -58,7 +61,7 @@ def main() -> None:
     ok = True
     for mod in (pivot_timing, ortho_timing, flops_model, kernel_fusion,
                 strong_scaling, weak_scaling, roofline_table,
-                sketch_vs_greedy):
+                sketch_vs_greedy, batched_builds):
         try:
             mod.run(csv=True)
         except Exception as e:  # keep the harness going; report at the end

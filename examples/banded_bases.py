@@ -1,0 +1,84 @@
+"""Banded reduction: B per-band bases in ONE fused pass, then served.
+
+The pyNekTools-style banded workload: FFT the sample axis of a chirp
+family, slice the spectrum into B contiguous bands, and reduce each band
+with its own basis.  A narrow band's family is far smoother than the
+broadband signal, so per-band bases are tiny at equal tau — and the B
+band matrices share one (N_b, M) shape, which is exactly the stacked
+workload ``strategy="batched"`` builds in one lockstep sweep instead of
+B sequential greedy runs.  The resulting ``ReducedBasisSet`` registers
+its children with the serving ``BasisRouter`` (one route per band), and
+the ``ROQEngine`` interpolates held-out signals band by band.
+
+    python examples/banded_bases.py
+"""
+
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.api import ReducedBasisSet, build_basis  # noqa: E402
+from repro.data import band_split  # noqa: E402
+from repro.serving import BasisRouter, ROQEngine  # noqa: E402
+
+
+def chirp_family(n=1024, m=160, seed=0):
+    """Real time-domain chirps h(t) = sin(2*pi*(f0*t + c*t^2/2)) over a
+    (f0, c) grid — a stand-in for a time-domain detector-frame family."""
+    rng = np.random.default_rng(seed)
+    t = np.linspace(0.0, 1.0, n, endpoint=False)
+    f0 = rng.uniform(12.0, 48.0, size=m)
+    c = rng.uniform(30.0, 120.0, size=m)
+    S = np.sin(2 * np.pi * (f0[None, :] * t[:, None]
+                            + 0.5 * c[None, :] * t[:, None] ** 2))
+    return np.asarray(S, dtype=np.float32)
+
+
+def main():
+    S = chirp_family()
+    split = band_split(S, bands=8)          # rFFT -> (8, N_b, M) complex
+    B, Nb, M = split.stack.shape
+    print(f"chirp family {S.shape} -> {B} bands x ({Nb} bins, {M} cols); "
+          f"rFFT bins {split.n_freq}, edges {split.edges[0]}.."
+          f"{split.edges[-1]}")
+
+    with tempfile.TemporaryDirectory() as tmp:
+        workdir = os.path.join(tmp, "bands")
+        bset = build_basis(source=split, strategy="batched", tau=1e-5,
+                           max_k=64, workdir=workdir)
+        ks = [b.k for b in bset]
+        print(f"batched build: {B} bases in one fused pass, "
+              f"k per band = {ks} "
+              f"({bset.provenance['wall_time_s']:.2f}s)")
+
+        # the set is one atomic artifact directory: B children + set.json
+        bset = ReducedBasisSet.load(workdir)
+
+        # one serving route per band (directory-backed => evictable)
+        router = BasisRouter()
+        ids = bset.register(router, prefix="band")
+        engine = ROQEngine(router, max_batch=16, max_wait_ms=1.0)
+        try:
+            held_out = np.fft.rfft(chirp_family(m=3, seed=7), axis=0)
+            worst = 0.0
+            for b, bid in enumerate(ids):
+                lo, hi = split.edges[b]
+                col = held_out[lo:hi, 0]
+                basis, eim = engine.router.get(bid)
+                fut = engine.submit(bid, col[np.asarray(eim.nodes)])
+                rec = fut.result(timeout=30)
+                err = float(np.max(np.abs(rec - col)))
+                worst = max(worst, err / (np.max(np.abs(col)) + 1e-30))
+            print(f"served {B} per-band interpolations; worst relative "
+                  f"EIM error {worst:.3e}")
+            print(f"engine metrics: {engine.metrics.snapshot()}")
+        finally:
+            engine.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -19,6 +19,10 @@ them interchangeable in code::
   pivots / errs + provenance, with ``project`` / ``reconstruct`` /
   ``per_column_errors`` / ``eim`` / ``roq_weights`` and
   ``save``/``load``.
+- :func:`build_basis_set` / :class:`ReducedBasisSet` — the many-basis
+  door: B lockstep greedy builds in one fused pass
+  (``strategy="batched"``: banded, stacked, list, or shared tau-sweep
+  workloads), shipped as one artifact of B loadable children.
 
 The legacy drivers in :mod:`repro.core` remain the strategy engines (and
 keep working), but new code should come through this door — it is the
@@ -27,13 +31,16 @@ another bespoke entry point.
 """
 
 from repro.api.artifact import ReducedBasis
-from repro.api.build import build_basis, device_memory_budget
+from repro.api.basis_set import ReducedBasisSet
+from repro.api.build import build_basis, build_basis_set, device_memory_budget
 from repro.api.spec import STRATEGIES, ReductionSpec
 
 __all__ = [
     "ReductionSpec",
     "ReducedBasis",
+    "ReducedBasisSet",
     "build_basis",
+    "build_basis_set",
     "device_memory_budget",
     "STRATEGIES",
 ]

@@ -1,0 +1,148 @@
+"""`ReducedBasisSet`: one artifact holding B per-basis children.
+
+The batched strategy builds B bases in one lockstep pass
+(:mod:`repro.core.batch_greedy`) — per parameter region, per frequency
+band (:func:`repro.data.bands.band_split`), or per tau in a sweep.  They
+ship as ONE artifact directory::
+
+    <dir>/basis_0/ ... basis_<B-1>/   one ReducedBasis artifact each
+    <dir>/set.json                    the set manifest (commit marker)
+
+Each child is a complete, independently loadable
+:class:`~repro.api.artifact.ReducedBasis` (same step/manifest/CRC layout,
+same ``eim()`` / ``roq_weights()``), so the serving
+:class:`~repro.serving.router.BasisRouter` can register the child
+directories directly — :meth:`ReducedBasisSet.register` does exactly
+that.  ``set.json`` is written atomically AFTER every child, so a reader
+that finds it is guaranteed B intact children (the same
+commit-marker-last discipline as the artifact steps themselves).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Iterator, Optional
+
+from repro.api.artifact import ReducedBasis
+
+SET_VERSION = 1
+
+_SET_MANIFEST = "set.json"
+
+
+def _child_name(i: int) -> str:
+    return f"basis_{i}"
+
+
+@dataclasses.dataclass(frozen=True)
+class ReducedBasisSet:
+    """B reduced bases built (and shipped) together.
+
+    Attributes:
+      children: one :class:`~repro.api.artifact.ReducedBasis` per lane,
+        in build order (band order for banded workloads, source order for
+        stacked/list workloads, tau order for shared-S sweeps).
+      provenance: the batched build's provenance dict (shared across
+        children; each child additionally carries its own copy with its
+        lane index / stop code under ``"lane"``).
+    """
+
+    children: tuple
+    provenance: Optional[dict] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "children", tuple(self.children))
+        if not self.children:
+            raise ValueError("ReducedBasisSet needs at least one basis")
+
+    @property
+    def batch(self) -> int:
+        return len(self.children)
+
+    def __len__(self) -> int:
+        return len(self.children)
+
+    def __getitem__(self, i: int) -> ReducedBasis:
+        return self.children[i]
+
+    def __iter__(self) -> Iterator[ReducedBasis]:
+        return iter(self.children)
+
+    # ------------------------------------------------------- persistence --
+
+    def save(self, directory: str) -> str:
+        """Persist every child under ``directory`` plus the set manifest.
+
+        Children save first (each is its own atomic artifact step), the
+        manifest last via write-to-temp + rename — the commit marker.  A
+        crash mid-save leaves child directories but no ``set.json``, so
+        :meth:`load` never observes a partial set; re-running the save
+        completes it (child saves append fresh steps, never corrupt).
+        """
+        os.makedirs(directory, exist_ok=True)
+        for i, child in enumerate(self.children):
+            child.save(os.path.join(directory, _child_name(i)))
+        manifest = {
+            "set_version": SET_VERSION,
+            "batch": self.batch,
+            "children": [_child_name(i) for i in range(self.batch)],
+            "provenance": self.provenance,
+        }
+        final = os.path.join(directory, _SET_MANIFEST)
+        tmp = final + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(manifest, f, indent=2, sort_keys=True)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, final)
+        return directory
+
+    @classmethod
+    def load(cls, directory: str) -> "ReducedBasisSet":
+        """Load a set saved by :meth:`save` (children bit-identical).
+
+        Requires the ``set.json`` commit marker; each child loads through
+        :meth:`ReducedBasis.load` (newest intact step, CRC-checked) and
+        keeps its backing ``directory`` so the router can re-load it
+        lazily after eviction.
+        """
+        path = os.path.join(directory, _SET_MANIFEST)
+        try:
+            with open(path) as f:
+                manifest = json.load(f)
+        except FileNotFoundError:
+            raise FileNotFoundError(
+                f"no basis-set manifest at {path} (incomplete save, or "
+                f"not a ReducedBasisSet directory)")
+        if manifest.get("set_version") != SET_VERSION:
+            raise IOError(
+                f"unsupported set_version {manifest.get('set_version')!r} "
+                f"in {path}")
+        children = tuple(
+            ReducedBasis.load(os.path.join(directory, name))
+            for name in manifest["children"])
+        return cls(children=children, provenance=manifest.get("provenance"))
+
+    # ------------------------------------------------------ serving handoff --
+
+    def register(self, router, prefix: str = "basis",
+                 names=None) -> list:
+        """Register every child with a serving router; returns the ids.
+
+        ``names`` overrides the default ``"{prefix}_{i}"`` ids (must have
+        one entry per child).  Children backed by a directory (i.e. the
+        set was saved or loaded) register by directory — evictable under
+        the router's device-memory budget; unsaved in-memory children are
+        pinned, exactly the :meth:`repro.serving.router.BasisRouter.
+        register` contract.
+        """
+        if names is None:
+            names = [f"{prefix}_{i}" for i in range(self.batch)]
+        if len(names) != self.batch:
+            raise ValueError(
+                f"{len(names)} names for {self.batch} children")
+        for name, child in zip(names, self.children):
+            router.register(name, child)
+        return list(names)

@@ -111,10 +111,12 @@ def machine_roofline(spec: Optional[ReductionSpec] = None):
     model plans against.  Precedence per knob: spec field >
     ``REPRO_DRAM_BW_GBPS`` / ``REPRO_PEAK_GFLOPS`` / ``REPRO_LLC_BYTES``
     env var > one-time on-device measurement
-    (:func:`repro.api.roofline.measured_roofline`; bandwidth and FLOPs
-    only, skipped under ``REPRO_ROOFLINE_MEASURE=0``) > per-platform
-    default."""
+    (:func:`repro.api.roofline.measured_roofline` for bandwidth/FLOPs,
+    :func:`repro.api.roofline.measured_cache_bytes` for the LLC
+    working-set sweep; all skipped under ``REPRO_ROOFLINE_MEASURE=0``) >
+    per-platform default."""
     from repro.api.roofline import (
+        measured_cache_bytes,
         measured_roofline,
         roofline_measurement_enabled,
     )
@@ -144,7 +146,14 @@ def machine_roofline(spec: Optional[ReductionSpec] = None):
         cache = int(cache_field)
     else:
         raw = os.environ.get(_ENV_CACHE)
-        cache = int(float(raw)) if raw else defaults[2]
+        if raw:
+            cache = int(float(raw))
+        else:
+            cache = defaults[2]
+            if roofline_measurement_enabled():
+                m_cache = measured_cache_bytes()
+                if m_cache > 0:
+                    cache = m_cache
 
     return (
         defaults[0] if bw is None else bw,
@@ -177,9 +186,48 @@ def _sweep_roofline(shape, dtype, spec: Optional[ReductionSpec] = None):
     return roof_bound, why
 
 
+def _estimated_max_k(spec: ReductionSpec, shape):
+    """Sketch-estimate a ``max_k`` for planning when the caller gave none.
+
+    Costs a few cheap streamed passes over the source
+    (:func:`repro.core.randomized.estimate_rank`), so it runs only where
+    the answer changes the plan (roof-bound sweeps, where the
+    greedy-vs-sketch pass-count comparison needs a rank) and only when
+    on-device probing is enabled (``REPRO_ROOFLINE_MEASURE=0`` — the CI
+    determinism knob — also opts out of this).  Returns None when the
+    source can't be probed (decision-level callers pass placeholder
+    sources) or the estimate saturated (a lower bound must not become a
+    cap).  The returned cap carries 25% + sketch_p headroom: the build's
+    own tau stop remains the authority, the cap just bounds planning and
+    the Q allocation.
+    """
+    from repro.core.randomized import estimate_rank
+
+    try:
+        est = estimate_rank(spec.source, tau=float(spec.tau),
+                            seed=spec.sketch_seed, kind=spec.sketch_kind,
+                            tile_m=spec.tile_m, backend=spec.backend)
+    except Exception as e:
+        logger.info("rank estimation skipped (%s)", e)
+        return None
+    if est.saturated:
+        logger.info("rank estimate saturated at ell=%d; not capping",
+                    est.ell)
+        return None
+    cap = -(-est.k * 5 // 4) + spec.sketch_p
+    cap = min(cap, int(shape[0]), int(shape[1]))
+    logger.info("sketch-estimated rank ~%d (ell=%d, %d pass(es)) -> "
+                "planning max_k=%d", est.k, est.ell, est.passes, cap)
+    return cap
+
+
 def _auto_strategy(spec: ReductionSpec, shape, dtype):
-    """Resolve ``"auto"`` to ``(strategy, block_p)`` and log the decision."""
+    """Resolve ``"auto"`` to ``(strategy, block_p, max_k)`` and log the
+    decision.  ``max_k`` is ``spec.max_k`` unless the caller gave none
+    and a sketch-based rank estimate filled one in
+    (:func:`_estimated_max_k`)."""
     block_p = spec.block_p
+    max_k = spec.max_k
     if spec.mesh is not None:
         choice, why = "distributed", "a mesh was passed"
     else:
@@ -204,13 +252,20 @@ def _auto_strategy(spec: ReductionSpec, shape, dtype):
         # On a roof-bound sweep every basis costs ~1/block_p of a DRAM
         # read of S, so a greedy build streams S ~ceil(max_k / block_p)
         # times; the one-pass sketch pays 1 + 2*sketch_power passes
-        # regardless of k.  When a rank target exists (max_k — without
-        # one the sketch width is unbounded and greedy's tau stop is the
-        # only control) and greedy's pass count exceeds TWICE the
-        # sketch's, the range-finder wins even after paying its
-        # probabilistic-vs-exact error margin.
-        if roof_bound and spec.max_k is not None:
-            greedy_passes = -(-spec.max_k // max(block_p, 1))
+        # regardless of k.  When a rank target exists (given, or — the
+        # PR-9 follow-on — sketch-estimated when probing is enabled) and
+        # greedy's pass count exceeds TWICE the sketch's, the
+        # range-finder wins even after paying its probabilistic-vs-exact
+        # error margin.
+        if roof_bound and max_k is None:
+            from repro.api.roofline import roofline_measurement_enabled
+
+            if roofline_measurement_enabled():
+                max_k = _estimated_max_k(spec, shape)
+                if max_k is not None:
+                    why += f"; sketch-estimated max_k={max_k}"
+        if roof_bound and max_k is not None:
+            greedy_passes = -(-max_k // max(block_p, 1))
             sketch_passes = 1 + 2 * spec.sketch_power
             if greedy_passes > 2 * sketch_passes:
                 choice = "randomized"
@@ -221,7 +276,7 @@ def _auto_strategy(spec: ReductionSpec, shape, dtype):
         "auto strategy -> %r for shape %s %s (%s)",
         choice, tuple(shape), jnp.dtype(dtype).name, why,
     )
-    return choice, block_p
+    return choice, block_p, max_k
 
 
 # ------------------------------------------------------- strategy bodies ----
@@ -419,10 +474,30 @@ _BUILDERS = {
     "mgs": _build_mgs,
     "pod": _build_pod,
 }
+# "batched" is absent deliberately: it returns a ReducedBasisSet, not a
+# single basis, so build_basis delegates to build_basis_set before the
+# single-basis pipeline starts (see _is_batched_workload).
 
 # Strategies that stream the provider directly and never materialize the
 # source on device (build_basis skips materialize_source for these).
 _STREAMING_STRATEGIES = ("streamed", "randomized", "sketch+greedy")
+
+
+def _is_batched_workload(spec: ReductionSpec) -> bool:
+    """Does this spec describe a many-basis (B-lane) build?
+
+    True when ``spec.batch`` is set, or the source is inherently
+    B-laned: a (B, N, M) stacked array, a list/tuple of per-lane
+    sources, or a :class:`~repro.data.bands.BandSplit`.
+    """
+    if spec.batch is not None:
+        return True
+    from repro.data.bands import BandSplit
+
+    src = spec.source
+    if isinstance(src, BandSplit) or isinstance(src, (list, tuple)):
+        return True
+    return getattr(src, "ndim", None) == 3
 
 
 def build_basis(spec: ReductionSpec | None = None,
@@ -438,7 +513,11 @@ def build_basis(spec: ReductionSpec | None = None,
 
     Returns a :class:`ReducedBasis` whose arrays are bit-identical to the
     corresponding legacy driver's output, trimmed to the accepted rank,
-    with build provenance attached.
+    with build provenance attached.  A many-basis workload —
+    ``strategy="batched"``, or ``"auto"`` with ``spec.batch`` / a stacked
+    (B, N, M) / list / :class:`~repro.data.bands.BandSplit` source —
+    delegates to :func:`build_basis_set` and returns its
+    :class:`~repro.api.basis_set.ReducedBasisSet` of B children instead.
     """
     if spec is None:
         spec = ReductionSpec(**kwargs)
@@ -449,6 +528,16 @@ def build_basis(spec: ReductionSpec | None = None,
             f"build_basis takes a ReductionSpec (or keyword args), got "
             f"{type(spec).__name__}"
         )
+
+    # Many-basis workloads return a set; decide BEFORE touching providers
+    # (a stacked 3-D source is not a valid single-basis provider).
+    if spec.strategy == "batched":
+        return build_basis_set(spec)
+    if spec.strategy == "auto" and _is_batched_workload(spec):
+        logger.info(
+            "auto strategy -> 'batched' (batch=%s, %s source)",
+            spec.batch, type(spec.source).__name__)
+        return build_basis_set(spec)
 
     from repro.core.backend import resolve_backend
     from repro.data.providers import as_provider, materialize_source
@@ -494,11 +583,16 @@ def build_basis(spec: ReductionSpec | None = None,
         if strategy == "auto":
             prov = as_provider(spec.source)
             shape, dtype = prov.shape, prov.dtype
-            strategy, auto_p = _auto_strategy(spec, shape, dtype)
+            strategy, auto_p, auto_k = _auto_strategy(spec, shape, dtype)
             if auto_p != spec.block_p:
                 # the roofline model opted into blocking: the chosen panel
                 # width must reach the driver (and the provenance)
                 spec = dataclasses.replace(spec, block_p=auto_p)
+            if auto_k != spec.max_k:
+                # a sketch-estimated rank cap (with headroom) must reach
+                # the chosen driver — the randomized builder sizes its
+                # sketch from it, the greedy family bounds Q with it
+                spec = dataclasses.replace(spec, max_k=auto_k)
         if strategy in _STREAMING_STRATEGIES:
             S = None
         else:
@@ -538,6 +632,112 @@ def build_basis(spec: ReductionSpec | None = None,
         basis.save(spec.workdir)
         shutil.rmtree(build_dir, ignore_errors=True)
     return basis
+
+
+def build_basis_set(spec: ReductionSpec | None = None, **kwargs):
+    """Build B reduced bases in one lockstep batched pass.
+
+    The many-basis front door: accepts a stacked (B, N, M) array, a
+    list/tuple of per-lane sources, a
+    :class:`~repro.data.bands.BandSplit` (banded workload), or a shared
+    (N, M) source with ``batch=B`` / a length-B ``tau`` sequence
+    (tau-sweep over one matrix).  Runs
+    :func:`repro.core.batch_greedy.batch_rb_greedy` — one fused pass over
+    the snapshots for all B lanes — and returns a
+    :class:`~repro.api.basis_set.ReducedBasisSet` whose children are
+    bit-identical (stacked layouts) to B sequential
+    :func:`~repro.core.greedy.rb_greedy` builds.
+
+    With ``workdir=`` the finished set finalizes there atomically
+    (``resume=True`` returns an already-finalized set without
+    rebuilding).  ``build_basis`` delegates here for
+    ``strategy="batched"`` (and for ``"auto"`` on batched workloads), so
+    calling this directly is optional.
+    """
+    if spec is None:
+        spec = ReductionSpec(**kwargs)
+    elif kwargs:
+        spec = dataclasses.replace(spec, **kwargs)
+    if spec.strategy not in ("batched", "auto"):
+        raise ValueError(
+            f"build_basis_set builds the batched strategy, got "
+            f"{spec.strategy!r}")
+
+    from repro.api.basis_set import ReducedBasisSet
+    from repro.core.backend import resolve_backend
+    from repro.core.batch_greedy import batch_rb_greedy
+    from repro.data.bands import BandSplit
+    from repro.data.providers import materialize_source
+
+    if spec.workdir is not None and spec.resume:
+        try:
+            bset = ReducedBasisSet.load(spec.workdir)
+        except (FileNotFoundError, IOError):
+            pass  # nothing finalized yet: build below
+        else:
+            logger.info("workdir %s already holds a finalized basis set; "
+                        "returning it", spec.workdir)
+            return bset
+
+    src = spec.source
+    bands_meta = None
+    if isinstance(src, BandSplit):
+        bands_meta = {
+            "edges": [[int(lo), int(hi)] for lo, hi in src.edges],
+            "n_freq": int(src.n_freq),
+            "from_real": bool(src.from_real),
+        }
+        src = src.stack
+    elif isinstance(src, (list, tuple)):
+        src = [materialize_source(s) for s in src]
+    else:
+        src = materialize_source(src)
+        if src.ndim not in (2, 3):
+            raise ValueError(
+                f"batched strategy needs an (N, M), (B, N, M), list, or "
+                f"BandSplit source, got shape {src.shape}")
+
+    t0 = time.perf_counter()
+    res = batch_rb_greedy(
+        src, spec.tau, max_k=spec.max_k, batch=spec.batch,
+        kappa=spec.kappa, max_passes=spec.max_passes,
+        refresh=spec.refresh, refresh_safety=spec.refresh_safety,
+        chunk=spec.chunk, backend=spec.backend, callback=spec.callback,
+    )
+    jax.block_until_ready(res.Q)
+    wall = time.perf_counter() - t0
+
+    B = res.batch
+    taus = np.broadcast_to(
+        np.atleast_1d(np.asarray(spec.tau, dtype=np.float64)), (B,))
+    layout = "stacked" if getattr(src, "ndim", 3) == 3 or \
+        isinstance(src, list) else "shared"
+    base = {
+        "strategy": "batched",
+        "requested_strategy": spec.strategy,
+        "backend": resolve_backend(spec.backend),
+        "batch": B,
+        "layout": layout,
+        "dtype": jnp.dtype(res.Q.dtype).name,
+        "shape": [int(res.Q.shape[1]), int(res.R.shape[2])],
+        "tau": [float(t) for t in taus],
+        "max_k": spec.max_k,
+        "wall_time_s": wall,
+        "spec": spec.describe(),
+        "repro_version": _repro_version(),
+        **({"bands": bands_meta} if bands_meta is not None else {}),
+    }
+    children = []
+    for b in range(B):
+        Q, pivots, errs, R, k, extras = _trim_greedy(res.lane(b))
+        prov = dict(base)
+        prov["lane"] = {"index": b, "tau": float(taus[b]), **extras}
+        children.append(ReducedBasis(Q=Q, pivots=pivots, errs=errs, k=k,
+                                     R=R, provenance=prov))
+    bset = ReducedBasisSet(children=tuple(children), provenance=base)
+    if spec.workdir is not None:
+        bset.save(spec.workdir)
+    return bset
 
 
 def _repro_version() -> str:

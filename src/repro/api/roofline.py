@@ -142,3 +142,102 @@ def measured_roofline() -> tuple[float, float]:
 # the public wrapper.
 measured_roofline.cache_clear = _measure_roofline_once.cache_clear
 measured_roofline.cache_info = _measure_roofline_once.cache_info
+
+
+# ------------------------------------------------- LLC self-calibration ----
+# The third roofline knob.  _sweep_roofline's "sweep_bytes > cache" test
+# decides whether Eq.-(6.3) traffic actually hits DRAM; until now the
+# cache size came only from a per-platform default or REPRO_LLC_BYTES.
+# The working-set sweep below finds it empirically: stream working sets
+# of doubling size and locate the bandwidth cliff where they stop
+# fitting in the last-level cache.
+
+_CACHE_SIZES_MB = (1, 2, 4, 8, 16, 32, 64, 128)
+# constant traffic per timed call (repeats scale inversely with size) so
+# small working sets aren't drowned by dispatch overhead
+_CACHE_TRAFFIC_MB = 64
+# a real LLC->DRAM transition drops streaming rate well over 1.5x; less
+# contrast than this is noise (e.g. a DRAM-bandwidth-bound accelerator
+# where the sweep cannot see the cache at all)
+_CACHE_MIN_CONTRAST = 1.5
+
+
+def _timed_stream_rate(n: int, reps: int) -> float:
+    """Effective streaming GB/s over an ``n``-float working set.
+
+    Each of the ``reps`` chained self-dots re-reads the operand (the
+    carry feeds back into the next dot's input, so XLA can neither hoist
+    the loop-invariant dot nor fold the chain), giving ``reps * 2 * 4n``
+    bytes of traffic per call with one launch.
+    """
+    x = jax.random.normal(jax.random.PRNGKey(0), (n,), jnp.float32)
+
+    def chain(x_):
+        def body(_, carry):
+            # carry is O(1e-38)-scaled so x + carry keeps x's magnitude
+            return jnp.vdot(x_ + carry, x_) * jnp.float32(1e-38)
+        return jax.lax.fori_loop(0, reps, body, jnp.float32(0.0))
+
+    fn = jax.jit(chain)
+    t = _steady_min(lambda: fn(x), repeats=3, warmup=1)
+    return (reps * 2.0 * n * 4) / t / 1e9
+
+
+@functools.lru_cache(maxsize=None)
+def _measure_cache_once() -> int:
+    """The raw LLC sweep.  Returns the ``0`` sentinel when no cliff is
+    visible — that is a STABLE property of the box (e.g. a compute-bound
+    timer that cannot resolve the cache), so unlike a transient
+    calibration exception it IS cached for the process lifetime; real
+    exceptions propagate uncached and retry on the next call."""
+    rates = []
+    for mb in _CACHE_SIZES_MB:
+        n = mb * (1 << 20) // 4
+        reps = max(1, _CACHE_TRAFFIC_MB // mb)
+        rates.append(_timed_stream_rate(n, reps))
+    # DRAM floor from the largest working sets; cache ceiling from the
+    # fastest point.  No real contrast -> the machine (or this timer)
+    # cannot resolve the cache; the caller falls back to defaults.
+    dram = min(rates[-2:])
+    peak = max(rates)
+    if not (dram > 0 and peak / dram >= _CACHE_MIN_CONTRAST):
+        logger.info(
+            "no LLC bandwidth cliff visible (peak %.1f vs DRAM %.1f GB/s "
+            "over %s MB working sets); using platform default cache size",
+            peak, dram, list(_CACHE_SIZES_MB))
+        return 0
+    # the cache edge: last size still streaming above the geometric
+    # mean of the cache-resident and DRAM rates
+    threshold = (peak * dram) ** 0.5
+    cache_mb = max(mb for mb, r in zip(_CACHE_SIZES_MB, rates)
+                   if r >= threshold)
+    logger.info(
+        "measured LLC ~%d MB (stream rates %s GB/s over %s MB working "
+        "sets; REPRO_LLC_BYTES overrides)",
+        cache_mb, [f"{r:.0f}" for r in rates], list(_CACHE_SIZES_MB),
+    )
+    return cache_mb * (1 << 20)
+
+
+def measured_cache_bytes() -> int:
+    """Measure the last-level-cache size by working-set sweep.
+
+    Returns the bytes of the largest working set that still streams at
+    cache-resident rate, or ``0`` when no cache cliff is detectable
+    (callers must treat non-positive as "not measured" and fall back).
+    Both outcomes are cached per process — an invisible cliff is a
+    property of the box, not a transient — while genuine measurement
+    exceptions retry on the next call.  Respect
+    :func:`roofline_measurement_enabled` before calling — this function
+    always measures (a few seconds on first call).
+    """
+    try:
+        return _measure_cache_once()
+    except Exception as e:  # never let calibration break a build
+        logger.warning("LLC measurement failed (%s); falling back to "
+                       "platform default cache size", e)
+        return 0
+
+
+measured_cache_bytes.cache_clear = _measure_cache_once.cache_clear
+measured_cache_bytes.cache_info = _measure_cache_once.cache_info

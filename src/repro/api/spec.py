@@ -21,15 +21,16 @@ import os
 from typing import Any, Callable, Optional
 
 # Reduction strategies build_basis dispatches on.  "auto" resolves to
-# "distributed" (a mesh was given), "greedy" / "block_greedy" (the problem
-# fits the device memory budget; blocked when the Eq.-(6.3) sweep is
-# DRAM-roof-bound), "streamed" (it does not fit; blocked under the same
-# roofline test), or "randomized" (a max_k is given and the roofline
-# model predicts the greedy pass count costs more than twice the
-# sketch's 1 + 2*sketch_power passes) — see repro.api.build.
+# "batched" (a many-basis workload: spec.batch set, or a stacked/list
+# source), "distributed" (a mesh was given), "greedy" / "block_greedy"
+# (the problem fits the device memory budget; blocked when the Eq.-(6.3)
+# sweep is DRAM-roof-bound), "streamed" (it does not fit; blocked under
+# the same roofline test), or "randomized" (a max_k is given and the
+# roofline model predicts the greedy pass count costs more than twice
+# the sketch's 1 + 2*sketch_power passes) — see repro.api.build.
 STRATEGIES = (
     "pod", "mgs", "greedy", "block_greedy", "streamed", "distributed",
-    "randomized", "sketch+greedy", "auto",
+    "randomized", "sketch+greedy", "batched", "auto",
 )
 
 
@@ -117,11 +118,23 @@ class ReductionSpec:
         ``"rademacher"``) — blocks are derived per tile from
         ``fold_in(PRNGKey(sketch_seed), tile_index)``, so builds are
         bit-reproducible and resumable.
+      batch: lane count B for the many-basis lockstep build
+        (``"batched"``; setting it also flips ``"auto"`` to it).  For a
+        stacked workload — a (B, N, M) array, a list of per-lane sources,
+        or a :class:`~repro.data.bands.BandSplit` — B is implied and
+        ``batch`` may stay None (it is validated when given); a shared
+        2-D source REQUIRES it (or a length-B ``tau`` sequence), because
+        B is the number of independent basis states sweeping the one
+        matrix.  ``tau`` may be a length-B sequence for per-lane
+        tolerances.  The build returns a
+        :class:`~repro.api.basis_set.ReducedBasisSet` of B children —
+        every other strategy returns a single
+        :class:`~repro.api.ReducedBasis`.
     """
 
     source: Any = None
     strategy: str = "auto"
-    tau: float = 1e-6
+    tau: Any = 1e-6
     max_k: Optional[int] = None
     backend: Optional[str] = None
     chunk: int = 16
@@ -148,6 +161,7 @@ class ReductionSpec:
     sketch_power: int = 0
     sketch_seed: int = 0
     sketch_kind: str = "gaussian"
+    batch: Optional[int] = None
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:
@@ -161,6 +175,17 @@ class ReductionSpec:
                 "workdir and checkpoint_dir are mutually exclusive: "
                 "workdir manages its own build/ checkpoint directory"
             )
+        if self.batch is not None:
+            if self.batch < 1:
+                raise ValueError(f"batch must be >= 1, got {self.batch}")
+            if self.strategy not in ("batched", "auto"):
+                raise ValueError(
+                    f"batch= only applies to the batched strategy "
+                    f"(got strategy={self.strategy!r})")
+        if self.strategy == "batched" and self.checkpoint_dir is not None:
+            raise ValueError(
+                "the batched strategy does not support checkpoint_dir; "
+                "use workdir= (the finished set finalizes atomically)")
 
     @classmethod
     def waveform(cls, f, m1s, m2s, dtype=None, normalize: bool = True,

@@ -23,6 +23,10 @@ one ``ReducedBasis`` artifact with ``eim()`` / ``roq_weights()`` /
 - :mod:`repro.core.streaming`      -- out-of-core tile-streamed greedy over
   snapshot providers (M unbounded; peak device memory
   O(N(max_k+2*tile_m)) with next-tile prefetch).
+- :mod:`repro.core.batch_greedy`   -- B lockstep greedy builds in one
+  fused pass over shared-N snapshots (``strategy="batched"``): per-lane
+  pivots/stops, converged lanes masked out, per-basis results bitwise
+  vs the scalar driver in stacked layouts.
 - :mod:`repro.core.randomized`     -- streamed randomized range-finder
   (sketched POD): ONE pass over the provider builds Y = S @ Omega, then
   a small dense SVD; optional power iteration; resumable +
@@ -44,9 +48,12 @@ from repro.core.greedy import (
     rb_greedy,
     rb_greedy_stepwise,
 )
+from repro.core.batch_greedy import BatchGreedyResult, batch_rb_greedy
 from repro.core.streaming import StreamedGreedyResult, rb_greedy_streamed
 from repro.core.randomized import (
     RandomizedSketchResult,
+    RankEstimate,
+    estimate_rank,
     rb_randomized_streamed,
 )
 from repro.core.rrqr import optimal_rrqr
@@ -56,7 +63,9 @@ from repro.core.eim import eim_nodes, empirical_interpolant, roq_weights
 __all__ = [
     "pod", "pod_basis", "mgs_pivoted_qr", "GreedyResult", "rb_greedy",
     "rb_greedy_stepwise", "rb_greedy_streamed", "StreamedGreedyResult",
+    "batch_rb_greedy", "BatchGreedyResult",
     "rb_randomized_streamed", "RandomizedSketchResult",
+    "estimate_rank", "RankEstimate",
     "imgs_orthogonalize", "optimal_rrqr",
     "reconstruction", "eim_nodes", "empirical_interpolant", "roq_weights",
     "default_backend", "resolve_backend", "set_default_backend",

@@ -53,6 +53,11 @@ Dispatch contract
   ``pallas`` route shares the ``xla`` plane-split form (XLA emits the
   optimal GEMM; there is nothing left for a hand-written kernel to fuse)
   while keeping the no-complex-dot HLO guarantee.
+* Each hot primitive also has a ``batched_*`` form carrying a leading
+  B-lane axis (stacked per-lane snapshots, or one shared snapshot matrix
+  swept by all lanes in a single fused GEMM) — the building blocks of the
+  lockstep many-basis driver (:mod:`repro.core.batch_greedy`); see the
+  "batched (B-lane) forms" section below.
 """
 
 from __future__ import annotations
@@ -306,6 +311,273 @@ def sketch_fold(
     if resolved != "xla_ref" and jnp.iscomplexobj(T):
         return _plane_split_sketch_fold(T, Omega, Y)
     return Y + T @ Omega
+
+
+# ------------------------------------------------ batched (B-lane) forms ----
+# Every primitive above gains a leading batch axis so B independent builds
+# run as ONE dispatch (:mod:`repro.core.batch_greedy`).  Two layouts:
+#
+#   stacked   S: (B, N, M) — one snapshot matrix per lane.  The ``xla``
+#             route is ``jax.vmap`` of the scalar route, which lowers to a
+#             batched dot_general whose per-lane floats are BITWISE equal
+#             to the scalar GEMV/GEMM (both operands carry the batch axis,
+#             so XLA runs the same per-lane kernel; asserted in
+#             tests/test_batch_greedy.py).
+#   shared    S: (N, M) — one snapshot matrix, B basis states (e.g. a tau
+#             sweep).  The ``xla`` route stacks the B query vectors (and,
+#             for complex, their re/im planes) into ONE GEMM, so each
+#             lockstep round reads S from DRAM once instead of B times —
+#             the roofline win the batched driver exists for.  GEMM rows
+#             are not bitwise-equal to the scalar GEMV (different float
+#             summation order; same pivots — the blocked-driver precedent).
+#
+# ``xla_ref`` vmaps the literal reference ops in the stacked layout (vmap
+# with BOTH operands batched runs the same per-lane kernel as the scalar
+# call, hence bitwise; a per-lane Python loop is NOT — slicing fuses into
+# the GEMV/GEMM lowering and changes its FMA pattern) and loops them per
+# lane in the shared layout (the literal oracle; a shared-operand vmap
+# would lower to one fused GEMM, i.e. the thing being tested).  ``pallas``
+# loops the fused kernels per lane, except ``batched_block_sweep`` which
+# routes to the dedicated batched Pallas variant.
+
+
+def _barrier_lane_loop(op, nout: int, *batched_args):
+    """Per-lane loop with an optimization barrier around each lane's
+    operand slices.
+
+    The barrier keeps XLA from merging the lanes' dots into one batched
+    dot or fusing the slice into the GEMV lowering — either rewrite
+    changes the float summation/FMA pattern, and the whole point of this
+    route is that each lane compiles exactly like the scalar op.  Used
+    for the complex stacked layout, where neither ``jax.vmap`` of the
+    plane-split ops nor of the literal complex ops is bitwise per lane
+    (XLA merges a scalar ``a @ b + c @ d`` into one concatenated dot but
+    does not apply the same rewrite to the batched form).
+    """
+    B = batched_args[0].shape[0]
+    outs = []
+    for b in range(B):
+        lane = jax.lax.optimization_barrier(
+            tuple(a[b] for a in batched_args))
+        outs.append(op(*lane))
+    if nout == 1:
+        return jnp.stack(outs)
+    return tuple(jnp.stack([o[i] for o in outs]) for i in range(nout))
+
+
+def _is_shared(S_or_stack, batch: int) -> bool:
+    if S_or_stack.ndim == 2:
+        return True
+    if S_or_stack.ndim == 3:
+        if S_or_stack.shape[0] != batch:
+            raise ValueError(
+                f"stacked snapshot batch {S_or_stack.shape[0]} != query "
+                f"batch {batch}")
+        return False
+    raise ValueError(
+        f"snapshot operand must be (N, M) shared or (B, N, M) stacked, "
+        f"got shape {S_or_stack.shape}")
+
+
+def _fused_shared_pivot(q, S, acc, norms_sq):
+    """Shared-S batched Eq.-(6.3) sweep: one read of S for all B lanes.
+
+    Complex planes of all B query vectors stack into L = [[Qr], [Qi]]
+    (2B, N); two real GEMMs ``L @ Sr`` / ``L @ Si`` read each plane ONCE,
+    then recombine:  cr = (L Sr)[:B] + (L Si)[B:],
+                     ci = (L Si)[:B] - (L Sr)[B:].
+    """
+    B = q.shape[0]
+    if jnp.iscomplexobj(S):
+        L = jnp.concatenate([q.real, q.imag], axis=0)     # (2B, N)
+        Sr, Si = S.real, S.imag
+        A = L @ Sr                                        # (2B, M)
+        Bm = L @ Si
+        cr = A[:B] + Bm[B:]
+        ci = Bm[:B] - A[B:]
+        c = jax.lax.complex(cr, ci).astype(S.dtype)
+        acc_out = acc + (cr * cr + ci * ci).astype(acc.dtype)
+    else:
+        c = q @ S                                         # (B, M) one GEMM
+        acc_out = acc + (c * c).astype(acc.dtype)
+    res = norms_sq - acc_out
+    return (c, acc_out, jnp.max(res, axis=1),
+            jnp.argmax(res, axis=1).astype(jnp.int32))
+
+
+def batched_pivot_update(
+    q: jax.Array,
+    S: jax.Array,
+    acc: jax.Array,
+    norms_sq: jax.Array,
+    backend: str | None = None,
+):
+    """B-lane Eq.-(6.3) sweep: per-lane ``c = q_b^H S_b``, acc, argmax.
+
+    Args:
+      q:        (B, N) one current basis vector per lane.
+      S:        (B, N, M) stacked or (N, M) shared snapshots.
+      acc:      (B, M) per-lane accumulated ``|c|^2``.
+      norms_sq: (B, M) per-lane reference norms.
+
+    Returns ``(c, acc_out, max_res, argmax)`` with shapes
+    ((B, M), (B, M), (B,), (B,)) — lane b equals
+    :func:`pivot_update` on its slice (bitwise in the stacked layout,
+    pivot-for-pivot in the shared layout; see the section comment).
+    """
+    resolved = resolve_backend(backend)
+    B = q.shape[0]
+    shared = _is_shared(S, B)
+    if resolved == "xla" and shared:
+        return _fused_shared_pivot(q, S, acc, norms_sq)
+    if resolved != "pallas" and not shared:
+        if jnp.iscomplexobj(S):
+            # complex lanes: barrier loop (see _barrier_lane_loop — no
+            # vmapped form is bitwise per lane here)
+            inner = (_plane_split_pivot if resolved == "xla"
+                     else _xla_pivot)
+            return _barrier_lane_loop(inner, 4, q, S, acc, norms_sq)
+        # real lanes: vmap of the scalar op (BOTH operands batched) runs
+        # the same per-lane kernel XLA picks for the scalar call —
+        # bitwise per lane.  A bare per-lane Python loop is NOT: slicing
+        # fuses into the GEMV lowering and changes its FMA pattern.
+        return jax.vmap(_xla_pivot)(q, S, acc, norms_sq)
+    op = _pallas_pivot if resolved == "pallas" else _xla_pivot
+    outs = [op(q[b], S if shared else S[b], acc[b], norms_sq[b])
+            for b in range(B)]
+    return tuple(jnp.stack([o[i] for o in outs]) for i in range(4))
+
+
+def batched_project_pass(
+    v: jax.Array,
+    Q: jax.Array,
+    backend: str | None = None,
+):
+    """B-lane classical-GS pass: per lane ``(v_b - Q_b Q_b^H v_b, Q_b^H
+    v_b)`` with ``v`` (B, N) and ``Q`` (B, N, k).  The basis is always
+    per-lane (each lane orthogonalizes against its own Q), so there is no
+    shared layout here; ``xla``/``xla_ref`` are the vmapped scalar routes
+    (bitwise per-lane — see :func:`batched_pivot_update` for why a
+    per-lane loop is not), ``pallas`` loops the fused kernel."""
+    resolved = resolve_backend(backend)
+    if resolved != "pallas":
+        if jnp.iscomplexobj(Q):
+            inner = (_plane_split_project if resolved == "xla"
+                     else _xla_project)
+            return _barrier_lane_loop(inner, 2, v, Q)
+        return jax.vmap(_xla_project)(v, Q)
+    outs = [_pallas_project(v[b], Q[b]) for b in range(v.shape[0])]
+    return tuple(jnp.stack([o[i] for o in outs]) for i in range(2))
+
+
+def batched_panel_project(
+    V: jax.Array,
+    Q: jax.Array,
+    backend: str | None = None,
+):
+    """B-lane classical-GS PANEL pass: per lane ``(V_b - Q_b Q_b^H V_b,
+    Q_b^H V_b)`` with ``V`` (B, N, p) and ``Q`` (B, N, k).  Routing as in
+    :func:`batched_project_pass`."""
+    resolved = resolve_backend(backend)
+    if resolved != "pallas":
+        if jnp.iscomplexobj(Q):
+            inner = (_plane_split_panel_project if resolved == "xla"
+                     else _xla_panel)
+            return _barrier_lane_loop(inner, 2, V, Q)
+        return jax.vmap(_xla_panel)(V, Q)
+    outs = [_pallas_panel(V[b], Q[b]) for b in range(V.shape[0])]
+    return tuple(jnp.stack([o[i] for o in outs]) for i in range(2))
+
+
+def _fused_shared_block_sweep(Qnew, S, acc):
+    """Shared-S batched blocked sweep: all B (N, p) panels stack into one
+    (B*p, N) x (N, M) GEMM pair, reading each plane of S once.  The
+    kernel-fused per-column sums are recomputed per lane from C (each
+    lane's acc only sums its OWN p rows)."""
+    B, N, p = Qnew.shape
+    Qh = jnp.swapaxes(Qnew, 1, 2).reshape(B * p, N)       # (B*p, N)
+    if jnp.iscomplexobj(S):
+        L = jnp.concatenate([Qh.real, Qh.imag], axis=0)   # (2Bp, N)
+        Sr, Si = S.real, S.imag
+        A = L @ Sr
+        Bm = L @ Si
+        Cr = A[:B * p] + Bm[B * p:]
+        Ci = Bm[:B * p] - A[B * p:]
+        C = jax.lax.complex(Cr, Ci).astype(S.dtype).reshape(B, p, -1)
+        sq = (Cr * Cr + Ci * Ci).reshape(B, p, -1)
+    else:
+        C = (Qh @ S).reshape(B, p, -1)
+        sq = C * C
+    acc_out = acc + jnp.sum(sq, axis=1).astype(acc.dtype)
+    return C, acc_out
+
+
+def batched_block_sweep(
+    Qnew: jax.Array,
+    S: jax.Array,
+    acc: jax.Array,
+    backend: str | None = None,
+):
+    """B-lane blocked Eq.-(6.3) sweep: per lane ``C_b = Qnew_b^H S_b``,
+    ``acc_b += sum_i |C_b,i|^2``.
+
+    Args:
+      Qnew: (B, N, p) one panel of new basis vectors per lane.
+      S:    (B, N, M) stacked or (N, M) shared snapshots.
+      acc:  (B, M) per-lane accumulated sums.
+
+    Returns ``(C, acc_out)`` with shapes ((B, p, M), (B, M)).  ``pallas``
+    routes to the batched Pallas variant
+    (:func:`repro.kernels.block_sweep.ops.batched_block_sweep`): per-lane
+    fused kernels when stacked, one stacked-panel kernel call when shared.
+    """
+    resolved = resolve_backend(backend)
+    B = Qnew.shape[0]
+    shared = _is_shared(S, B)
+    if resolved == "pallas":
+        from repro.kernels.block_sweep.ops import (
+            batched_block_sweep as _pallas_batched_block,
+        )
+
+        return _pallas_batched_block(Qnew, S, acc)
+    if resolved == "xla" and shared:
+        return _fused_shared_block_sweep(Qnew, S, acc)
+    if not shared:
+        if jnp.iscomplexobj(S):
+            inner = (_plane_split_block_sweep if resolved == "xla"
+                     else _xla_block)
+            return _barrier_lane_loop(inner, 2, Qnew, S, acc)
+        return jax.vmap(_xla_block)(Qnew, S, acc)
+    outs = [_xla_block(Qnew[b], S, acc[b]) for b in range(B)]
+    return tuple(jnp.stack([o[i] for o in outs]) for i in range(2))
+
+
+def batched_sketch_fold(
+    T: jax.Array,
+    Omega: jax.Array,
+    Y: jax.Array,
+    backend: str | None = None,
+):
+    """B-lane sketch fold: per lane ``Y_b + T_b @ Omega_b``.
+
+    ``T`` is (B, N, m) stacked or (N, m) shared; ``Omega`` (B, m, ell)
+    stacked or (m, ell) shared (a shared test block sketches every lane
+    against the same directions — comparable sketches across lanes);
+    ``Y`` is always (B, N, ell).  Routing mirrors :func:`sketch_fold`
+    (``pallas`` shares the ``xla`` plane-split GEMM form).
+    """
+    resolved = resolve_backend(backend)
+    B = Y.shape[0]
+    t_ax = None if _is_shared(T, B) else 0
+    o_ax = None if Omega.ndim == 2 else 0
+    if resolved != "xla_ref" or t_ax == 0:
+        inner = (_plane_split_sketch_fold
+                 if resolved != "xla_ref" and jnp.iscomplexobj(T)
+                 else (lambda t, o, y: y + t @ o))
+        return jax.vmap(inner, in_axes=(t_ax, o_ax, 0))(T, Omega, Y)
+    outs = [Y[b] + T @ (Omega if o_ax is None else Omega[b])
+            for b in range(B)]
+    return jnp.stack(outs)
 
 
 def _plane_split_sketch_project(T, Y):

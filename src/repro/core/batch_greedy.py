@@ -1,0 +1,550 @@
+"""Lockstep batched RB-greedy: B independent builds in one fused pass.
+
+The offline stage of a real GW pipeline builds MANY bases — one per
+parameter region for the serving router, one per frequency band
+(FFT-then-reduce), one per tau in a tolerance sweep.  Each scalar build
+spends its time in the Eq.-(6.3) pivot sweep, which is DRAM-roof-bound at
+production shapes: B sequential builds read the snapshot matrix B times
+per accepted basis vector.  This driver runs the B builds in LOCKSTEP —
+one batched iteration advances every still-active build by one basis
+vector — through the ``batched_*`` primitives of
+:mod:`repro.core.backend`, in two snapshot layouts:
+
+  stacked   ``S``: (B, N, M), one matrix per lane (banded / per-region
+            workloads).  The vmapped sweep runs the same per-lane kernels
+            XLA picks for the scalar driver, so every lane's pivots,
+            errors, Q and R are BITWISE identical to
+            :func:`repro.core.greedy.rb_greedy` on its slice (asserted in
+            tests/test_batch_greedy.py).  The win is one jitted dispatch
+            and one host sync per chunk for all B builds.
+  shared    ``S``: (N, M), one matrix swept by B basis states (tau /
+            hyperparameter sweeps).  All B query vectors (and their re/im
+            planes) stack into ONE GEMM per lockstep round, reading S
+            from DRAM once instead of B times — the fused-pass roofline
+            win (the ``batched_vs_sequential`` rows of BENCH_greedy.json).
+            GEMM float summation differs from the scalar GEMV's, so lanes
+            match the scalar driver pivot-for-pivot, not bitwise (the
+            same contract as the blocked drivers).
+
+Per-lane semantics are the scalar driver's, exactly: independent pivots,
+tau / rank-guard / refresh / floor-stop decisions per lane (host float64
+comparisons included), a converged lane masks out of the sweep (its
+basis state freezes; in the shared layout its query row is dead weight in
+the fused GEMM, in the stacked layout its lane of the batched dot is
+discarded), and every lane's refresh runs the SAME jitted
+:func:`repro.core.greedy.greedy_refresh` on its slice.  The build ends
+when every lane has stopped; per-lane results compact to their accepted
+ranks via :meth:`BatchGreedyResult.lane`.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import backend as _backend
+from repro.core.greedy import (
+    STOP_FLOOR,
+    STOP_NONE,
+    STOP_RANK,
+    STOP_REFRESH,
+    STOP_TAU,
+    GreedyResult,
+    GreedyState,
+    floor_estimate,
+    greedy_refresh,
+    greedy_step,
+)
+
+
+class BatchGreedyState(NamedTuple):
+    """B-lane greedy state: every :class:`~repro.core.greedy.GreedyState`
+    leaf with a leading batch axis, plus a per-lane rank counter.  Lane b
+    of every leaf is exactly the scalar state of build b."""
+
+    Q: jax.Array         # (B, N, max_k) per-lane basis, zero-padded
+    R: jax.Array         # (B, max_k, M)
+    norms_sq: jax.Array  # (B, M) per-lane reference residual^2
+    acc: jax.Array       # (B, M) per-lane sum_j |c_j|^2 since refresh
+    pivots: jax.Array    # (B, max_k) int32
+    errs: jax.Array      # (B, max_k) real
+    n_passes: jax.Array  # (B, max_k) int32
+    rnorms: jax.Array    # (B, max_k) real
+    k: jax.Array         # (B,) int32 per-lane accepted rank
+
+
+class BatchGreedyResult(NamedTuple):
+    """Result of a lockstep batched build (all arrays zero-padded to
+    max_k; per-lane valid ranks in ``k``, per-lane stop codes in
+    ``stops``).  :meth:`lane` compacts one lane to the scalar result
+    shape."""
+
+    Q: jax.Array         # (B, N, max_k)
+    R: jax.Array         # (B, max_k, M)
+    pivots: jax.Array    # (B, max_k)
+    errs: jax.Array      # (B, max_k)
+    k: np.ndarray        # (B,) accepted ranks
+    n_ortho_passes: jax.Array
+    rnorms: jax.Array
+    stops: np.ndarray    # (B,) STOP_* codes
+
+    @property
+    def batch(self) -> int:
+        return int(self.Q.shape[0])
+
+    def lane(self, b: int) -> GreedyResult:
+        """Lane ``b`` as a scalar :class:`~repro.core.greedy.GreedyResult`
+        (zero-padded arrays, like the scalar drivers return)."""
+        return GreedyResult(
+            Q=self.Q[b], R=self.R[b], pivots=self.pivots[b],
+            errs=self.errs[b], k=jnp.asarray(int(self.k[b]), jnp.int32),
+            n_ortho_passes=self.n_ortho_passes[b], rnorms=self.rnorms[b],
+            stop=int(self.stops[b]),
+        )
+
+
+def batched_imgs_orthogonalize(
+    v: jax.Array,
+    Q: jax.Array,
+    kappa: float = 2.0,
+    max_passes: int = 3,
+    backend: str | None = None,
+):
+    """B-lane Hoffmann iterated classical GS: lane b orthogonalizes
+    ``v[b]`` against its own ``Q[b]``.
+
+    The re-run loop applies Hoffmann's kappa test PER LANE: the
+    while_loop runs while any lane still wants a pass, and lanes that
+    converged keep their values through a per-lane select — exactly the
+    batching rule ``jax.vmap`` applies to a while_loop, so each lane's
+    floats match the scalar :func:`repro.core.greedy.imgs_orthogonalize`
+    bitwise.  Returns ``(q, coeffs, rnorm, n_passes)`` with a leading B
+    axis on each.
+    """
+    B = v.shape[0]
+    norm0 = jax.vmap(jnp.linalg.norm)(v)
+
+    # First pass is unconditional (as in the scalar form).
+    v1, c1 = _backend.batched_project_pass(v, Q, backend=backend)
+
+    def rerun(norm_prev, norm_cur, n):
+        return (norm_cur < norm_prev / kappa) & (n < max_passes)
+
+    def cond(state):
+        _, _, norm_prev, norm_cur, n = state
+        return jnp.any(rerun(norm_prev, norm_cur, n))
+
+    def body(state):
+        v_cur, coeffs, norm_prev, norm_cur, n = state
+        go = rerun(norm_prev, norm_cur, n)
+        v_next, c = _backend.batched_project_pass(v_cur, Q,
+                                                  backend=backend)
+        norm_next = jax.vmap(jnp.linalg.norm)(v_next)
+        return (
+            jnp.where(go[:, None], v_next, v_cur),
+            jnp.where(go[:, None], coeffs + c, coeffs),
+            jnp.where(go, norm_cur, norm_prev),
+            jnp.where(go, norm_next, norm_cur),
+            n + go.astype(n.dtype),
+        )
+
+    v_fin, coeffs, _, rnorm, n_passes = jax.lax.while_loop(
+        cond, body,
+        (v1, c1, norm0, jax.vmap(jnp.linalg.norm)(v1),
+         jnp.ones((B,), jnp.int32)),
+    )
+    safe = jnp.maximum(rnorm, jnp.finfo(rnorm.dtype).tiny)
+    q = v_fin / safe[:, None].astype(v_fin.dtype)
+    return q, coeffs, rnorm, n_passes
+
+
+@functools.partial(jax.jit, static_argnames=("max_k", "batch"))
+def batch_greedy_init(S: jax.Array, max_k: int,
+                      batch: int | None = None) -> BatchGreedyState:
+    """Initial B-lane state.  ``S`` (B, N, M) stacked (``batch`` ignored)
+    or (N, M) shared (``batch`` required).  Per-lane column norms are
+    computed lane-by-lane on 2-D slices (stacked) or once and broadcast
+    (shared), so each lane's values equal the scalar
+    :func:`repro.core.greedy.greedy_init` bitwise."""
+    rdtype = jnp.zeros((), S.dtype).real.dtype
+    if S.ndim == 2:
+        if batch is None:
+            raise ValueError("shared-S batched init requires batch=")
+        B = batch
+        N, M = S.shape
+        norms = jnp.sum(jnp.abs(S) ** 2, axis=0).astype(rdtype)
+        norms_sq = jnp.broadcast_to(norms, (B, M))
+    else:
+        # Lane-by-lane on fenced 2-D slices: the barrier keeps the slice
+        # from fusing into the reduction, so each lane's norms compile
+        # exactly like the scalar greedy_init's (same op on a parameter).
+        B, N, M = S.shape
+        norms_sq = jnp.stack([
+            jnp.sum(jnp.abs(jax.lax.optimization_barrier(S[b])) ** 2,
+                    axis=0).astype(rdtype)
+            for b in range(B)
+        ])
+    return BatchGreedyState(
+        Q=jnp.zeros((B, N, max_k), S.dtype),
+        R=jnp.zeros((B, max_k, M), S.dtype),
+        norms_sq=norms_sq,
+        acc=jnp.zeros((B, M), rdtype),
+        pivots=jnp.zeros((B, max_k), jnp.int32),
+        errs=jnp.zeros((B, max_k), rdtype),
+        n_passes=jnp.zeros((B, max_k), jnp.int32),
+        rnorms=jnp.zeros((B, max_k), rdtype),
+        k=jnp.zeros((B,), jnp.int32),
+    )
+
+
+def _lane_fenced_step(
+    S: jax.Array,
+    state: BatchGreedyState,
+    kappa: float,
+    max_passes: int,
+    backend: str | None,
+) -> BatchGreedyState:
+    """Stacked-complex lockstep round: the SCALAR
+    :func:`repro.core.greedy.greedy_step` traced once per lane between
+    optimization barriers.
+
+    Complex lanes cannot go through ``jax.vmap``: XLA merges a scalar
+    ``a @ b + c @ d`` (the plane-split recombinations — and the complex
+    dot's own lowering) into one concatenated reduction but does not
+    apply the same rewrite to the batched form, so vmapped lanes drift
+    from the scalar driver by an ulp per iteration.  Fencing each lane's
+    operands keeps XLA from merging dots across lanes or fusing the lane
+    slice into the GEMV lowering; inside the fence the graph IS the
+    scalar step's, so it compiles — and rounds — identically (asserted
+    bitwise in tests/test_batch_greedy.py).  The dispatch amortization
+    (one jit call, one host sync per chunk for all B builds) is
+    unchanged; only the sweep arithmetic stays per-lane.
+    """
+    B = state.k.shape[0]
+    outs = []
+    for b in range(B):
+        lane = GreedyState(
+            Q=state.Q[b], R=state.R[b], norms_sq=state.norms_sq[b],
+            acc=state.acc[b], pivots=state.pivots[b],
+            errs=state.errs[b], n_passes=state.n_passes[b],
+            rnorms=state.rnorms[b], k=state.k[b],
+        )
+        Sb, lane = jax.lax.optimization_barrier((S[b], lane))
+        outs.append(greedy_step(Sb, lane, kappa, max_passes,
+                                backend=backend))
+    return BatchGreedyState(*(
+        jnp.stack([getattr(o, f) for o in outs])
+        for f in BatchGreedyState._fields
+    ))
+
+
+def batch_greedy_step(
+    S: jax.Array,
+    state: BatchGreedyState,
+    kappa: float = 2.0,
+    max_passes: int = 3,
+    backend: str | None = None,
+) -> BatchGreedyState:
+    """One lockstep iteration: every lane picks ITS argmax pivot,
+    orthogonalizes against ITS basis, and appends — the batched image of
+    :func:`repro.core.greedy.greedy_step`.  Lane ranks may differ (lanes
+    freeze and reactivate independently), so all slot writes are per-lane
+    dynamic updates at ``k[b]``.
+
+    Stacked complex snapshots on the non-Pallas backends take the fenced
+    per-lane route (:func:`_lane_fenced_step`) — the only form whose
+    floats match the scalar driver bitwise; everything else runs the
+    vmapped/fused batched primitives."""
+    if (S.ndim == 3 and jnp.iscomplexobj(S)
+            and _backend.resolve_backend(backend) != "pallas"):
+        return _lane_fenced_step(S, state, kappa, max_passes, backend)
+    k = state.k
+    res_sq = jnp.maximum(state.norms_sq - state.acc, 0.0)
+    j = jax.vmap(jnp.argmax)(res_sq)
+    err = jnp.sqrt(jax.vmap(lambda r, jj: r[jj])(res_sq, j))
+
+    if S.ndim == 2:
+        v = jax.vmap(
+            lambda jj: jax.lax.dynamic_slice_in_dim(S, jj, 1, axis=1)[:, 0]
+        )(j)
+    else:
+        v = jax.vmap(
+            lambda Sb, jj:
+            jax.lax.dynamic_slice_in_dim(Sb, jj, 1, axis=1)[:, 0]
+        )(S, j)
+    q, _, rnorm, n_pass = batched_imgs_orthogonalize(
+        v, state.Q, kappa, max_passes, backend=backend
+    )
+
+    c, acc, _, _ = _backend.batched_pivot_update(
+        q, S, state.acc, state.norms_sq, backend=backend
+    )
+
+    set_col = jax.vmap(lambda Qb, qb, kb: Qb.at[:, kb].set(qb))
+    set_row = jax.vmap(lambda Rb, cb, kb: Rb.at[kb, :].set(cb))
+    set_at = jax.vmap(lambda xb, val, kb: xb.at[kb].set(val))
+    return BatchGreedyState(
+        Q=set_col(state.Q, q, k),
+        R=set_row(state.R, c, k),
+        norms_sq=state.norms_sq,
+        acc=acc,
+        pivots=set_at(state.pivots, j.astype(jnp.int32), k),
+        errs=set_at(state.errs, err, k),
+        n_passes=set_at(state.n_passes, n_pass.astype(jnp.int32), k),
+        rnorms=set_at(state.rnorms, rnorm.astype(state.rnorms.dtype), k),
+        k=k + 1,
+    )
+
+
+def _lane_where(mask, new, old):
+    """Per-lane select: broadcast a (B,) mask over each leaf's trailing
+    axes (the rule vmap applies to while_loop carries)."""
+    return jnp.where(mask.reshape(mask.shape + (1,) * (new.ndim - 1)),
+                     new, old)
+
+
+def _batch_chunk_impl(
+    S,
+    state,
+    taus,
+    scales,
+    ref_sqs,
+    refresh_safety,
+    done,
+    chunk: int,
+    kappa: float = 2.0,
+    max_passes: int = 3,
+    backend: str | None = None,
+    check_refresh: bool = True,
+):
+    """Run up to ``chunk`` lockstep rounds device-resident.
+
+    Per-lane stop codes latch inside the loop: a lane whose newest basis
+    trips the rank guard / tau / refresh trigger FREEZES (its state stops
+    updating through the per-lane select; its sweep lane is dead weight
+    until the host handles the latched code at the chunk boundary), while
+    the other lanes keep stepping.  The loop exits when no lane is active
+    or ``chunk`` rounds elapsed.  Returns ``(state, n_rounds, stops)``
+    with ``stops`` (B,) int32 — the host syncs only those.
+    """
+    max_k = state.Q.shape[2]
+    eps = jnp.finfo(state.norms_sq.dtype).eps
+
+    def active_mask(st, stop):
+        return (stop == STOP_NONE) & (~done) & (st.k < max_k)
+
+    def cond(carry):
+        st, n, stop = carry
+        return jnp.any(active_mask(st, stop)) & (n < chunk)
+
+    def body(carry):
+        st, n, stop = carry
+        active = active_mask(st, stop)
+        st_new = batch_greedy_step(S, st, kappa, max_passes,
+                                   backend=backend)
+        st = BatchGreedyState(*(
+            _lane_where(active, new, old)
+            for new, old in zip(st_new, st)
+        ))
+        idx = jnp.maximum(st.k - 1, 0)
+        err = jnp.take_along_axis(st.errs, idx[:, None], axis=1)[:, 0]
+        rnorm = jnp.take_along_axis(st.rnorms, idx[:, None], axis=1)[:, 0]
+        refresh_hit = check_refresh & (err * err < refresh_safety * eps
+                                       * ref_sqs)
+        new_stop = jnp.where(
+            rnorm < 50.0 * eps * scales,
+            STOP_RANK,
+            jnp.where(err < taus, STOP_TAU,
+                      jnp.where(refresh_hit, STOP_REFRESH, STOP_NONE)),
+        ).astype(jnp.int32)
+        stop = jnp.where(active, new_stop, stop)
+        return (st, n + 1, stop)
+
+    B = state.k.shape[0]
+    state, n_done, stops = jax.lax.while_loop(
+        cond, body,
+        (state, jnp.asarray(0, jnp.int32),
+         jnp.full((B,), STOP_NONE, jnp.int32)),
+    )
+    return state, n_done, stops
+
+
+_CHUNK_STATICS = ("chunk", "kappa", "max_passes", "backend", "check_refresh")
+
+_batch_chunk = jax.jit(_batch_chunk_impl, static_argnames=_CHUNK_STATICS)
+
+# Donating variant (see repro.core.greedy: the driver never touches the
+# previous state again, so Q/R/acc buffers are reused across chunks).
+_batch_chunk_donated = jax.jit(
+    _batch_chunk_impl, static_argnames=_CHUNK_STATICS, donate_argnums=(1,)
+)
+
+
+def _drop_last_lane(state: BatchGreedyState, b: int,
+                    k: int) -> BatchGreedyState:
+    """Remove lane ``b``'s most recent basis (tau-stop / rank-guard)."""
+    return state._replace(
+        k=state.k.at[b].set(k),
+        Q=state.Q.at[b, :, k].set(0),
+        R=state.R.at[b, k, :].set(0),
+        pivots=state.pivots.at[b, k].set(-1),
+    )
+
+
+def _refresh_lane(S, state: BatchGreedyState, b: int) -> BatchGreedyState:
+    """Exact residual refresh of ONE lane, through the same jitted
+    :func:`repro.core.greedy.greedy_refresh` the scalar driver uses on
+    lane-shaped views — per-lane bitwise identity is by construction."""
+    Sb = S if S.ndim == 2 else S[b]
+    lane = GreedyState(
+        Q=state.Q[b], R=state.R[b], norms_sq=state.norms_sq[b],
+        acc=state.acc[b], pivots=state.pivots[b], errs=state.errs[b],
+        n_passes=state.n_passes[b], rnorms=state.rnorms[b], k=state.k[b],
+    )
+    ref = greedy_refresh(Sb, lane)
+    return state._replace(
+        norms_sq=state.norms_sq.at[b].set(ref.norms_sq),
+        acc=state.acc.at[b].set(ref.acc),
+    )
+
+
+def batch_rb_greedy(
+    S,
+    tau,
+    max_k: int | None = None,
+    batch: int | None = None,
+    kappa: float = 2.0,
+    max_passes: int = 3,
+    refresh: str = "auto",
+    refresh_safety: float = 100.0,
+    chunk: int = 16,
+    backend: str | None = None,
+    callback=None,
+) -> BatchGreedyResult:
+    """Run B greedy builds in lockstep; every lane stops on its own terms.
+
+    Args:
+      S: the snapshot workload —
+         * (B, N, M) array (or a list/tuple of equal-shape 2-D sources,
+           each anything :func:`repro.data.providers.as_provider`
+           accepts): STACKED layout, per-lane bitwise parity with
+           :func:`repro.core.greedy.rb_greedy`;
+         * (N, M) array with ``batch=B`` (or ``tau`` a length-B
+           sequence): SHARED layout, one fused GEMM sweep per lockstep
+           round (pivot-for-pivot parity).
+      tau: scalar (every lane) or length-B sequence (per-lane
+        tolerances — the tau-sweep workload).
+      max_k / kappa / max_passes / refresh / refresh_safety / chunk /
+        backend: exactly as on :func:`repro.core.greedy.rb_greedy`,
+        applied PER LANE (one shared chunk cadence; stop decisions,
+        refreshes and the floor gate are per-lane, with the same host
+        float64 comparisons).
+      callback: fires once per chunk with the :class:`BatchGreedyState`.
+
+    Returns a :class:`BatchGreedyResult`; ``result.lane(b)`` is the
+    scalar-shaped view of build b.
+    """
+    from repro.data.providers import materialize_source
+
+    if isinstance(S, (list, tuple)):
+        mats = [materialize_source(s) for s in S]
+        shapes = {tuple(m.shape) for m in mats}
+        if len(shapes) != 1:
+            raise ValueError(
+                f"batched sources must share one (N, M) shape, got "
+                f"{sorted(shapes)}")
+        S = jnp.stack(mats)
+    else:
+        S = jnp.asarray(S)
+    if S.ndim not in (2, 3):
+        raise ValueError(
+            f"batched snapshots must be (B, N, M) stacked or (N, M) "
+            f"shared, got shape {S.shape}")
+
+    taus_in = np.atleast_1d(np.asarray(tau, np.float64))
+    if S.ndim == 3:
+        B = int(S.shape[0])
+        if batch is not None and batch != B:
+            raise ValueError(f"batch={batch} != stacked batch {B}")
+    else:
+        B = batch if batch is not None else int(taus_in.shape[0])
+        if B < 1:
+            raise ValueError(f"batch must be >= 1, got {B}")
+    if taus_in.shape[0] == 1:
+        taus_in = np.full((B,), float(taus_in[0]))
+    if taus_in.shape[0] != B:
+        raise ValueError(
+            f"tau must be scalar or length-{B}, got {taus_in.shape[0]}")
+    taus_host = [float(t) for t in taus_in]
+
+    N, M = (int(S.shape[-2]), int(S.shape[-1]))
+    if max_k is None:
+        max_k = min(N, M)
+    max_k = min(max_k, min(N, M))
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    backend = _backend.resolve_backend(backend)  # see rb_greedy
+
+    state = batch_greedy_init(S, max_k, batch=B if S.ndim == 2 else None)
+    rdt = state.norms_sq.dtype
+    eps = float(jnp.finfo(rdt).eps)
+    # Per-lane host loop variables, exactly the scalar driver's floats.
+    ref_sqs = [float(jnp.max(state.norms_sq[b])) for b in range(B)]
+    scales = [r ** 0.5 for r in ref_sqs]
+    done = np.zeros((B,), bool)
+    final = np.full((B,), STOP_NONE, np.int64)
+
+    chunk_fn = _batch_chunk if callback is not None else \
+        _batch_chunk_donated
+    taus_d = jnp.asarray(taus_host, rdt)
+    scales_d = jnp.asarray(scales, rdt)
+    safety_d = jnp.asarray(refresh_safety, rdt)
+    ref_sqs_d = jnp.asarray(ref_sqs, rdt)
+    done_d = jnp.asarray(done)
+
+    while not done.all():
+        state, _, stops = chunk_fn(
+            S, state, taus_d, scales_d, ref_sqs_d, safety_d, done_d,
+            chunk=chunk, kappa=kappa, max_passes=max_passes,
+            backend=backend, check_refresh=(refresh == "auto"),
+        )
+        if callback is not None:
+            callback(state)
+        ks = np.asarray(state.k)
+        stops_h = np.asarray(stops)
+        ref_changed = False
+        for b in range(B):
+            if done[b]:
+                continue
+            stop = int(stops_h[b])
+            k = int(ks[b])
+            if stop in (STOP_RANK, STOP_TAU):
+                # Same drop semantics as the scalar driver: the newest
+                # basis was rank-guard junk / selected below tau.
+                state = _drop_last_lane(state, b, k - 1)
+                done[b], final[b] = True, stop
+            elif stop == STOP_REFRESH:
+                state = _refresh_lane(S, state, b)
+                ref_sqs[b] = max(float(jnp.max(state.norms_sq[b])),
+                                 1e-300)
+                ref_changed = True
+                if ref_sqs[b] ** 0.5 < taus_host[b]:
+                    done[b], final[b] = True, STOP_TAU
+                elif ref_sqs[b] ** 0.5 <= floor_estimate(eps, scales[b],
+                                                         k):
+                    done[b], final[b] = True, STOP_FLOOR
+            if not done[b] and int(ks[b]) >= max_k:
+                done[b] = True  # lane ran to capacity; stays STOP_NONE
+        done_d = jnp.asarray(done)
+        if ref_changed:
+            ref_sqs_d = jnp.asarray(ref_sqs, rdt)
+
+    return BatchGreedyResult(
+        Q=state.Q, R=state.R, pivots=state.pivots, errs=state.errs,
+        k=np.asarray(state.k), n_ortho_passes=state.n_passes,
+        rnorms=state.rnorms, stops=np.asarray(final),
+    )

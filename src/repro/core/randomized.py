@@ -235,6 +235,73 @@ def _load_state(directory: str) -> Optional[_SketchState]:
     return _SketchState.from_tree(load_checkpoint_raw(directory))
 
 
+class RankEstimate(NamedTuple):
+    """Result of :func:`estimate_rank`.
+
+    Attributes:
+      k: estimated numerical rank at ``tau`` (the smallest k with
+        ``sigma_hat_{k+1} < tau`` on the sketch's singular-value
+        estimates).
+      ell: final sketch width the estimate came from.
+      saturated: True when every sketched singular value sat above
+        ``tau`` even at the widest sketch tried — the true rank is
+        ``>= k`` and the estimate is only a lower bound.
+      passes: total streamed passes over the provider spent estimating
+        (one per doubling round).
+    """
+
+    k: int
+    ell: int
+    saturated: bool
+    passes: int
+
+
+def estimate_rank(
+    source,
+    tau: float,
+    *,
+    ell0: int = 32,
+    max_ell: int = 512,
+    seed: int = 0,
+    kind: str = "gaussian",
+    tile_m: int = 8192,
+    backend: str | None = None,
+) -> RankEstimate:
+    """Sketch-based numerical-rank estimate (for ``"auto"``'s planning).
+
+    One cheap randomized pass folds ``Y = S @ Omega`` at width ``ell``
+    and counts sketched singular-value estimates above ``tau`` — exactly
+    :func:`rb_randomized_streamed`'s Algorithm-1 rank criterion, at a
+    width far below a production sketch.  A SATURATED estimate (all
+    ``ell`` values above ``tau``: the spectrum didn't decay inside the
+    sketch) doubles ``ell`` and re-streams, up to ``min(max_ell, N, M)``
+    — so a rank-r family costs ``O(log2(r / ell0))`` passes, each
+    touching S once.
+
+    This is the PR-7 follow-on that lets ``"auto"`` plan greedy-vs-sketch
+    pass counts when the caller gave no ``max_k``: the returned ``k`` is
+    an ESTIMATE of where the tau stop will land, good enough for a
+    cutover decision (and, with headroom, a basis-size cap) but not a
+    substitute for the build's own stopping test.
+    """
+    prov = as_provider(source)
+    N, M = prov.shape
+    hard_cap = min(max_ell, N, M)
+    ell = min(max(int(ell0), 1), hard_cap)
+    passes = 0
+    while True:
+        res = rb_randomized_streamed(
+            source, tau=tau, max_k=ell, sketch_p=0, power=0, seed=seed,
+            kind=kind, tile_m=tile_m, backend=backend,
+        )
+        passes += res.n_passes
+        saturated = int(res.k) >= res.ell
+        if not saturated or res.ell >= hard_cap:
+            return RankEstimate(k=int(res.k), ell=res.ell,
+                                saturated=saturated, passes=passes)
+        ell = min(2 * ell, hard_cap)
+
+
 def rb_randomized_streamed(
     source,
     tau: float | None = None,

@@ -1,3 +1,4 @@
+from repro.data.bands import BandSplit, band_split
 from repro.data.pipeline import SyntheticLMData, FileLMData
 from repro.data.providers import (
     SnapshotProvider,
@@ -13,6 +14,7 @@ from repro.data.providers import (
 )
 
 __all__ = [
+    "BandSplit", "band_split",
     "SyntheticLMData", "FileLMData",
     "SnapshotProvider", "ArrayProvider", "FaultPlan", "FaultyProvider",
     "MemmapProvider", "WaveformProvider", "as_provider",

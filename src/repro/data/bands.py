@@ -1,0 +1,81 @@
+"""Frequency-band workload splitting for batched many-basis builds.
+
+The pyNekTools-style banded reduction: FFT the sample axis of one
+snapshot matrix, slice the spectrum into B contiguous bands, and reduce
+each band with its own basis.  A narrow band's waveform family is far
+smoother than the broadband signal, so per-band bases are much smaller
+than one global basis at equal tau — and the B band matrices share one
+(N_b, M) shape, which is exactly the stacked workload
+``strategy="batched"`` builds in one lockstep pass
+(:mod:`repro.core.batch_greedy`).  The per-band artifacts register
+directly with the serving router (one route per band; see
+``examples/banded_bases.py``).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class BandSplit(NamedTuple):
+    """A banded snapshot workload (the output of :func:`band_split`).
+
+    Attributes:
+      stack: (B, N_b, M) complex array — band b's spectrum rows for every
+        snapshot column; feed it to ``build_basis(source=split.stack,
+        strategy="batched")`` (or any (B, N, M)-accepting driver).
+      edges: tuple of (lo, hi) frequency-bin index pairs, one per band —
+        band b covers spectrum rows ``lo <= r < hi`` of the full FFT.
+      n_freq: total number of frequency bins the FFT produced (before
+        any truncation to equal band heights).
+      from_real: True when the input was real (rFFT one-sided spectrum).
+    """
+
+    stack: jax.Array
+    edges: tuple
+    n_freq: int
+    from_real: bool
+
+    @property
+    def batch(self) -> int:
+        return int(self.stack.shape[0])
+
+
+def band_split(source: Any, bands: int) -> BandSplit:
+    """FFT the sample axis and split the spectrum into ``bands`` equal bands.
+
+    Args:
+      source: the snapshot matrix — anything
+        :func:`repro.data.providers.materialize_source` accepts, shaped
+        (N, M) with snapshots in columns.  Real input takes the one-sided
+        rFFT (N//2 + 1 bins); complex input the full FFT (N bins).
+      bands: number of equal-height bands B (>= 1).  The topmost
+        ``n_freq % bands`` bins are dropped so every band has the same
+        height — the lockstep driver needs one shared (N_b, M) shape (the
+        discarded remainder is the extreme high-frequency tail; widen N
+        or pick a divisor of ``n_freq`` to keep it).
+
+    Returns a :class:`BandSplit`; ``.stack`` is (B, n_freq // B, M).
+    """
+    from repro.data.providers import materialize_source
+
+    if bands < 1:
+        raise ValueError(f"bands must be >= 1, got {bands}")
+    S = materialize_source(source)
+    if S.ndim != 2:
+        raise ValueError(f"band_split needs an (N, M) source, got {S.shape}")
+    from_real = not jnp.iscomplexobj(S)
+    F = jnp.fft.rfft(S, axis=0) if from_real else jnp.fft.fft(S, axis=0)
+    n_freq = int(F.shape[0])
+    height = n_freq // bands
+    if height < 1:
+        raise ValueError(
+            f"{bands} bands from {n_freq} frequency bins leaves empty "
+            f"bands")
+    edges = tuple((b * height, (b + 1) * height) for b in range(bands))
+    stack = F[: bands * height].reshape(bands, height, F.shape[1])
+    return BandSplit(stack=stack, edges=edges, n_freq=n_freq,
+                     from_real=from_real)

@@ -84,3 +84,47 @@ def block_sweep(
         C = c[:p, :M]
 
     return C, acc_out[0, :M].astype(acc.dtype)
+
+
+def batched_block_sweep(
+    Qnew: jax.Array,
+    S: jax.Array,
+    acc: jax.Array,
+    nt: int = 512,
+    mt: int = 1024,
+    interpret: bool | None = None,
+):
+    """B-lane blocked sweep: per lane ``C_b = Qnew_b^H S_b``,
+    ``acc_b += sum_i |C_b,i|^2``.
+
+    Args:
+      Qnew: (B, N, p) one panel of new basis vectors per lane.
+      S:    (B, N, M) stacked per-lane snapshots, or (N, M) shared.
+      acc:  (B, M) per-lane accumulated sums (real).
+
+    Returns ``(C, acc_out)`` with shapes ((B, p, M), (B, M)).
+
+    Shared layout: the B panels stack along the panel axis into ONE
+    (N, B*p) kernel call — a single fused HBM pass over S serves every
+    lane (the batched amortization the lockstep driver exists for).  The
+    kernel's fused per-column sum spans ALL B*p rows, so per-lane acc is
+    recomputed from the returned C (each lane only sums its own p rows);
+    the kernel is fed a zero acc and its cross-lane sum is discarded.
+
+    Stacked layout: per-lane fused kernel calls (each lane reads its own
+    S_b exactly once — there is no cross-lane traffic to amortize).
+    """
+    B, N, p = Qnew.shape
+    if S.ndim == 2:
+        panel = jnp.swapaxes(Qnew, 1, 2).reshape(B * p, N).T  # (N, B*p)
+        C_flat, _ = block_sweep(
+            panel, S, jnp.zeros_like(acc[0]), nt=nt, mt=mt,
+            interpret=interpret,
+        )
+        C = C_flat.reshape(B, p, -1)
+        acc_out = acc + jnp.sum(jnp.abs(C) ** 2, axis=1).astype(acc.dtype)
+        return C, acc_out
+    outs = [block_sweep(Qnew[b], S[b], acc[b], nt=nt, mt=mt,
+                        interpret=interpret) for b in range(B)]
+    return (jnp.stack([o[0] for o in outs]),
+            jnp.stack([o[1] for o in outs]))

@@ -157,7 +157,7 @@ def test_auto_picks_block_greedy_on_roof_bound_shape():
     from repro.api.build import _auto_strategy
 
     spec = ReductionSpec(source="unused", strategy="auto")
-    choice, block_p = _auto_strategy(spec, (4096, 16384), jnp.float32)
+    choice, block_p, _k = _auto_strategy(spec, (4096, 16384), jnp.float32)
     assert choice == "block_greedy"
     assert block_p > 1  # the model raised the stepwise default
 
@@ -230,6 +230,7 @@ def test_roofline_measurement_disabled_by_default_in_tests(monkeypatch):
         raise AssertionError("measured_roofline called despite opt-out")
 
     monkeypatch.setattr(R, "measured_roofline", boom)
+    monkeypatch.setattr(R, "measured_cache_bytes", boom)
     bw, gf, cache = machine_roofline(None)
     assert (bw, gf, cache) == _PLATFORM_ROOFS["cpu"]
 
@@ -237,21 +238,23 @@ def test_roofline_measurement_disabled_by_default_in_tests(monkeypatch):
 def test_measured_roofline_feeds_model_when_enabled(monkeypatch, caplog):
     """REPRO_ROOFLINE_MEASURE=1 with no pinned knobs: the one-time
     on-device calibration fills bandwidth/FLOPs (positive, finite,
-    logged); the LLC knob stays default (not measured).  Cached per
-    process: the second model call must not re-measure."""
+    logged) AND the LLC knob (the PR-9 working-set sweep — stubbed here;
+    its own tests exercise the measurement).  Cached per process: the
+    second model call must not re-measure."""
     import repro.api.roofline as R
-    from repro.api.build import _PLATFORM_ROOFS, machine_roofline
+    from repro.api.build import machine_roofline
 
     monkeypatch.setenv("REPRO_ROOFLINE_MEASURE", "1")
     monkeypatch.delenv("REPRO_DRAM_BW_GBPS", raising=False)
     monkeypatch.delenv("REPRO_PEAK_GFLOPS", raising=False)
     monkeypatch.delenv("REPRO_LLC_BYTES", raising=False)
+    monkeypatch.setattr(R, "measured_cache_bytes", lambda: 48 << 20)
     R.measured_roofline.cache_clear()
     with caplog.at_level(logging.INFO, logger="repro.api"):
         bw, gf, cache = machine_roofline(None)
     assert np.isfinite(bw) and bw > 0
     assert np.isfinite(gf) and gf > 0
-    assert cache == _PLATFORM_ROOFS["cpu"][2]
+    assert cache == 48 << 20  # the measured LLC fed the model
     assert any("measured roofline" in r.getMessage()
                for r in caplog.records)
     assert machine_roofline(None) == (bw, gf, cache)  # stable re-read
@@ -301,16 +304,16 @@ def test_auto_decision_table_deterministic_without_measurement():
     spec = ReductionSpec(source="unused", strategy="auto")
     # the paper benchmark's roof-bound resident shapes (PR-4 table)
     for dtype in (jnp.float32, jnp.complex64):
-        choice, block_p = _auto_strategy(spec, (4096, 16384), dtype)
+        choice, block_p, _k = _auto_strategy(spec, (4096, 16384), dtype)
         assert choice == "block_greedy"
         assert block_p == 8
     # small, cache-resident shape: stepwise resident greedy
-    choice, block_p = _auto_strategy(spec, (200, 120), jnp.float32)
+    choice, block_p, _k = _auto_strategy(spec, (200, 120), jnp.float32)
     assert choice == "greedy"
     assert block_p == 1
     # explicit block_p is respected, not overridden
     spec_p = ReductionSpec(source="unused", strategy="auto", block_p=3)
-    choice, block_p = _auto_strategy(spec_p, (4096, 16384), jnp.float32)
+    choice, block_p, _k = _auto_strategy(spec_p, (4096, 16384), jnp.float32)
     assert choice == "block_greedy"
     assert block_p == 3
 
@@ -618,4 +621,6 @@ def test_parity_oracle_and_fast_drivers_do_not_warn():
 def test_strategies_tuple_is_exhaustive():
     from repro.api.build import _BUILDERS
 
-    assert set(STRATEGIES) == set(_BUILDERS) | {"auto"}
+    # "auto" resolves to a builder; "batched" delegates to
+    # build_basis_set (multi-basis artifact) before builder dispatch.
+    assert set(STRATEGIES) == set(_BUILDERS) | {"auto", "batched"}

@@ -19,9 +19,11 @@ from repro.api import ReducedBasis, ReductionSpec, build_basis
 def test_repro_api_exports():
     assert sorted(repro.api.__all__) == [
         "ReducedBasis",
+        "ReducedBasisSet",
         "ReductionSpec",
         "STRATEGIES",
         "build_basis",
+        "build_basis_set",
         "device_memory_budget",
     ]
     for name in repro.api.__all__:
@@ -31,7 +33,7 @@ def test_repro_api_exports():
 def test_strategies_pinned():
     assert repro.api.STRATEGIES == (
         "pod", "mgs", "greedy", "block_greedy", "streamed", "distributed",
-        "randomized", "sketch+greedy", "auto",
+        "randomized", "sketch+greedy", "batched", "auto",
     )
 
 
@@ -84,6 +86,9 @@ def test_reduction_spec_fields_pinned():
         ("sketch_power", 0),
         ("sketch_seed", 0),
         ("sketch_kind", "gaussian"),
+        # PR 9: lane count for the batched many-basis strategy (tau may
+        # also be a length-B sequence -- its annotation widened to Any)
+        ("batch", None),
     ]
 
 
@@ -107,6 +112,8 @@ def test_repro_core_exports_stable():
         "pod", "pod_basis", "mgs_pivoted_qr", "GreedyResult", "rb_greedy",
         "rb_greedy_stepwise", "rb_greedy_streamed", "StreamedGreedyResult",
         "rb_randomized_streamed", "RandomizedSketchResult",
+        "estimate_rank", "RankEstimate",
+        "batch_rb_greedy", "BatchGreedyResult",
         "imgs_orthogonalize", "optimal_rrqr", "reconstruction", "eim_nodes",
         "empirical_interpolant", "roq_weights", "default_backend",
         "resolve_backend", "set_default_backend",
@@ -119,4 +126,5 @@ def test_repro_data_exports_stable():
         "ArrayProvider", "FaultPlan", "FaultyProvider", "MemmapProvider",
         "WaveformProvider", "as_provider", "create_snapshot_npy",
         "materialize_source", "write_snapshot_npy",
+        "BandSplit", "band_split",
     ])

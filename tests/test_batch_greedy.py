@@ -1,0 +1,327 @@
+"""Batched many-basis greedy (PR 9): B lockstep builds in one fused pass.
+
+The headline contract: in the STACKED layout every lane of
+``batch_rb_greedy`` is BITWISE identical — Q, R, pivots, errs, rnorms,
+ortho pass counts, rank, stop code — to a scalar :func:`rb_greedy` run on
+that lane's matrix, across {f32, c64} x {xla, xla_ref}, including lanes
+that converge at different ranks and keep riding frozen through the
+lockstep loop.  The SHARED layout (one S, B tau/basis states) trades
+bitwise for pivot-for-pivot parity: its fused sweep reads S once for all
+lanes through stacked-plane GEMMs whose float summation order is GEMM-
+not GEMV-shaped (the same documented drift as the blocked driver).
+
+Also here: the band-split workload helper, the front-door ``"batched"``
+strategy (spec validation, auto delegation, ReducedBasisSet artifact
+save/load/register, workdir finalize+resume).
+"""
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_smooth_matrix
+from repro.core.batch_greedy import batch_rb_greedy
+from repro.core.greedy import STOP_RANK, STOP_TAU, rb_greedy
+
+BACKENDS = ("xla", "xla_ref")
+DTYPES = (np.float32, np.complex64)
+
+_BITWISE_FIELDS = ("Q", "R", "pivots", "errs", "rnorms", "n_ortho_passes")
+
+
+def _noisy(dtype, N=96, M=160, rank=12, seed=0, noise=0.01):
+    r = np.random.default_rng(seed)
+    X = r.standard_normal((N, rank)) @ r.standard_normal((rank, M))
+    X = X + noise * r.standard_normal((N, M))
+    if np.issubdtype(dtype, np.complexfloating):
+        X = X + 1j * (r.standard_normal((N, rank))
+                      @ r.standard_normal((rank, M)))
+    return jnp.asarray(X.astype(dtype))
+
+
+def _assert_lane_bitwise(lane, ref, ctx):
+    assert int(lane.k) == int(ref.k), (ctx, int(lane.k), int(ref.k))
+    assert lane.stop == ref.stop, (ctx, lane.stop, ref.stop)
+    for name in _BITWISE_FIELDS:
+        a, b = np.asarray(getattr(lane, name)), np.asarray(getattr(ref, name))
+        assert np.array_equal(a, b), (
+            ctx, name,
+            float(np.max(np.abs(a - b))) if a.dtype.kind in "fc" else "int")
+
+
+# ------------------------------------------------ stacked bitwise parity ----
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_stacked_lanes_bitwise_vs_scalar_driver(dtype, backend):
+    """Acceptance: per-basis results of the lockstep driver are BITWISE
+    the scalar driver's, lane by lane, on distinct same-shape matrices."""
+    Ss = [_noisy(dtype, seed=s) for s in (1, 2, 3)]
+    taus = [1e-4, 1e-3, 1e-5]
+    res = batch_rb_greedy(jnp.stack(Ss), taus, max_k=40, backend=backend,
+                          chunk=7)
+    assert res.batch == 3
+    for b, (S, tau) in enumerate(zip(Ss, taus)):
+        ref = rb_greedy(S, tau, max_k=40, backend=backend, chunk=7)
+        _assert_lane_bitwise(res.lane(b), ref,
+                             (np.dtype(dtype).name, backend, b))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_masked_convergence_lanes_stop_at_different_ranks(dtype, backend):
+    """Lanes hitting their stop at different k freeze in place (masked out
+    of the sweep) while the rest keep building — and every lane's frozen
+    tail still matches its scalar run bitwise.  Exact low-rank lanes force
+    well-separated STOP_RANK points."""
+    ranks = (5, 12, 8)
+    Ss = [_noisy(dtype, rank=r, seed=10 + r, noise=0.0) for r in ranks]
+    res = batch_rb_greedy(jnp.stack(Ss), 1e-8, max_k=30, backend=backend,
+                          chunk=6)
+    ks = [int(k) for k in res.k]
+    assert len(set(ks)) == len(ks), f"ranks did not separate: {ks}"
+    for b, S in enumerate(Ss):
+        ref = rb_greedy(S, 1e-8, max_k=30, backend=backend, chunk=6)
+        assert int(ref.stop) in (STOP_RANK, STOP_TAU)
+        _assert_lane_bitwise(res.lane(b), ref,
+                             (np.dtype(dtype).name, backend, b))
+
+
+def test_list_of_sources_equals_stacked():
+    Ss = [_noisy(np.float32, seed=s) for s in (4, 5)]
+    a = batch_rb_greedy(Ss, 1e-4, max_k=20)
+    b = batch_rb_greedy(jnp.stack(Ss), 1e-4, max_k=20)
+    for lane in range(2):
+        assert np.array_equal(np.asarray(a.Q[lane]), np.asarray(b.Q[lane]))
+
+
+# ------------------------------------------------ shared-S fused layout ----
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_shared_tau_sweep_pivot_parity(dtype):
+    """Shared layout: one S swept by B independent basis states (a tau
+    sweep).  The fused stacked-plane GEMM sweep is pivot-for-pivot the
+    scalar driver (ranks and pivot sequences exact; errs agree to sweep
+    float drift)."""
+    S = jnp.asarray(make_smooth_matrix(160, 120, dtype))
+    taus = [1e-2, 1e-3, 1e-4, 1e-5]
+    res = batch_rb_greedy(S, taus, max_k=60, backend="xla", chunk=7)
+    assert res.batch == 4
+    ks = [int(k) for k in res.k]
+    assert ks == sorted(ks)  # tighter tau never needs fewer bases
+    for b, tau in enumerate(taus):
+        ref = rb_greedy(S, tau, max_k=60, backend="xla", chunk=7)
+        lane = res.lane(b)
+        k = int(lane.k)
+        assert k == int(ref.k), (b, k, int(ref.k))
+        assert lane.stop == ref.stop
+        assert np.array_equal(np.asarray(lane.pivots)[:k],
+                              np.asarray(ref.pivots)[:k]), b
+        # errs near the tau floor are cancellation-degenerate (relative
+        # comparison meaningless there); pivots + rank above pin the
+        # semantics exactly, so compare to the family's scale
+        np.testing.assert_allclose(
+            np.asarray(lane.errs)[:k], np.asarray(ref.errs)[:k],
+            rtol=1e-2, atol=1e-3 * float(ref.errs[0]))
+
+
+def test_shared_layout_batch_inference():
+    S = _noisy(np.float32, seed=7)
+    # length-B tau implies B; batch= with scalar tau broadcasts it; a
+    # bare scalar tau on a shared source is a 1-lane build
+    assert batch_rb_greedy(S, [1e-3, 1e-4], max_k=10).batch == 2
+    assert batch_rb_greedy(S, 1e-3, max_k=10, batch=3).batch == 3
+    assert batch_rb_greedy(S, 1e-3, max_k=10).batch == 1
+    with pytest.raises(ValueError, match="tau"):
+        batch_rb_greedy(S, [1e-3, 1e-4, 1e-5], max_k=10, batch=2)
+
+
+def test_stacked_shape_validation():
+    with pytest.raises(ValueError, match="shape"):
+        batch_rb_greedy([_noisy(np.float32, N=32), _noisy(np.float32, N=48)],
+                        1e-4)
+
+
+# ------------------------------------------------------- band splitting ----
+
+
+def test_band_split_layout_and_edges():
+    from repro.data import band_split
+
+    S = np.asarray(make_smooth_matrix(128, 40, np.float64))
+    split = band_split(S, 4)
+    n_freq = 128 // 2 + 1  # one-sided rFFT bins
+    h = n_freq // 4
+    assert split.batch == 4
+    assert split.from_real and split.n_freq == n_freq
+    assert split.stack.shape == (4, h, 40)
+    assert split.edges == tuple((b * h, (b + 1) * h) for b in range(4))
+    # band rows are literally the FFT rows they claim to be
+    F = np.fft.rfft(S, axis=0)
+    for b, (lo, hi) in enumerate(split.edges):
+        np.testing.assert_allclose(np.asarray(split.stack[b]), F[lo:hi],
+                                   rtol=1e-6, atol=1e-9)
+    # complex input: full (two-sided) FFT
+    split_c = band_split(S.astype(np.complex128), 4)
+    assert not split_c.from_real and split_c.n_freq == 128
+
+    with pytest.raises(ValueError, match="bands"):
+        band_split(S, 0)
+    with pytest.raises(ValueError, match="empty"):
+        band_split(S, 4096)
+    with pytest.raises(ValueError, match="2-D"):
+        band_split(np.zeros((4, 4, 4)), 2)
+
+
+def test_band_split_feeds_batched_build():
+    from repro.api import build_basis
+    from repro.data import band_split
+
+    split = band_split(make_smooth_matrix(96, 48, np.float64)
+                       .astype(np.float32), 3)
+    bset = build_basis(source=split, tau=1e-3, max_k=20)
+    assert bset.batch == 3
+    meta = bset.provenance["bands"]
+    assert meta["from_real"] is True
+    assert [tuple(e) for e in meta["edges"]] == list(split.edges)
+    # each child reduces ITS band bitwise like a scalar build on it
+    for b in range(3):
+        ref = rb_greedy(split.stack[b], 1e-3, max_k=20)
+        k = bset[b].k
+        assert k == int(ref.k)
+        assert np.array_equal(np.asarray(bset[b].Q),
+                              np.asarray(ref.Q[:, :k]))
+
+
+# ------------------------------------------------------------ front door ----
+
+
+def test_spec_batched_validation():
+    from repro.api import ReductionSpec
+
+    with pytest.raises(ValueError, match="batch"):
+        ReductionSpec(source="x", strategy="batched", batch=0)
+    with pytest.raises(ValueError, match="batch"):
+        ReductionSpec(source="x", strategy="greedy", batch=2)
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        ReductionSpec(source="x", strategy="batched", checkpoint_dir="c")
+    # batch rides along with auto (it implies the batched strategy)
+    ReductionSpec(source="x", strategy="auto", batch=2)
+
+
+def test_auto_delegates_batched_workloads(caplog):
+    import logging
+
+    from repro.api import ReducedBasisSet, build_basis
+
+    stack = jnp.stack([_noisy(np.float32, seed=s) for s in (1, 2)])
+    with caplog.at_level(logging.INFO, logger="repro.api"):
+        bset = build_basis(source=stack, tau=1e-3, max_k=15)
+    assert isinstance(bset, ReducedBasisSet)
+    assert any("'batched'" in r.getMessage() for r in caplog.records)
+    assert bset.provenance["requested_strategy"] == "auto"
+    assert bset.provenance["strategy"] == "batched"
+
+
+def test_front_door_lane_provenance_and_parity():
+    from repro.api import build_basis
+
+    Ss = [_noisy(np.complex64, seed=s) for s in (1, 2)]
+    taus = [1e-4, 1e-3]
+    bset = build_basis(source=Ss, strategy="batched", tau=taus, max_k=25,
+                       chunk=6)
+    assert bset.provenance["layout"] == "stacked"
+    assert bset.provenance["tau"] == taus
+    for b, (S, tau) in enumerate(zip(Ss, taus)):
+        ref = rb_greedy(S, tau, max_k=25, chunk=6)
+        child = bset[b]
+        k = child.k
+        assert k == int(ref.k)
+        assert np.array_equal(np.asarray(child.Q), np.asarray(ref.Q[:, :k]))
+        assert np.array_equal(np.asarray(child.R), np.asarray(ref.R[:k]))
+        assert np.array_equal(child.pivots, np.asarray(ref.pivots[:k]))
+        lane = child.provenance["lane"]
+        assert lane["index"] == b and lane["tau"] == tau
+        assert "stop" in lane
+
+
+def test_set_save_load_register_roundtrip(tmp_path):
+    from repro.api import ReducedBasisSet, build_basis_set
+    from repro.serving.router import BasisRouter
+
+    bset = build_basis_set(
+        source=[_noisy(np.complex64, seed=s) for s in (3, 4)],
+        strategy="batched", tau=1e-3, max_k=20)
+    d = str(tmp_path / "set")
+    bset.save(d)
+    assert os.path.exists(os.path.join(d, "set.json"))
+    loaded = ReducedBasisSet.load(d)
+    assert loaded.batch == 2
+    for b in range(2):
+        assert loaded[b].k == bset[b].k
+        assert np.array_equal(np.asarray(loaded[b].Q),
+                              np.asarray(bset[b].Q))
+        # children are full artifacts: EIM machinery intact after reload
+        nodes, _ = loaded[b].eim()
+        assert len(nodes) == loaded[b].k
+    router = BasisRouter()
+    ids = loaded.register(router, prefix="lane")
+    assert ids == ["lane_0", "lane_1"]
+    basis, eim = router.get("lane_1")
+    assert basis.k == loaded[1].k
+
+    with pytest.raises(FileNotFoundError, match="set"):
+        ReducedBasisSet.load(str(tmp_path / "nope"))
+
+
+def test_workdir_finalize_and_resume(tmp_path):
+    from repro.api import build_basis
+
+    wd = str(tmp_path / "wd")
+    stack = jnp.stack([_noisy(np.float32, seed=s) for s in (5, 6)])
+    built = build_basis(source=stack, strategy="batched", tau=1e-3,
+                        max_k=15, workdir=wd)
+    assert os.path.exists(os.path.join(wd, "set.json"))
+    resumed = build_basis(source=stack, strategy="batched", tau=1e-3,
+                          max_k=15, workdir=wd, resume=True)
+    for b in range(2):
+        assert np.array_equal(np.asarray(resumed[b].Q),
+                              np.asarray(built[b].Q))
+
+
+def test_callback_reports_lockstep_progress():
+    seen = []
+    batch_rb_greedy(jnp.stack([_noisy(np.float32, seed=s) for s in (1, 2)]),
+                    1e-4, max_k=12, chunk=5,
+                    callback=lambda info: seen.append(info))
+    assert seen  # fired at least once per chunk boundary
+
+
+def test_floor_stop_lane_matches_scalar_driver():
+    """A lane whose refresh lands on the incompressible noise floor must
+    latch STOP_FLOOR exactly like the scalar driver (regression: the
+    lockstep driver referenced the stop code without importing it, so
+    this path raised NameError instead of stopping)."""
+    from repro.core.greedy import STOP_FLOOR
+
+    # the test_fault_matrix floor-regime recipe: smooth modes cliffing
+    # onto a ~2e-6 noise floor, tau below it, aggressive refresh cadence
+    rng = np.random.default_rng(7)
+    U, _ = np.linalg.qr(rng.standard_normal((200, 50)))
+    V, _ = np.linalg.qr(rng.standard_normal((160, 50)))
+    sv = np.logspace(0, -4, 50)
+    S = ((U * sv) @ V.T
+         + 1.45e-7 * rng.standard_normal((200, 160))).astype(np.float32)
+
+    ref = rb_greedy(S, 1e-7, refresh_safety=2e6, backend="xla")
+    assert int(ref.stop) == STOP_FLOOR
+
+    res = batch_rb_greedy(np.stack([S, S]), 1e-7, refresh_safety=2e6,
+                          backend="xla")
+    assert list(res.stops) == [STOP_FLOOR, STOP_FLOOR]
+    for b in range(2):
+        _assert_lane_bitwise(res.lane(b), ref, ctx=f"floor lane {b}")

@@ -390,28 +390,105 @@ def test_front_door_randomized_workdir_resume(tmp_path):
 def test_auto_picks_randomized_when_sketch_passes_win():
     """Roof-bound sweep + a rank target whose greedy pass count exceeds
     2x the sketch's -> "auto" resolves to the one-pass range-finder; with
-    no max_k (unbounded sketch width) it must NOT."""
+    no max_k (unbounded sketch width) and on-device probing disabled
+    (the conftest's REPRO_ROOFLINE_MEASURE=0 also gates off sketch-based
+    rank estimation) it must NOT."""
     from repro.api import ReductionSpec
     from repro.api.build import _auto_strategy
 
     roofs = dict(bandwidth_gbps=10.0, peak_gflops=1e4, cache_bytes=1)
     spec = ReductionSpec(source="unused", strategy="auto", max_k=64,
                          **roofs)
-    choice, block_p = _auto_strategy(spec, (4096, 16384), jnp.float32)
+    choice, block_p, _k = _auto_strategy(spec, (4096, 16384), jnp.float32)
     assert choice == "randomized"
     assert block_p == 1  # blocking is a greedy knob; not forced on
     # no rank target: the sketch width is unbounded -> stay greedy
     spec_nok = ReductionSpec(source="unused", strategy="auto", **roofs)
-    choice, _ = _auto_strategy(spec_nok, (4096, 16384), jnp.float32)
+    choice, _, _k = _auto_strategy(spec_nok, (4096, 16384), jnp.float32)
     assert choice == "block_greedy"
     # rank target small enough that blocked greedy passes <= 2x sketch:
     # blocking wins
     spec_small = ReductionSpec(source="unused", strategy="auto", max_k=16,
                                **roofs)
-    choice, _ = _auto_strategy(spec_small, (4096, 16384), jnp.float32)
+    choice, _, _k = _auto_strategy(spec_small, (4096, 16384), jnp.float32)
     assert choice == "block_greedy"
     # deeper power iteration raises the sketch's pass bill: cutover moves
     spec_pow = ReductionSpec(source="unused", strategy="auto", max_k=64,
                              sketch_power=2, **roofs)
-    choice, _ = _auto_strategy(spec_pow, (4096, 16384), jnp.float32)
+    choice, _, _k = _auto_strategy(spec_pow, (4096, 16384), jnp.float32)
     assert choice == "block_greedy"
+
+
+# ------------------------------------------------ rank estimation (PR 9) ----
+
+
+def test_estimate_rank_finds_numerical_rank():
+    """A rank-r family with a noise floor below tau estimates ~r from a
+    sketch far narrower than min(N, M), in one streamed pass."""
+    from repro.core.randomized import estimate_rank
+
+    r_ = np.random.default_rng(3)
+    L = r_.standard_normal((256, 20)) @ r_.standard_normal((20, 400))
+    L = L / np.abs(L).max()
+    est = estimate_rank(jnp.asarray(L.astype(np.float32)), tau=1e-5)
+    assert not est.saturated
+    assert est.ell == 32 and est.passes == 1
+    assert 18 <= est.k <= 22, est
+
+
+def test_estimate_rank_doubles_until_unsaturated():
+    """A rank past the initial width saturates the first sketch; the
+    doubling loop widens until the spectrum tail appears."""
+    from repro.core.randomized import estimate_rank
+
+    r_ = np.random.default_rng(4)
+    L = r_.standard_normal((256, 48)) @ r_.standard_normal((48, 400))
+    L = L / np.abs(L).max()
+    est = estimate_rank(jnp.asarray(L.astype(np.float32)), tau=1e-5,
+                        ell0=16)
+    assert not est.saturated
+    assert est.ell == 64  # 16 -> 32 -> 64 before the tail showed
+    assert est.passes == 3
+    assert 44 <= est.k <= 52, est
+
+
+def test_estimate_rank_reports_saturation_at_cap():
+    from repro.core.randomized import estimate_rank
+
+    r_ = np.random.default_rng(5)
+    full = r_.standard_normal((64, 96)).astype(np.float32)  # full-rank
+    est = estimate_rank(jnp.asarray(full), tau=1e-9, ell0=8, max_ell=16)
+    assert est.saturated
+    assert est.ell == 16 and est.k == 16
+
+
+def test_auto_rank_estimation_enables_randomized_cutover(monkeypatch,
+                                                         caplog):
+    """The PR-7 follow-on: with no max_k, roof-bound, and probing enabled
+    (REPRO_ROOFLINE_MEASURE=1), "auto" sketch-estimates a rank, caps
+    max_k with headroom, and the pass-count comparison can now pick the
+    range-finder; under the CI determinism knob (=0) the estimate never
+    runs and the decision table is unchanged."""
+    import logging
+
+    from repro.api import ReductionSpec
+    from repro.api.build import _auto_strategy
+
+    r_ = np.random.default_rng(6)
+    L = r_.standard_normal((256, 20)) @ r_.standard_normal((20, 512))
+    S = jnp.asarray((L / np.abs(L).max()).astype(np.float32))
+    roofs = dict(bandwidth_gbps=10.0, peak_gflops=1e4, cache_bytes=1)
+    spec = ReductionSpec(source=S, strategy="auto", tau=1e-5, **roofs)
+
+    monkeypatch.setenv("REPRO_ROOFLINE_MEASURE", "1")
+    with caplog.at_level(logging.INFO, logger="repro.api"):
+        choice, _, max_k = _auto_strategy(spec, S.shape, S.dtype)
+    assert choice == "randomized"
+    assert max_k is not None and max_k >= 20  # estimate + headroom
+    assert any("sketch-estimated" in rec.getMessage()
+               for rec in caplog.records)
+
+    monkeypatch.setenv("REPRO_ROOFLINE_MEASURE", "0")
+    choice, _, max_k = _auto_strategy(spec, S.shape, S.dtype)
+    assert choice == "block_greedy"  # deterministic leg: no probing
+    assert max_k is None
