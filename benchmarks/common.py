@@ -54,16 +54,28 @@ def records() -> list[dict]:
     return list(_RECORDS)
 
 
-def write_bench_json(path: str) -> int:
+def write_bench_json(path: str, merge: bool = False) -> int:
     """Dump the registry as {name: us_per_call, _derived: {...}} JSON —
     the machine-readable perf-trajectory format tracked across PRs.
-    Returns the number of rows written."""
+    Returns the number of rows written.
+
+    ``merge=True`` folds this run's rows into an existing file instead of
+    replacing it — how multiple harnesses (e.g. serving_load + the chaos
+    harness) share one BENCH_serving.json without clobbering each other's
+    rows.  Same-named rows are overwritten by the newer run.
+    """
     import json
+    import os
 
     rows = records()
-    payload = {r["name"]: r["us_per_call"] for r in rows}
-    payload["_derived"] = {r["name"]: r["derived"] for r in rows
-                           if r["derived"]}
+    payload, derived = {}, {}
+    if merge and os.path.exists(path):
+        with open(path) as f:
+            payload = json.load(f)
+        derived = payload.pop("_derived", {})
+    payload.update({r["name"]: r["us_per_call"] for r in rows})
+    derived.update({r["name"]: r["derived"] for r in rows if r["derived"]})
+    payload["_derived"] = derived
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
     return len(rows)

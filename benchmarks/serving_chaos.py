@@ -1,0 +1,428 @@
+"""ROQ serving chaos harness: graceful degradation under injected faults.
+
+Where ``serving_load.py`` measures the engine at its best, this harness
+measures it at its worst — five scenarios, each an injected failure mode
+with a hard invariant gate (the run FAILS if the engine hangs a future,
+serves a wrong bit, or degrades silently):
+
+  serving_chaos_overload       — offered load far past capacity (slow
+                                 batches via REPRO_FAULT_SERVE_SLOW_BATCH,
+                                 tight queue, mixed deadlines): every
+                                 submit resolves exactly one way (bitwise
+                                 result / QueueFullError / ShedError /
+                                 TimeoutError), counters sum to the
+                                 offered load, degraded mode engages.
+  serving_chaos_worker_kill    — REPRO_FAULT_SERVE_KILL_WORKER mid-
+                                 traffic: the dying batch fails with
+                                 EngineUnhealthyError (never hangs),
+                                 supervision restarts the worker, and the
+                                 row records time-to-recovery.
+  serving_chaos_breaker        — one basis made unloadable
+                                 (REPRO_FAULT_SERVE_RAISE_AT_LOAD): its
+                                 breaker opens after the threshold and
+                                 fast-fails, the healthy basis keeps
+                                 serving bitwise, and once the fault
+                                 clears a half-open probe closes the
+                                 breaker.
+  serving_chaos_hot_reload     — ``refresh()`` swaps a rebuilt artifact
+                                 mid-traffic: generation bumps, ZERO
+                                 in-flight failures, every response
+                                 bitwise vs the generation it was served
+                                 under.
+  serving_chaos_corrupt_reload — the reload candidate is corrupt
+                                 (REPRO_FAULT_SERVE_CORRUPT_RELOAD):
+                                 refresh rejects it, the live basis keeps
+                                 serving untouched.
+
+Run standalone to MERGE rows into ``BENCH_serving.json`` (env override
+``REPRO_SERVING_BENCH_JSON``); a full per-scenario metrics snapshot goes
+to ``REPRO_SERVING_SNAPSHOT_JSON`` (default
+``serving_chaos_metrics.json``, a CI artifact — not committed).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+from benchmarks.common import emit
+
+N = int(os.environ.get("REPRO_CHAOS_N", 512))
+M = int(os.environ.get("REPRO_CHAOS_M", 128))
+MAX_K = int(os.environ.get("REPRO_CHAOS_MAX_K", 8))
+OFFERED = int(os.environ.get("REPRO_CHAOS_OFFERED", 400))
+SLOW_MS = float(os.environ.get("REPRO_CHAOS_SLOW_MS", 3.0))
+
+WAIT_S = 30.0
+_SNAPSHOTS: dict[str, dict] = {}
+
+
+def _gate(ok: bool, msg: str) -> None:
+    if not ok:
+        raise RuntimeError(f"chaos invariant violated: {msg}")
+
+
+def _smooth(n, m, dtype, phase=0.0):
+    x = np.linspace(0.0, 1.0, n)[:, None]
+    nu = np.linspace(0.5, 2.0, m)[None, :]
+    S = np.sin(2 * np.pi * nu * x + phase) * np.exp(-nu * x)
+    if np.issubdtype(dtype, np.complexfloating):
+        S = S * np.exp(1j * nu * x)
+    return S.astype(dtype)
+
+
+def _build(root: str, name: str, phase=0.0, dtype=np.float32) -> str:
+    from repro.api import build_basis
+
+    basis = build_basis(source=_smooth(N, M, dtype, phase=phase),
+                        strategy="greedy", tau=1e-12, max_k=MAX_K)
+    d = os.path.join(root, name)
+    basis.save(d)
+    return d
+
+
+def _reqs(basis, n, seed=0):
+    rng = np.random.default_rng(seed)
+    dtype = np.asarray(basis.Q).dtype
+    f = rng.standard_normal((basis.k, n))
+    if np.issubdtype(dtype, np.complexfloating):
+        f = f + 1j * rng.standard_normal((basis.k, n))
+    return f.astype(dtype)
+
+
+def _wait_until(cond, timeout=WAIT_S, step=0.002):
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < timeout:
+        if cond():
+            return True
+        time.sleep(step)
+    return False
+
+
+class _env:
+    """Scoped env injection: faults never leak into the next scenario."""
+
+    def __init__(self, **kv):
+        self.kv = kv
+
+    def __enter__(self):
+        self.old = {k: os.environ.get(k) for k in self.kv}
+        for k, v in self.kv.items():
+            os.environ[k] = str(v)
+
+    def __exit__(self, *exc):
+        for k, v in self.old.items():
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
+
+
+# ------------------------------------------------------------- scenarios ----
+
+def scenario_overload(dirs) -> None:
+    from repro.serving import (
+        QueueFullError, ROQEngine, ShedError, direct_interpolate)
+
+    with _env(REPRO_FAULT_SERVE_SLOW_BATCH=SLOW_MS):
+        eng = ROQEngine({"a": dirs["a"]}, max_batch=4, max_wait_ms=1.0,
+                        queue_depth=16, degrade_queue_frac=0.5)
+        basis, eim = eng.router.get("a")
+        pool = _reqs(basis, 64, seed=1)
+        rng = np.random.default_rng(2)
+        shed = queue_full = 0
+        accepted = []
+        t0 = time.perf_counter()
+        for i in range(OFFERED):
+            if i % 8 == 0:
+                time.sleep(0.004)   # offered ~2x capacity, not infinity:
+                # the worker gets cycles, the EWMA warms, and the
+                # backlog-based paths (shed, degraded mode) can engage
+                # instead of queue-full absorbing everything
+            col = i % pool.shape[1]
+            timeout = None if rng.random() < 0.5 else \
+                float(rng.choice([0.002, 0.05, 10.0]))
+            try:
+                fut = eng.submit("a", pool[:, col], timeout_s=timeout)
+            except ShedError:
+                shed += 1
+            except QueueFullError:
+                queue_full += 1
+            else:
+                accepted.append((fut, col))
+        eng.close(drain=True)
+        wall = time.perf_counter() - t0
+
+    served = timed_out = mismatches = 0
+    for fut, col in accepted:
+        err = fut.exception(timeout=WAIT_S)
+        if err is None:
+            served += 1
+            if not np.array_equal(fut.result(),
+                                  direct_interpolate(eim, pool[:, col])):
+                mismatches += 1
+        elif isinstance(err, TimeoutError):
+            timed_out += 1
+        else:
+            _gate(False, f"unexpected overload resolution: {err!r}")
+
+    c = eng.stats()["counters"]
+    _SNAPSHOTS["overload"] = eng.stats()
+    _gate(served + timed_out + shed + queue_full == OFFERED,
+          "overload submits did not all resolve exactly once")
+    _gate(mismatches == 0, f"{mismatches} wrong-bit responses under load")
+    _gate(c["submitted"] == c["completed"] + c["timeouts"] + c["errors"],
+          "metrics counters do not sum to accepted load")
+    _gate(shed + queue_full > 0, "no explicit rejections under 25x load")
+    emit("serving_chaos_overload", wall / OFFERED * 1e6,
+         derived=(f"offered={OFFERED},served={served},shed={shed},"
+                  f"queue_full={queue_full},timeouts={timed_out},"
+                  f"mismatches=0,degraded_entered="
+                  f"{c['degraded_entered']},resolved=100%"))
+
+
+def scenario_worker_kill(dirs) -> None:
+    from repro.serving import (
+        EngineUnhealthyError, RestartPolicy, ROQEngine, direct_interpolate)
+
+    with _env(REPRO_FAULT_SERVE_KILL_WORKER=5):
+        eng = ROQEngine({"a": dirs["a"]}, max_batch=2, max_wait_ms=0.5,
+                        restart=RestartPolicy(backoff_base_s=0.01))
+        basis, eim = eng.router.get("a")
+        pool = _reqs(basis, 32, seed=3)
+        futs = []
+        died_at = recovered_at = None
+        for i in range(40):
+            fut = None
+            try:
+                fut = eng.submit("a", pool[:, i % 32])
+            except EngineUnhealthyError:
+                died_at = died_at or time.perf_counter()
+            if fut is not None:
+                futs.append((fut, i % 32))
+            if not eng.healthy():
+                died_at = died_at or time.perf_counter()
+            elif died_at is not None and recovered_at is None:
+                recovered_at = time.perf_counter()
+            time.sleep(0.002)
+        _gate(_wait_until(eng.healthy), "worker never restarted")
+        if recovered_at is None:
+            recovered_at = time.perf_counter()
+        # post-recovery request must serve bitwise
+        f = pool[:, 0]
+        out = eng.submit("a", f).result(timeout=WAIT_S)
+        _gate(np.array_equal(out, direct_interpolate(eim, f)),
+              "post-recovery response is not bitwise")
+        eng.close(drain=True)
+
+    failed = served = 0
+    for fut, col in futs:
+        err = fut.exception(timeout=WAIT_S)
+        if err is None:
+            served += 1
+            _gate(np.array_equal(
+                fut.result(), direct_interpolate(eim, pool[:, col])),
+                "wrong-bit response around a worker death")
+        else:
+            _gate(isinstance(err, EngineUnhealthyError),
+                  f"stranded/unexpected future after kill: {err!r}")
+            failed += 1
+    c = eng.stats()["counters"]
+    _SNAPSHOTS["worker_kill"] = eng.stats()
+    _gate(c["worker_deaths"] == 1 and c["worker_restarts"] == 1,
+          f"expected 1 death + 1 restart, got {c['worker_deaths']}/"
+          f"{c['worker_restarts']}")
+    recovery_ms = ((recovered_at - died_at) * 1e3
+                   if died_at is not None else 0.0)
+    emit("serving_chaos_worker_kill", recovery_ms * 1e3,
+         derived=(f"killed_batch=5,inflight_failed={failed},"
+                  f"served={served},recovery_ms={recovery_ms:.1f},"
+                  f"restarts={c['worker_restarts']},"
+                  f"post_recovery_bitwise=ok"))
+
+
+def scenario_breaker(dirs) -> None:
+    from repro.serving import CircuitOpenError, ROQEngine, direct_interpolate
+
+    eng = ROQEngine({"good": dirs["a"], "bad": dirs["b"]}, max_batch=4,
+                    max_wait_ms=0.5, breaker_threshold=3,
+                    breaker_cooldown_s=0.2)
+    basis, eim = eng.router.get("good")
+    pool = _reqs(basis, 16, seed=4)
+    bad_shape = np.zeros(1, dtype=np.float32)  # shape checked at flush
+
+    with _env(REPRO_FAULT_SERVE_RAISE_AT_LOAD="bad"):
+        # drive consecutive failed batches into the unloadable basis
+        # (each submit waits its future, so each is its own batch)
+        load_failures = 0
+        for _ in range(3):
+            fut = eng.submit("bad", bad_shape)
+            err = fut.exception(timeout=WAIT_S)
+            _gate(isinstance(err, IOError), f"expected load fault: {err!r}")
+            load_failures += 1
+        _gate(eng.breakers.state("bad") == "open",
+              "breaker did not open after threshold consecutive failures")
+        fastfail_t0 = time.perf_counter()
+        rejected = 0
+        try:
+            eng.submit("bad", bad_shape)
+        except CircuitOpenError:
+            rejected += 1
+        fastfail_us = (time.perf_counter() - fastfail_t0) * 1e6
+        _gate(rejected == 1, "open breaker did not fast-fail")
+        # the healthy basis is untouched by its neighbor's storm
+        f = pool[:, 0]
+        out = eng.submit("good", f).result(timeout=WAIT_S)
+        _gate(np.array_equal(out, direct_interpolate(eim, f)),
+              "healthy basis disturbed by a neighboring breaker storm")
+
+    time.sleep(0.25)   # cooldown; fault env cleared -> probe can load
+    fut = eng.submit("bad", _reqs_for(eng, "bad"))
+    _gate(fut.exception(timeout=WAIT_S) is None,
+          "half-open probe failed after the fault cleared")
+    _gate(eng.breakers.state("bad") == "closed",
+          "served probe did not close the breaker")
+    eng.close(drain=True)
+    c = eng.stats()["counters"]
+    _SNAPSHOTS["breaker"] = eng.stats()
+    _gate(c["breaker_opened"] >= 1 and c["breaker_half_open"] >= 1
+          and c["breaker_closed"] >= 1, "breaker transition counters off")
+    emit("serving_chaos_breaker", fastfail_us,
+         derived=(f"load_failures={load_failures},opened="
+                  f"{c['breaker_opened']},rejected={c['breaker_rejected']},"
+                  f"half_open={c['breaker_half_open']},closed="
+                  f"{c['breaker_closed']},good_basis_bitwise=ok"))
+
+
+def _reqs_for(eng, bid):
+    basis, _ = eng.router.get(bid)
+    return _reqs(basis, 1, seed=9)[:, 0]
+
+
+def scenario_hot_reload(dirs) -> None:
+    from repro.api import build_basis
+    from repro.serving import ROQEngine, direct_interpolate
+
+    d = dirs["hot"]
+    eng = ROQEngine({"hot": d}, max_batch=4, max_wait_ms=0.5)
+    basis1, eim1 = eng.router.get("hot")
+    pool = _reqs(basis1, 32, seed=6)
+    # rebuild from a shifted source: same k (fixed max_k, tiny tau), new B
+    b2 = build_basis(source=_smooth(N, M, np.float32, phase=0.4),
+                     strategy="greedy", tau=1e-12, max_k=MAX_K)
+    _gate(b2.k == basis1.k, "rebuild changed k; scenario needs same shape")
+    futs = []
+    for i in range(30):
+        futs.append((eng.submit("hot", pool[:, i % 32]), i % 32))
+        if i == 10:
+            b2.save(d)   # new artifact step lands on disk...
+            t0 = time.perf_counter()
+            gen = eng.refresh("hot")   # ...and swaps in mid-traffic
+            refresh_us = (time.perf_counter() - t0) * 1e6
+            _gate(gen == 1, f"expected generation 1, got {gen}")
+        time.sleep(0.001)
+    eng.close(drain=True)
+    _, eim2 = eng.router.get("hot")
+
+    failures = old_gen = new_gen = 0
+    for fut, col in futs:
+        err = fut.exception(timeout=WAIT_S)
+        if err is not None:
+            failures += 1
+            continue
+        out = fut.result()
+        if np.array_equal(out, direct_interpolate(eim1, pool[:, col])):
+            old_gen += 1
+        elif np.array_equal(out, direct_interpolate(eim2, pool[:, col])):
+            new_gen += 1
+        else:
+            _gate(False, "response matches NEITHER generation bitwise")
+    _SNAPSHOTS["hot_reload"] = eng.stats()
+    c = eng.stats()["counters"]
+    _gate(failures == 0, f"{failures} in-flight requests failed across "
+          f"a refresh (must be zero)")
+    _gate(old_gen > 0 and new_gen > 0,
+          "traffic did not straddle the generation swap")
+    _gate(c["reloads"] == 1, "reload not counted")
+    emit("serving_chaos_hot_reload", refresh_us,
+         derived=(f"generation=1,old_gen_responses={old_gen},"
+                  f"new_gen_responses={new_gen},inflight_failures=0,"
+                  f"mismatches=0"))
+
+
+def scenario_corrupt_reload(dirs) -> None:
+    from repro.serving import ROQEngine, direct_interpolate
+
+    eng = ROQEngine({"a": dirs["a"]}, max_batch=4, max_wait_ms=0.5)
+    basis, eim = eng.router.get("a")
+    pool = _reqs(basis, 8, seed=7)
+    with _env(REPRO_FAULT_SERVE_CORRUPT_RELOAD=1):
+        t0 = time.perf_counter()
+        rejected = False
+        try:
+            eng.refresh("a")
+        except IOError:
+            rejected = True
+        reject_us = (time.perf_counter() - t0) * 1e6
+    _gate(rejected, "corrupt reload candidate was accepted")
+    served = 0
+    for i in range(8):   # live basis keeps serving, untouched
+        out = eng.submit("a", pool[:, i]).result(timeout=WAIT_S)
+        _gate(np.array_equal(out, direct_interpolate(eim, pool[:, i])),
+              "live basis disturbed by a rejected reload")
+        served += 1
+    eng.close(drain=True)
+    c = eng.stats()["counters"]
+    _SNAPSHOTS["corrupt_reload"] = eng.stats()
+    _gate(c["reload_failures"] == 1 and c["reloads"] == 0,
+          "corrupt-reload counters off")
+    _gate(eng.stats()["router"]["generations"] == {},
+          "generation bumped despite a rejected candidate")
+    emit("serving_chaos_corrupt_reload", reject_us,
+         derived=(f"reload_failures=1,reloads=0,served_after={served},"
+                  f"live_basis_bitwise=ok"))
+
+
+def run(csv: bool = False) -> None:
+    del csv
+    import tempfile
+
+    for k in ("REPRO_FAULT_ONCE", "REPRO_FAULT_SERVE_KILL_WORKER",
+              "REPRO_FAULT_SERVE_SLOW_BATCH",
+              "REPRO_FAULT_SERVE_RAISE_AT_LOAD",
+              "REPRO_FAULT_SERVE_CORRUPT_RELOAD"):
+        os.environ.pop(k, None)
+    with tempfile.TemporaryDirectory() as td:
+        dirs = {"a": _build(td, "a"), "b": _build(td, "b", phase=0.2),
+                "hot": _build(td, "hot")}
+        scenario_overload(dirs)
+        scenario_worker_kill(dirs)
+        scenario_breaker(dirs)
+        scenario_hot_reload(dirs)
+        scenario_corrupt_reload(dirs)
+
+
+def main() -> None:
+    from benchmarks.common import write_bench_json
+
+    print("name,us_per_call,derived")
+    run(csv=True)
+    out = os.environ.get("REPRO_SERVING_BENCH_JSON", "BENCH_serving.json")
+    n_rows = write_bench_json(out, merge=True)
+    print(f"# merged {n_rows} chaos rows into {out}")
+    snap_path = os.environ.get("REPRO_SERVING_SNAPSHOT_JSON",
+                               "serving_chaos_metrics.json")
+    with open(snap_path, "w") as f:
+        json.dump(_SNAPSHOTS, f, indent=1, sort_keys=True, default=str)
+    print(f"# wrote per-scenario metrics snapshots to {snap_path}")
+
+
+if __name__ == "__main__":
+    main()

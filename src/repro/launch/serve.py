@@ -77,17 +77,33 @@ def _request_pool(basis, eim, pool: int, seed: int):
 def serve_basis(basis_dirs, *, max_batch: int = 64,
                 max_wait_ms: float = 2.0, requests: int | None = None,
                 duration: float | None = None, queue_depth: int = 4096,
-                timeout_s: float | None = None, seed: int = 0):
+                timeout_s: float | None = None, seed: int = 0,
+                client_rate: float | None = None,
+                client_burst: float | None = None,
+                degrade_queue_frac: float = 0.75,
+                degrade_p95_ms: float | None = None,
+                breaker_threshold: int = 5,
+                breaker_cooldown_s: float = 5.0,
+                max_restarts: int = 3):
     """Serve synthetic ROQ traffic over the given artifacts; returns the
     final engine stats dict (plus ``max_err`` / ``served`` keys)."""
-    from repro.serving import QueueFullError, ROQEngine
+    from repro.serving import (
+        CircuitOpenError, QueueFullError, QuotaExceededError, RestartPolicy,
+        ROQEngine, ShedError)
 
     if isinstance(basis_dirs, (str, os.PathLike)):
         basis_dirs = [basis_dirs]
     ids = _basis_ids(basis_dirs)
     engine = ROQEngine({bid: d for bid, d in zip(ids, basis_dirs)},
                        max_batch=max_batch, max_wait_ms=max_wait_ms,
-                       queue_depth=queue_depth, timeout_s=timeout_s)
+                       queue_depth=queue_depth, timeout_s=timeout_s,
+                       client_rate=client_rate, client_burst=client_burst,
+                       degrade_queue_frac=degrade_queue_frac,
+                       degrade_p95_ms=degrade_p95_ms,
+                       breaker_threshold=breaker_threshold,
+                       breaker_cooldown_s=breaker_cooldown_s,
+                       restart=RestartPolicy(enabled=max_restarts > 0,
+                                             max_restarts=max_restarts))
     pools = {}
     for bid in ids:
         basis, eim = engine.router.get(bid)
@@ -106,7 +122,7 @@ def serve_basis(basis_dirs, *, max_batch: int = 64,
         requests = 16 * max_batch
 
     futures = []   # (future, bid, pool column)
-    rejected = 0
+    rejected = shed = quota = breaker = 0
     t0 = time.perf_counter()
     i = 0
     while True:
@@ -119,10 +135,20 @@ def serve_basis(basis_dirs, *, max_batch: int = 64,
         at_nodes, _ = pools[bid]
         col = i % at_nodes.shape[1]
         try:
-            futures.append((engine.submit(bid, at_nodes[:, col]), bid, col))
+            futures.append((engine.submit(bid, at_nodes[:, col],
+                                          client_id="launcher"), bid, col))
         except QueueFullError:
             rejected += 1
             time.sleep(1e-4)  # brief backoff, then keep offering load
+        except ShedError:
+            shed += 1
+            time.sleep(1e-4)
+        except QuotaExceededError:
+            quota += 1
+            time.sleep(1e-3)  # wait for the token bucket to refill
+        except CircuitOpenError:
+            breaker += 1
+            time.sleep(1e-3)
         i += 1
     engine.close(drain=True)
     wall = time.perf_counter() - t0
@@ -136,10 +162,14 @@ def serve_basis(basis_dirs, *, max_batch: int = 64,
     stats["max_err"] = max_err
     stats["served"] = len(futures)
     stats["submit_rejected"] = rejected
+    stats["submit_shed"] = shed
+    stats["submit_quota_rejected"] = quota
+    stats["submit_breaker_rejected"] = breaker
     lat = stats["latency_ms"] or {}
     print(f"served {len(futures)} requests over {len(ids)} bases in "
           f"{wall:.3f}s ({len(futures) / max(wall, 1e-9):.0f} req/s "
-          f"end-to-end; {rejected} backpressure rejects)")
+          f"end-to-end; {rejected} backpressure, {shed} shed, "
+          f"{quota} quota, {breaker} breaker rejects)")
     if lat:
         print(f"  latency p50={lat['p50']:.3f}ms p95={lat['p95']:.3f}ms "
               f"p99={lat['p99']:.3f}ms (n={lat['n']})")
@@ -147,6 +177,11 @@ def serve_basis(basis_dirs, *, max_batch: int = 64,
           f"occupancy={stats['batch_occupancy_mean']:.2f} "
           f"cache_hit_rate={stats['cache_hit_rate']:.2f} "
           f"(misses={stats['counters']['cache_misses']})")
+    c = stats["counters"]
+    print(f"  health: worker_deaths={c['worker_deaths']} "
+          f"restarts={c['worker_restarts']} "
+          f"degraded_entered={c['degraded_entered']} "
+          f"breaker_opened={c['breaker_opened']} reloads={c['reloads']}")
     print(f"  max interpolation error {max_err:.2e}")
     return stats
 
@@ -178,6 +213,25 @@ def main(argv=None):
     ap.add_argument("--queue-depth", type=int, default=4096)
     ap.add_argument("--timeout-s", type=float, default=None,
                     help="per-request deadline")
+    # overload hardening (PR 10)
+    ap.add_argument("--client-rate", type=float, default=None,
+                    help="per-client admission quota (req/s; default: "
+                         "quotas off)")
+    ap.add_argument("--client-burst", type=float, default=None,
+                    help="quota bucket capacity (default 2*rate)")
+    ap.add_argument("--degrade-queue-frac", type=float, default=0.75,
+                    help="backlog fraction of queue-depth past which "
+                         "admission enters degraded mode")
+    ap.add_argument("--degrade-p95-ms", type=float, default=None,
+                    help="p95 latency watermark for degraded mode")
+    ap.add_argument("--breaker-threshold", type=int, default=5,
+                    help="consecutive batch failures that open a "
+                         "basis's circuit breaker")
+    ap.add_argument("--breaker-cooldown-s", type=float, default=5.0,
+                    help="open-breaker cooldown before a half-open probe")
+    ap.add_argument("--max-restarts", type=int, default=3,
+                    help="supervised worker restarts per 60s window "
+                         "(0 disables: a dead worker latches unhealthy)")
     args = ap.parse_args(argv)
 
     if args.basis:
@@ -185,7 +239,13 @@ def main(argv=None):
             args.basis, max_batch=args.max_batch,
             max_wait_ms=args.max_wait_ms, requests=args.requests,
             duration=args.duration, queue_depth=args.queue_depth,
-            timeout_s=args.timeout_s)
+            timeout_s=args.timeout_s,
+            client_rate=args.client_rate, client_burst=args.client_burst,
+            degrade_queue_frac=args.degrade_queue_frac,
+            degrade_p95_ms=args.degrade_p95_ms,
+            breaker_threshold=args.breaker_threshold,
+            breaker_cooldown_s=args.breaker_cooldown_s,
+            max_restarts=args.max_restarts)
     if not args.arch:
         ap.error("--arch is required unless --basis is given")
 

@@ -1,4 +1,18 @@
+from repro.serving.admission import (
+    AdmissionController,
+    CircuitBreakerBoard,
+    CircuitOpenError,
+    QuotaExceededError,
+    ShedError,
+    TokenBucket,
+)
 from repro.serving.engine import ServeEngine
+from repro.serving.health import (
+    EngineUnhealthyError,
+    HealthState,
+    RestartPolicy,
+    RestartTracker,
+)
 from repro.serving.metrics import ServingMetrics
 from repro.serving.roq import (
     EngineClosedError,
@@ -18,6 +32,16 @@ __all__ = [
     "InterpolantCache",
     "QueueFullError",
     "EngineClosedError",
+    "EngineUnhealthyError",
+    "ShedError",
+    "QuotaExceededError",
+    "CircuitOpenError",
+    "AdmissionController",
+    "CircuitBreakerBoard",
+    "TokenBucket",
+    "HealthState",
+    "RestartPolicy",
+    "RestartTracker",
     "batch_bucket",
     "direct_interpolate",
 ]

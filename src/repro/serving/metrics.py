@@ -36,6 +36,22 @@ COUNTERS = (
     "cache_misses",     # entry built (jit trace / device commit) on demand
     "basis_loads",      # router loaded an artifact from disk
     "basis_evictions",  # router dropped an LRU basis under memory pressure
+    # --- admission control (PR 10) ---
+    "shed",             # deadline-aware shed: hopeless request rejected
+    "quota_rejected",   # per-client token bucket empty at submit time
+    "degraded_entered",  # admission tightened (watermark crossed)
+    "degraded_exited",   # admission relaxed (pressure cleared)
+    # --- per-basis circuit breakers ---
+    "breaker_rejected",   # request fast-failed on an open breaker
+    "breaker_opened",     # CLOSED/HALF_OPEN -> OPEN transitions
+    "breaker_half_open",  # OPEN -> HALF_OPEN probe transitions
+    "breaker_closed",     # HALF_OPEN -> CLOSED (probe served)
+    # --- engine supervision ---
+    "worker_deaths",    # exception escaped the batching loop
+    "worker_restarts",  # supervision brought the worker back
+    # --- hot artifact reload ---
+    "reloads",          # router generation swaps (refresh succeeded)
+    "reload_failures",  # refresh found a corrupt/unloadable candidate
 )
 
 
@@ -46,6 +62,7 @@ class ServingMetrics:
         self._latency_s = collections.deque(maxlen=window)
         self._occupancy = collections.deque(maxlen=window)
         self._queue_depth = 0
+        self._gauges: dict[str, float] = {}
         self._started = time.perf_counter()
 
     # ------------------------------------------------------------ events ----
@@ -67,6 +84,21 @@ class ServingMetrics:
         with self._lock:
             self._queue_depth = int(depth)
 
+    def set_gauge(self, name: str, value: float) -> None:
+        """Free-form gauges (``degraded``, breaker states, ...) — rolled
+        into the snapshot under ``gauges``."""
+        with self._lock:
+            self._gauges[name] = value
+
+    def recent_p95_ms(self) -> float | None:
+        """p95 over the recent-latency window (ms) — the degraded-mode
+        watermark input; None before the first completion."""
+        with self._lock:
+            lat = list(self._latency_s)
+        if not lat:
+            return None
+        return percentiles(lat, (95.0,))[95.0] * 1e3
+
     # ---------------------------------------------------------- snapshot ----
     def snapshot(self) -> dict:
         """Point-in-time rollup (JSON-serializable).
@@ -82,10 +114,12 @@ class ServingMetrics:
             lat = list(self._latency_s)
             occ = list(self._occupancy)
             depth = self._queue_depth
+            gauges = dict(self._gauges)
             elapsed = time.perf_counter() - self._started
         snap = {
             "counters": counts,
             "queue_depth": depth,
+            "gauges": gauges,
             "latency_ms": None,
             "batch_occupancy_mean": (sum(occ) / len(occ)) if occ else None,
             "cache_hit_rate": None,

@@ -17,6 +17,15 @@ working set:
   engine can drop their warm interpolant-cache entries too.  A later
   ``get`` reloads from the artifact directory — bit-identical arrays, by
   the artifact round-trip guarantee.
+- ``refresh(basis_id)`` hot-swaps a refreshed on-disk artifact (e.g. an
+  ``enrich()``-ed basis, or a per-region rebuild) into live traffic: the
+  candidate's NEWEST artifact step is CRC-verified first, then the
+  routed entry is replaced under the lock with a bumped **generation**
+  counter and ``on_refresh(basis_id, old_gen, new_gen)`` fires so the
+  engine retires the old generation's warm interpolant-cache entries.
+  In-flight batches that already resolved the old entry finish on the
+  old generation (their arrays are immutable); a corrupt candidate
+  raises and leaves the live basis untouched.
 """
 
 from __future__ import annotations
@@ -37,6 +46,7 @@ class _Entry(NamedTuple):
     eim: object            # EIMResult (nodes, B)
     nbytes: int            # device working-set estimate
     evictable: bool        # directory-backed (reloadable) vs pinned
+    generation: int = 0    # bumped by refresh(); keys warm-cache entries
 
 
 def _entry_bytes(basis, eim) -> int:
@@ -51,6 +61,7 @@ def _entry_bytes(basis, eim) -> int:
 class BasisRouter:
     def __init__(self, memory_budget_bytes: Optional[int] = None,
                  on_evict: Optional[Callable[[str], None]] = None,
+                 on_refresh: Optional[Callable[[str, int, int], None]] = None,
                  metrics=None):
         if memory_budget_bytes is None:
             from repro.api.build import device_memory_budget
@@ -58,10 +69,12 @@ class BasisRouter:
             memory_budget_bytes = device_memory_budget()
         self.memory_budget_bytes = int(memory_budget_bytes)
         self._on_evict = on_evict
+        self._on_refresh = on_refresh
         self._metrics = metrics
         self._sources: dict[str, object] = {}   # id -> dir | ReducedBasis
         self._live: collections.OrderedDict[str, _Entry] = \
             collections.OrderedDict()           # LRU: oldest first
+        self._generations: dict[str, int] = {}  # survives eviction
         self._lock = threading.RLock()
 
     # ---------------------------------------------------------- registry ----
@@ -107,6 +120,12 @@ class BasisRouter:
         """Resident ``(basis, eim)`` for ``basis_id`` (loads, LRU-bumps,
         and evicts colder bases as needed).  KeyError on unknown ids —
         the engine turns that into a per-request failure."""
+        entry = self.get_entry(basis_id)
+        return entry.basis, entry.eim
+
+    def get_entry(self, basis_id: str) -> _Entry:
+        """Like :meth:`get` but returns the full routed entry, including
+        the reload ``generation`` the engine keys warm-cache entries on."""
         with self._lock:
             if basis_id not in self._sources:
                 raise KeyError(f"unknown basis_id {basis_id!r}; "
@@ -118,11 +137,28 @@ class BasisRouter:
                 self._shrink_to_budget(keep=basis_id)
             else:
                 self._live.move_to_end(basis_id)
-            return entry.basis, entry.eim
+            return entry
+
+    @staticmethod
+    def _maybe_inject_load_fault(basis_id: str) -> None:
+        """PR-6-convention chaos hook: ``REPRO_FAULT_SERVE_RAISE_AT_LOAD=
+        <basis_id|any>`` makes the router's artifact load fail (at most
+        once under ``REPRO_FAULT_ONCE``) — the consecutive-batch-failure
+        signal the per-basis circuit breaker trips on."""
+        at = os.environ.get("REPRO_FAULT_SERVE_RAISE_AT_LOAD")
+        if not at or at not in ("any", basis_id):
+            return
+        from repro.checkpoint.io import _fault_once
+
+        if _fault_once(f"serve_raise_at_load.{basis_id}"):
+            raise IOError(
+                f"injected router load fault for {basis_id!r} "
+                f"(REPRO_FAULT_SERVE_RAISE_AT_LOAD)")
 
     def _load(self, basis_id: str) -> _Entry:
         from repro.api import ReducedBasis
 
+        self._maybe_inject_load_fault(basis_id)
         source = self._sources[basis_id]
         if isinstance(source, str):
             basis = ReducedBasis.load(source)
@@ -134,13 +170,105 @@ class BasisRouter:
         eim = basis.eim()   # instant when the artifact carried the leaves
         if self._metrics is not None:
             self._metrics.count("basis_loads")
-        entry = _Entry(basis, eim, _entry_bytes(basis, eim), evictable)
+        entry = _Entry(basis, eim, _entry_bytes(basis, eim), evictable,
+                       self._generations.get(basis_id, 0))
         logger.info(
-            "router loaded %r: k=%d N=%d dtype=%s eim=%s (%.1f MiB)",
+            "router loaded %r: k=%d N=%d dtype=%s eim=%s gen=%d (%.1f MiB)",
             basis_id, basis.k, basis.N, basis.Q.dtype,
             "persisted" if persisted else "computed",
-            entry.nbytes / 2**20)
+            entry.generation, entry.nbytes / 2**20)
         return entry
+
+    # ------------------------------------------------------- hot reload ----
+    def verify_artifact(self, directory: str) -> int:
+        """CRC-verify the NEWEST artifact step in ``directory``; returns
+        the verified step number or raises ``IOError``/``KeyError``.
+
+        Unlike :meth:`ReducedBasis.load` — which *skips* damaged steps
+        and falls back to older intact ones (right for startup, wrong for
+        a refresh: silently re-serving the stale artifact would report a
+        successful swap that swapped nothing) — this checks exactly the
+        candidate a refresh is about to go live with.
+        """
+        from repro.checkpoint.io import list_steps, load_checkpoint_raw
+
+        if os.environ.get("REPRO_FAULT_SERVE_CORRUPT_RELOAD"):
+            from repro.checkpoint.io import _fault_once
+
+            if _fault_once("serve_corrupt_reload"):
+                raise IOError(
+                    "injected corrupt reload candidate "
+                    "(REPRO_FAULT_SERVE_CORRUPT_RELOAD)")
+        steps = list_steps(directory)
+        if not steps:
+            raise IOError(f"no artifact steps in {directory}")
+        newest = steps[-1]
+        tree = load_checkpoint_raw(directory, step=newest)  # raises on CRC
+        if "artifact_version" not in tree:
+            raise KeyError(
+                f"newest step {newest} in {directory} is not a "
+                f"ReducedBasis artifact")
+        return newest
+
+    def refresh(self, basis_id: str, source=None) -> int:
+        """Atomically swap ``basis_id``'s live entry for the artifact now
+        on disk; returns the new generation.
+
+        The candidate (``source`` directory if given, else the registered
+        one) is loaded and CRC-verified OUTSIDE the lock — a corrupt or
+        unreadable candidate raises (counted as ``reload_failures``) and
+        the live basis keeps serving untouched.  On success the entry is
+        replaced under the lock with generation ``old+1`` and
+        ``on_refresh(basis_id, old_gen, new_gen)`` fires, so the engine
+        retires the old generation's warm interpolant-cache entries;
+        batches already holding the old entry finish on the old
+        generation.  Works on non-resident ids too (the bumped generation
+        just applies to the next load).
+        """
+        from repro.api import ReducedBasis
+
+        with self._lock:
+            if basis_id not in self._sources:
+                raise KeyError(f"unknown basis_id {basis_id!r}")
+            registered = self._sources[basis_id]
+            directory = os.fspath(source) if source is not None \
+                else registered
+        if not isinstance(directory, str):
+            raise ValueError(
+                f"refresh({basis_id!r}) needs an artifact directory; the "
+                f"basis is registered in-memory (pinned) — pass source=")
+        try:
+            self.verify_artifact(directory)
+            basis = ReducedBasis.load(directory)
+            eim = basis.eim()
+        except Exception:
+            if self._metrics is not None:
+                self._metrics.count("reload_failures")
+            logger.exception(
+                "refresh(%r) rejected candidate in %s; live basis "
+                "untouched", basis_id, directory)
+            raise
+        with self._lock:
+            old_gen = self._generations.get(basis_id, 0)
+            if basis_id in self._live:
+                old_gen = self._live[basis_id].generation
+            new_gen = old_gen + 1
+            self._generations[basis_id] = new_gen
+            self._sources[basis_id] = directory
+            entry = _Entry(basis, eim, _entry_bytes(basis, eim), True,
+                           new_gen)
+            was_live = basis_id in self._live
+            self._live[basis_id] = entry   # keeps / takes LRU slot
+            if was_live:
+                self._live.move_to_end(basis_id)
+            self._shrink_to_budget(keep=basis_id)
+        if self._metrics is not None:
+            self._metrics.count("reloads")
+        logger.info("refresh(%r): generation %d -> %d (k=%d, %s)",
+                    basis_id, old_gen, new_gen, basis.k, directory)
+        if self._on_refresh is not None:
+            self._on_refresh(basis_id, old_gen, new_gen)
+        return new_gen
 
     def _shrink_to_budget(self, keep: str) -> None:
         """Evict LRU evictable entries (never ``keep``) while over budget.
@@ -175,4 +303,5 @@ class BasisRouter:
                 "resident_bytes": sum(e.nbytes
                                       for e in self._live.values()),
                 "memory_budget_bytes": self.memory_budget_bytes,
+                "generations": dict(self._generations),
             }

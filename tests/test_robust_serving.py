@@ -1,0 +1,466 @@
+"""Overload-hardening tests for the serving engine (PR 10).
+
+Covers the failure modes PR 8 had no story for: silent worker death
+(futures stranded forever), the close()/submit enqueue race, deadlines
+ignored while waiting, plus the new admission pipeline (per-client
+quotas, deadline-aware shedding, degraded mode), per-basis circuit
+breakers, supervised worker restarts, and generation-counted hot
+artifact reload.  The invariant everything here defends: every submit
+resolves EXACTLY one way — bitwise-correct result, or one distinct
+explicit error — and never hangs.
+"""
+
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import ReducedBasis, build_basis
+from repro.serving import (
+    AdmissionController,
+    CircuitBreakerBoard,
+    CircuitOpenError,
+    EngineClosedError,
+    EngineUnhealthyError,
+    QueueFullError,
+    QuotaExceededError,
+    RestartPolicy,
+    RestartTracker,
+    ROQEngine,
+    ShedError,
+    direct_interpolate,
+)
+from tests.conftest import make_smooth_matrix
+
+WAIT_S = 10.0
+
+
+def _requests(basis, n, seed=0):
+    rng = np.random.default_rng(seed)
+    dtype = np.asarray(basis.Q).dtype
+    f = rng.standard_normal((basis.k, n))
+    if np.issubdtype(dtype, np.complexfloating):
+        f = f + 1j * rng.standard_normal((basis.k, n))
+    return f.astype(dtype)
+
+
+@pytest.fixture(scope="module")
+def artifact(tmp_path_factory):
+    root = tmp_path_factory.mktemp("robust_bases")
+    basis = build_basis(source=make_smooth_matrix(96, 50, np.float32),
+                        strategy="greedy", tau=1e-5, max_k=6)
+    d = str(root / "a")
+    basis.save(d)
+    return d
+
+
+def _wait_until(cond, timeout=WAIT_S, step=0.005):
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < timeout:
+        if cond():
+            return True
+        time.sleep(step)
+    return False
+
+
+# ----------------------------------------------------- worker death ----
+
+def test_worker_death_fails_futures_and_restarts(artifact, monkeypatch):
+    """Regression for PR 8's silent failure mode: a fault injected into
+    the BATCHING loop (outside per-batch isolation) must fail every
+    in-flight future with EngineUnhealthyError — never strand them — and
+    the supervised worker must come back and serve again."""
+    monkeypatch.setenv("REPRO_FAULT_SERVE_KILL_WORKER", "1")
+    with ROQEngine({"a": artifact}, max_batch=8, max_wait_ms=1.0,
+                   restart=RestartPolicy(backoff_base_s=0.01)) as eng:
+        basis, eim = eng.router.get("a")
+        F = _requests(basis, 3)
+        futs = [eng.submit("a", F[:, j]) for j in range(3)]
+        for fut in futs:   # the killed batch: failed, not hung
+            with pytest.raises(EngineUnhealthyError):
+                fut.result(timeout=WAIT_S)
+        assert _wait_until(eng.healthy)   # supervision restarted it
+        f = _requests(basis, 1, seed=7)[:, 0]
+        out = eng.submit("a", f).result(timeout=WAIT_S)
+        assert np.array_equal(out, direct_interpolate(eim, f))
+    snap = eng.stats()
+    assert snap["counters"]["worker_deaths"] == 1
+    assert snap["counters"]["worker_restarts"] == 1
+    trans = snap["health"]["transitions"]
+    assert [t["healthy"] for t in trans] == [True, False, True]
+
+
+def test_worker_death_without_restart_latches_unhealthy(
+        artifact, monkeypatch):
+    monkeypatch.setenv("REPRO_FAULT_SERVE_KILL_WORKER", "1")
+    eng = ROQEngine({"a": artifact}, max_batch=8, max_wait_ms=1.0,
+                    restart=RestartPolicy(enabled=False))
+    basis, _ = eng.router.get("a")
+    fut = eng.submit("a", _requests(basis, 1)[:, 0])
+    with pytest.raises(EngineUnhealthyError):
+        fut.result(timeout=WAIT_S)
+    assert _wait_until(lambda: not eng.healthy())
+    with pytest.raises(EngineUnhealthyError):   # intake refused while down
+        eng.submit("a", _requests(basis, 1)[:, 0])
+    snap = eng.stats()
+    assert snap["counters"]["worker_deaths"] == 1
+    assert snap["counters"]["worker_restarts"] == 0
+    assert snap["healthy"] is False
+    eng.close()
+
+
+def test_restart_tracker_window_and_backoff():
+    p = RestartPolicy(max_restarts=2, window_s=10.0,
+                      backoff_base_s=0.5, backoff_cap_s=4.0)
+    tr = RestartTracker(p)
+    assert tr.next_delay(now=100.0) == 0.5          # 2**0
+    assert tr.next_delay(now=100.1) == 1.0          # 2**1
+    assert tr.next_delay(now=100.2) is None         # budget exhausted
+    assert tr.next_delay(now=111.0) == 0.5          # window slid
+    assert RestartTracker(RestartPolicy(enabled=False)).next_delay() is None
+
+
+# ----------------------------------------------------- close()/submit race ----
+
+def test_submit_racing_close_never_strands_future(artifact):
+    """A request enqueued between submit's intake check and close()'s
+    final drain must still resolve (with EngineClosedError), not hang."""
+    eng = ROQEngine({"a": artifact}, start=False)
+    basis = ReducedBasis.load(artifact)
+    orig_put = eng._queue.put_nowait
+
+    def racing_put(req):   # close() wins the race right after the enqueue
+        orig_put(req)
+        eng._closed = True
+
+    eng._queue.put_nowait = racing_put
+    fut = eng.submit("a", _requests(basis, 1)[:, 0])
+    assert fut.done()
+    with pytest.raises(EngineClosedError):
+        fut.result(timeout=0)
+    eng._queue.put_nowait = orig_put
+    eng.close(drain=False)
+
+
+def test_close_drains_queue_left_by_dead_worker(artifact, monkeypatch):
+    """Even with the worker down and restarts disabled, close() fails
+    whatever is still queued — exactly-once resolution, no strands."""
+    monkeypatch.setenv("REPRO_FAULT_SERVE_KILL_WORKER", "1")
+    eng = ROQEngine({"a": artifact}, max_batch=8, max_wait_ms=1.0,
+                    restart=RestartPolicy(enabled=False))
+    basis, _ = eng.router.get("a")
+    fut = eng.submit("a", _requests(basis, 1)[:, 0])
+    with pytest.raises(EngineUnhealthyError):
+        fut.result(timeout=WAIT_S)
+    assert _wait_until(lambda: not eng._worker.is_alive())
+    # worker is gone; sneak a request past intake onto the dead queue
+    req = _mkreq(basis)
+    eng._queue.put_nowait(req)
+    stranded = req.future
+    eng.close()
+    assert stranded.done()
+    with pytest.raises(EngineClosedError):
+        stranded.result(timeout=0)
+
+
+def _mkreq(basis):
+    import concurrent.futures
+
+    from repro.serving.roq import _Request
+
+    return _Request(basis_id="a", f=_requests(basis, 1)[:, 0],
+                    future=concurrent.futures.Future(),
+                    t_submit=time.perf_counter(), deadline=None)
+
+
+# ------------------------------------------------- deadlines while waiting ----
+
+def test_deadline_enforced_while_waiting(artifact):
+    """timeout_s far below max_wait_ms gets a PROMPT TimeoutError — the
+    poll wakes for the earliest pending deadline instead of dozing until
+    the flush timer."""
+    with ROQEngine({"a": artifact}, max_batch=64,
+                   max_wait_ms=2000.0) as eng:
+        basis, _ = eng.router.get("a")
+        t0 = time.monotonic()
+        fut = eng.submit("a", _requests(basis, 1)[:, 0], timeout_s=0.05)
+        with pytest.raises(TimeoutError):
+            fut.result(timeout=WAIT_S)
+        elapsed = time.monotonic() - t0
+        assert elapsed < 1.0, f"deadline enforced lazily ({elapsed:.2f}s)"
+    assert eng.stats()["counters"]["timeouts"] == 1
+
+
+# ------------------------------------------------------------- admission ----
+
+def test_quota_token_bucket_per_client():
+    ctl = AdmissionController(client_rate=10.0, client_burst=2)
+    now = 1000.0
+    ctl.admit("alice", None, now)
+    ctl.admit("alice", None, now)
+    with pytest.raises(QuotaExceededError):
+        ctl.admit("alice", None, now)       # burst spent
+    ctl.admit("bob", None, now)             # other clients unaffected
+    ctl.admit("alice", None, now + 0.1)     # refilled one token (10/s)
+    with pytest.raises(QuotaExceededError):
+        ctl.admit("alice", None, now + 0.1)
+
+
+def test_quota_tightens_in_degraded_mode():
+    ctl = AdmissionController(client_rate=10.0, client_burst=1,
+                              degraded_factor=0.5)
+    now = 1000.0
+    ctl.admit("c", None, now)
+    assert ctl.set_degraded(True)
+    # refill is halved: 0.1s * 10/s * 0.5 = 0.5 tokens — not enough
+    with pytest.raises(QuotaExceededError):
+        ctl.admit("c", None, now + 0.1)
+    ctl.admit("c", None, now + 0.2)   # 1.0 tokens under the halved rate
+    assert ctl.set_degraded(False)
+    assert not ctl.set_degraded(False)   # idempotent
+
+
+def test_shed_hopeless_deadline():
+    ctl = AdmissionController(delay_estimator=lambda: 1.0)
+    now = 1000.0
+    with pytest.raises(ShedError):
+        ctl.admit(None, now + 0.1, now)    # 100ms budget vs 1s backlog
+    ctl.admit(None, now + 5.0, now)        # feasible deadline admitted
+    ctl.admit(None, None, now)             # no deadline: never shed
+    cold = AdmissionController(delay_estimator=lambda: 0.0)
+    cold.admit(None, now + 1e-9, now)      # no backlog estimate: admit
+
+
+def test_engine_sheds_under_measured_backlog(artifact):
+    eng = ROQEngine({"a": artifact}, max_batch=4, start=False)
+    basis, _ = eng.router.get("a")
+    eng._batch_ewma_s = 1.0     # pretend batches take 1s
+    for j in range(8):          # unserviced backlog: est = 8/4 * 1s = 2s
+        eng.submit("a", _requests(basis, 1)[:, 0])
+    with pytest.raises(ShedError):
+        eng.submit("a", _requests(basis, 1)[:, 0], timeout_s=0.01)
+    eng.submit("a", _requests(basis, 1)[:, 0], timeout_s=30.0)
+    snap = eng.stats()
+    assert snap["counters"]["shed"] == 1
+    assert snap["estimated_delay_ms"] > 0
+    eng.close(drain=False)
+
+
+def test_degraded_mode_watermarks_and_hysteresis(artifact):
+    eng = ROQEngine({"a": artifact}, max_batch=4, queue_depth=8,
+                    degrade_queue_frac=0.5, start=False)
+    basis, _ = eng.router.get("a")
+    for j in range(5):          # 5/8 = 62% > 50% watermark
+        eng.submit("a", _requests(basis, 1)[:, 0])
+    eng._update_pressure(time.perf_counter())
+    assert eng.admission.degraded
+    eng._fail_all_pending(EngineClosedError("test drain"))
+    eng._last_pressure_check = 0.0   # bypass the 20 Hz throttle
+    eng._update_pressure(time.perf_counter())   # 0/8 <= half watermark
+    assert not eng.admission.degraded
+    snap = eng.stats()
+    assert snap["counters"]["degraded_entered"] == 1
+    assert snap["counters"]["degraded_exited"] == 1
+    assert snap["gauges"]["degraded"] == 0
+    eng.close(drain=False)
+
+
+# ------------------------------------------------------ circuit breakers ----
+
+def test_breaker_lifecycle_unit():
+    bd = CircuitBreakerBoard(threshold=2, cooldown_s=5.0)
+    bd.allow("b", now=0.0)
+    bd.record_failure("b", now=0.0)
+    bd.allow("b", now=0.1)                     # under threshold: closed
+    bd.record_failure("b", now=0.2)            # 2nd consecutive -> OPEN
+    assert bd.state("b") == "open"
+    with pytest.raises(CircuitOpenError):
+        bd.allow("b", now=1.0)                 # inside cooldown
+    bd.allow("b", now=6.0)                     # cooldown over -> HALF_OPEN
+    assert bd.state("b") == "half_open"
+    bd.on_batch_start("b")                     # probe batch in flight
+    with pytest.raises(CircuitOpenError):
+        bd.allow("b", now=6.1)
+    bd.record_success("b")                     # probe served -> CLOSED
+    assert bd.state("b") == "closed"
+    bd.allow("b", now=6.2)
+    # a failed probe re-opens immediately (no threshold accumulation)
+    bd.record_failure("b", now=7.0)
+    bd.record_failure("b", now=7.1)
+    bd.allow("b", now=13.0)                    # half-open again
+    bd.record_failure("b", now=13.1)
+    assert bd.state("b") == "open"
+
+
+def test_engine_breaker_opens_and_recovers(artifact):
+    with ROQEngine({"a": artifact}, max_batch=4, max_wait_ms=0.5,
+                   breaker_threshold=2, breaker_cooldown_s=0.2) as eng:
+        basis, eim = eng.router.get("a")
+        real_evaluate = eng.cache.evaluate
+
+        def broken(*a, **k):
+            raise RuntimeError("injected basis meltdown")
+
+        eng.cache.evaluate = broken
+        for _ in range(2):   # two consecutive failed batches -> OPEN
+            fut = eng.submit("a", _requests(basis, 1)[:, 0])
+            with pytest.raises(RuntimeError, match="meltdown"):
+                fut.result(timeout=WAIT_S)
+        with pytest.raises(CircuitOpenError):   # fast-fail, no queueing
+            eng.submit("a", _requests(basis, 1)[:, 0])
+        eng.cache.evaluate = real_evaluate
+        time.sleep(0.3)      # past cooldown: next request is the probe
+        f = _requests(basis, 1, seed=3)[:, 0]
+        out = eng.submit("a", f).result(timeout=WAIT_S)
+        assert np.array_equal(out, direct_interpolate(eim, f))
+        assert eng.breakers.state("a") == "closed"
+    snap = eng.stats()
+    assert snap["counters"]["breaker_opened"] >= 1
+    assert snap["counters"]["breaker_rejected"] >= 1
+    assert snap["counters"]["breaker_half_open"] >= 1
+    assert snap["counters"]["breaker_closed"] >= 1
+
+
+# ------------------------------------------------------- hot artifact reload ----
+
+def test_refresh_swaps_generations_bitwise(tmp_path):
+    d = str(tmp_path / "hot")
+    b1 = build_basis(source=make_smooth_matrix(80, 40, np.float32),
+                     strategy="greedy", tau=1e-5, max_k=4)
+    b1.save(d)
+    with ROQEngine({"hot": d}, max_batch=4, max_wait_ms=0.5) as eng:
+        basis1, eim1 = eng.router.get("hot")
+        f1 = _requests(basis1, 1)[:, 0]
+        out1 = eng.submit("hot", f1).result(timeout=WAIT_S)
+        assert np.array_equal(out1, direct_interpolate(eim1, f1))
+        # rebuild offline (larger basis), save a NEW artifact step in place
+        b2 = build_basis(source=make_smooth_matrix(80, 40, np.float32),
+                         strategy="greedy", tau=1e-6, max_k=8)
+        b2.save(d)
+        gen = eng.refresh("hot")
+        assert gen == 1
+        basis2, eim2 = eng.router.get("hot")
+        assert basis2.k == b2.k
+        f2 = _requests(basis2, 1, seed=5)[:, 0]
+        out2 = eng.submit("hot", f2).result(timeout=WAIT_S)
+        assert np.array_equal(out2, direct_interpolate(eim2, f2))
+        # old generation's warm entries were retired, new gen is live
+        assert all(k[1] == 1 for k in eng.cache.warm_keys("hot"))
+    snap = eng.stats()
+    assert snap["counters"]["reloads"] == 1
+    assert snap["router"]["generations"] == {"hot": 1}
+
+
+def test_refresh_rejects_corrupt_candidate_keeps_serving(tmp_path):
+    d = str(tmp_path / "hot")
+    b1 = build_basis(source=make_smooth_matrix(64, 32, np.float32),
+                     strategy="greedy", tau=1e-5, max_k=4)
+    b1.save(d)
+    with ROQEngine({"hot": d}, max_batch=4, max_wait_ms=0.5) as eng:
+        basis, eim = eng.router.get("hot")
+        # a rebuild lands... and rots on disk before the swap
+        b2 = build_basis(source=make_smooth_matrix(64, 32, np.float32),
+                         strategy="greedy", tau=1e-6, max_k=6)
+        b2.save(d)
+        from repro.checkpoint.io import list_steps
+
+        step_dir = os.path.join(d, f"step_{list_steps(d)[-1]:08d}")
+        victim = next(p for p in sorted(os.listdir(step_dir))
+                      if p.endswith(".npy"))
+        path = os.path.join(step_dir, victim)
+        raw = bytearray(open(path, "rb").read())
+        raw[-1] ^= 0xFF
+        open(path, "wb").write(bytes(raw))
+        with pytest.raises((IOError, KeyError)):
+            eng.refresh("hot")
+        # live basis untouched: same generation, still serving bitwise
+        f = _requests(basis, 1, seed=2)[:, 0]
+        out = eng.submit("hot", f).result(timeout=WAIT_S)
+        assert np.array_equal(out, direct_interpolate(eim, f))
+    snap = eng.stats()
+    assert snap["counters"]["reload_failures"] == 1
+    assert snap["counters"]["reloads"] == 0
+    assert snap["router"]["generations"] == {}
+
+
+def test_refresh_injected_corruption_hook(artifact, monkeypatch):
+    monkeypatch.setenv("REPRO_FAULT_SERVE_CORRUPT_RELOAD", "1")
+    with ROQEngine({"a": artifact}, max_wait_ms=0.5) as eng:
+        with pytest.raises(IOError, match="injected corrupt reload"):
+            eng.refresh("a")
+    assert eng.stats()["counters"]["reload_failures"] == 1
+
+
+# ------------------------------------------------------- overload soak ----
+
+def test_overload_soak_every_submit_resolves_exactly_once(
+        artifact, monkeypatch):
+    """Sustained overload with slow batches, tight queue, quotas, and
+    mixed deadlines: every submit ends in EXACTLY one bucket — bitwise
+    result, QueueFullError, ShedError, QuotaExceededError, or
+    TimeoutError — and the metrics counters sum to the offered load."""
+    monkeypatch.setenv("REPRO_FAULT_SERVE_SLOW_BATCH", "3")   # 3ms/batch
+    eng = ROQEngine({"a": artifact}, max_batch=4, max_wait_ms=1.0,
+                    queue_depth=16, client_rate=400.0, client_burst=40.0)
+    basis, eim = eng.router.get("a")
+    n_threads, per_thread = 4, 60
+    lock = threading.Lock()
+    sync_rejects = {"queue_full": 0, "shed": 0, "quota": 0}
+    accepted = []   # (future, f_vector)
+
+    def client(tid):
+        rng = np.random.default_rng(tid)
+        for i in range(per_thread):
+            f = _requests(basis, 1, seed=tid * 1000 + i)[:, 0]
+            timeout = None if rng.random() < 0.5 else \
+                float(rng.choice([0.002, 0.05, 5.0]))
+            try:
+                fut = eng.submit("a", f, timeout_s=timeout,
+                                 client_id=f"client-{tid}")
+            except QueueFullError:
+                with lock:
+                    sync_rejects["queue_full"] += 1
+            except ShedError:
+                with lock:
+                    sync_rejects["shed"] += 1
+            except QuotaExceededError:
+                with lock:
+                    sync_rejects["quota"] += 1
+            else:
+                with lock:
+                    accepted.append((fut, f))
+
+    threads = [threading.Thread(target=client, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    eng.close(drain=True)   # serve/fail everything accepted
+
+    offered = n_threads * per_thread
+    served = timed_out = 0
+    for fut, f in accepted:
+        err = fut.exception(timeout=WAIT_S)   # never hangs
+        if err is None:
+            assert np.array_equal(fut.result(), direct_interpolate(eim, f))
+            served += 1
+        elif isinstance(err, TimeoutError):
+            timed_out += 1
+        else:
+            pytest.fail(f"unexpected resolution: {err!r}")
+    assert served + timed_out == len(accepted)
+    assert len(accepted) + sum(sync_rejects.values()) == offered
+
+    c = eng.stats()["counters"]
+    assert c["submitted"] == len(accepted)
+    assert c["completed"] == served
+    assert c["timeouts"] == timed_out
+    assert c["rejected"] == sync_rejects["queue_full"]
+    assert c["shed"] == sync_rejects["shed"]
+    assert c["quota_rejected"] == sync_rejects["quota"]
+    assert c["submitted"] == c["completed"] + c["timeouts"] + c["errors"]
+    assert c["errors"] == 0
+    assert c["worker_deaths"] == 0

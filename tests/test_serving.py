@@ -93,7 +93,7 @@ def test_cache_warm_after_first_bucket_and_evict():
     _, bucket, warm0 = cache.evaluate("x", basis.eim(), F)
     _, _, warm1 = cache.evaluate("x", basis.eim(), F)
     assert (warm0, warm1) == (False, True)
-    assert cache.warm_keys("x") == [("x", bucket, str(F.dtype))]
+    assert cache.warm_keys("x") == [("x", 0, bucket, str(F.dtype))]
     cache.evict("x")
     assert cache.warm_keys("x") == []
     _, _, warm2 = cache.evaluate("x", basis.eim(), F)
@@ -176,7 +176,7 @@ def test_engine_warm_prewarms_all_buckets(artifacts):
     with ROQEngine({"a": artifacts["f32_greedy"]}, max_batch=8,
                    max_wait_ms=0.5) as eng:
         eng.warm("a")
-        assert {k[1] for k in eng.cache.warm_keys("a")} == {2, 4, 8}
+        assert {k[2] for k in eng.cache.warm_keys("a")} == {2, 4, 8}
         basis, _ = eng.router.get("a")
         F = _requests(basis, 20)
         futs = [eng.submit("a", F[:, j]) for j in range(20)]
